@@ -1,0 +1,52 @@
+"""Fig 4 analogue — bandwidth vs message size (inject/bufcopy/zerocopy).
+
+Fixed lane count, sizes 16 B .. 1 MiB; reports MB/s through the runtime
+and which protocol carried each size (the protocol crossover points are
+the paper's §4.3 design made visible).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (CommConfig, LocalCluster, Protocol, post_am_x,
+                        select_protocol)
+from repro.configs.paper import PAPER
+
+
+def run(quick: bool = True) -> List[dict]:
+    cfg = CommConfig(inject_max_bytes=64, bufcopy_max_bytes=8 * 1024,
+                     packet_bytes=16 * 1024, packets_per_lane=64)
+    iters = max(PAPER.bw_iters // (5 if quick else 1), 5)
+    sizes = PAPER.bw_sizes[::2] if quick else PAPER.bw_sizes
+    rows = []
+    for size in sizes:
+        cl = LocalCluster(2, cfg, fabric_depth=1 << 14)
+        r0, r1 = cl[0], cl[1]
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        payload = np.random.default_rng(0).integers(
+            0, 255, size, dtype=np.uint8)
+        t0 = time.perf_counter()
+        delivered = 0
+        for _ in range(iters):
+            st = post_am_x(r0, 1, payload, None, None, rc)()
+            while st.is_retry():
+                cl.progress_all()
+                st = post_am_x(r0, 1, payload, None, None, rc)()
+            cl.quiesce()
+            while cq.pop().is_done():
+                delivered += 1
+        dt = time.perf_counter() - t0
+        assert delivered == iters
+        proto = select_protocol(size, cfg).value
+        mbps = size * iters / dt / 1e6
+        rows.append({
+            "bench": "bandwidth",
+            "case": f"size={size}B({proto})",
+            "us_per_call": dt / iters * 1e6,
+            "derived": f"{mbps:.1f} MB/s",
+        })
+    return rows

@@ -1,0 +1,37 @@
+"""Fig 6 analogue — k-mer counting strong scaling.
+
+Runs the HipMer-stage mini-app (repro.apps.kmer) over rank counts,
+verifies exactness against the oracle, and reports wall time + message
+statistics (aggregation flushes = the paper's 8 KB buffer behaviour).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.apps.kmer import generate_reads, reference_count, run_kmer_count
+from repro.configs.paper import PAPER
+
+
+def run(quick: bool = True) -> List[dict]:
+    n_reads = PAPER.kmer_reads // (4 if quick else 1)
+    reads = generate_reads(n_reads, PAPER.kmer_read_len, seed=3)
+    oracle = reference_count(reads, PAPER.kmer_k)
+    rows = []
+    ranks_list = (2, 4) if quick else PAPER.kmer_ranks
+    for n_ranks in ranks_list:
+        counts, stats = run_kmer_count(reads, PAPER.kmer_k, n_ranks,
+                                       agg_bytes=PAPER.kmer_agg_bytes)
+        # exactness: every k-mer with >= 2 occurrences counted exactly
+        # (Bloom false positives may add count-1 k-mers; never miss)
+        missing = sum(1 for k in oracle if counts.get(k, 0) != oracle[k])
+        assert missing == 0, f"kmer counts wrong for {missing} kmers"
+        kmers_total = sum(oracle.values())
+        rows.append({
+            "bench": "kmer",
+            "case": f"ranks={n_ranks}",
+            "us_per_call": stats.elapsed_s / max(kmers_total, 1) * 1e6,
+            "derived": (f"{stats.elapsed_s:.2f}s, "
+                        f"{stats.messages} msgs, "
+                        f"{stats.aggregation_flushes} flushes, exact"),
+        })
+    return rows

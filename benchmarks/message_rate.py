@@ -1,0 +1,72 @@
+"""Fig 2/3 analogue — message rate vs lane count, per resource mode.
+
+The paper's modes map to (DESIGN.md §2):
+  process-based  -> one lane, one device (per-"core" baseline, Fig 2)
+  thread/shared  -> N lanes sharing ONE device (Fig 3b/3d)
+  thread/dedicated -> N lanes, one device each (Fig 3a/3c)
+
+Metric: uni-directional 8-byte active messages per second through the
+full posting+progress path (pool -> fabric -> CQ delivery).  The paper's
+headline — dedicated devices scale with lanes while shared serializes —
+reproduces here structurally: shared mode funnels every message through
+one backlog/CQ/packet-lane set.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import CommConfig, LocalCluster, post_am_x
+from repro.configs.paper import PAPER
+
+
+def _run_lanes(n_lanes: int, dedicated: bool, iters: int) -> float:
+    cfg = CommConfig(inject_max_bytes=64, packets_per_lane=64,
+                     n_channels=n_lanes if dedicated else 1)
+    cl = LocalCluster(2, cfg, fabric_depth=1 << 16)
+    r0, r1 = cl[0], cl[1]
+    cq = r1.alloc_cq()
+    rc = r1.register_rcomp(cq)
+    if dedicated:
+        devs = [r0.alloc_device() for _ in range(n_lanes)]
+        rdevs = [r1.alloc_device() for _ in range(n_lanes)]
+    else:
+        devs = [r0.default_device] * n_lanes
+        rdevs = [r1.default_device] * n_lanes
+    payload = np.zeros(PAPER.msg_rate_size, np.uint8)
+
+    t0 = time.perf_counter()
+    sent = 0
+    for i in range(iters):
+        lane = i % n_lanes
+        st = post_am_x(r0, 1, payload, None, None, rc).device(devs[lane])()
+        sent += 1
+        if i % 64 == 63:                      # periodic progress (all-worker)
+            for d in rdevs[:1] if not dedicated else rdevs:
+                r1.progress(d)
+            while cq.pop().is_done():
+                pass
+    cl.quiesce()
+    while cq.pop().is_done():
+        pass
+    dt = time.perf_counter() - t0
+    return sent / dt
+
+
+def run(quick: bool = True) -> List[dict]:
+    iters = PAPER.msg_rate_iters // (4 if quick else 1)
+    rows = []
+    lanes = (1, 4, 16) if quick else PAPER.msg_rate_lanes
+    for n in lanes:
+        for dedicated in (False, True):
+            rate = _run_lanes(n, dedicated, iters)
+            rows.append({
+                "bench": "message_rate",
+                "case": f"lanes={n}/"
+                        f"{'dedicated' if dedicated else 'shared'}",
+                "us_per_call": 1e6 / rate,
+                "derived": f"{rate / 1e3:.1f} kmsg/s",
+            })
+    return rows

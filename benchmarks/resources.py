@@ -1,0 +1,110 @@
+"""Fig 5 analogue — throughput of the individual LCI resources.
+
+Paper: "All threads perform 100k of key resource methods that are used
+in the communication critical path (a pair of completion queue push/pop,
+matching engine inserts, or packet pool get/put)."  Host variants measure
+the Python data structures (relative scaling across lane counts); the
+functional (jit) variants measure the in-graph structures the jitted
+programs actually use.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import PAPER
+from repro.core import (CompletionQueue, HostMatchingEngine, HostPacketPool,
+                        MatchKind, done, encode_key, init_pool, init_ring,
+                        init_table, insert_batch, make_key, pool_get,
+                        pool_put, ring_pop, ring_push)
+
+
+def _host_cq(iters: int, lanes: int) -> float:
+    cqs = [CompletionQueue() for _ in range(lanes)]
+    t0 = time.perf_counter()
+    for i in range(iters):
+        cq = cqs[i % lanes]
+        cq.signal(done(i))
+        cq.pop()
+    return iters / (time.perf_counter() - t0)
+
+
+def _host_matching(iters: int, lanes: int) -> float:
+    mes = [HostMatchingEngine() for _ in range(lanes)]
+    t0 = time.perf_counter()
+    for i in range(iters):
+        me = mes[i % lanes]
+        kind = MatchKind.SEND if i % 2 else MatchKind.RECV
+        me.insert(make_key(i % 7, i % 13), kind, i)
+    return iters / (time.perf_counter() - t0)
+
+
+def _host_pool(iters: int, lanes: int) -> float:
+    pool = HostPacketPool(n_lanes=lanes, packets_per_lane=32)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        lane = i % lanes
+        pid, st = pool.get(lane)
+        if st.is_done():
+            pool.put(lane, pid)
+    return iters / (time.perf_counter() - t0)
+
+
+def _functional_ring(iters: int) -> float:
+    ring = init_ring(cap=1024, width=2)
+
+    @jax.jit
+    def pushpop(r, i):
+        r, _ = ring_push(r, jnp.stack([i, i + 1]))
+        r, rec, _ = ring_pop(r)
+        return r, rec
+
+    ring, _ = pushpop(ring, jnp.int32(0))          # compile
+    t0 = time.perf_counter()
+    for i in range(iters):
+        ring, _ = pushpop(ring, jnp.int32(i))
+    jax.block_until_ready(ring.buf)
+    return iters / (time.perf_counter() - t0)
+
+
+def _functional_matching(iters: int) -> float:
+    table = init_table(n_buckets=4096, bucket_cap=4)
+    n = 256
+    keys = encode_key(jnp.arange(n) % 7, jnp.arange(n) % 13)
+    kinds = (jnp.arange(n) % 2 + 1).astype(jnp.int32)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    batched = jax.jit(insert_batch)
+    table, _, _ = batched(table, keys, kinds, vals)   # compile
+    t0 = time.perf_counter()
+    reps = max(iters // n, 1)
+    for _ in range(reps):
+        table, _, _ = batched(table, keys, kinds, vals)
+    jax.block_until_ready(table.keys)
+    return reps * n / (time.perf_counter() - t0)
+
+
+def run(quick: bool = True) -> List[dict]:
+    iters = PAPER.resource_iters // (5 if quick else 1)
+    lanes_list = (1, 16) if quick else PAPER.resource_lanes
+    rows = []
+    for lanes in lanes_list:
+        for name, fn in (("cq_pushpop", _host_cq),
+                         ("matching_insert", _host_matching),
+                         ("pool_getput", _host_pool)):
+            rate = fn(iters, lanes)
+            rows.append({"bench": "resources",
+                         "case": f"{name}/lanes={lanes}",
+                         "us_per_call": 1e6 / rate,
+                         "derived": f"{rate / 1e6:.2f} Mops"})
+    rows.append({"bench": "resources", "case": "functional_ring/jit",
+                 "us_per_call": 1e6 / _functional_ring(iters),
+                 "derived": "in-graph CQ"})
+    rate = _functional_matching(iters)
+    rows.append({"bench": "resources", "case": "functional_matching/jit",
+                 "us_per_call": 1e6 / rate,
+                 "derived": f"{rate / 1e6:.2f} Mops (batched)"})
+    return rows

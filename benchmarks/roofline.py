@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/artifacts/dryrun/*.json and prints, per (arch × shape ×
+mesh × mode): the three roofline terms (compute / memory / collective
+seconds on TPU v5e constants), the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs, and the roofline fraction.  ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_cells(mesh: Optional[str] = None, mode: Optional[str] = None
+               ) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        if path.endswith(".ops.json"):
+            continue
+        art = json.load(open(path))
+        if mesh and art.get("mesh") != mesh:
+            continue
+        if mode and art.get("mode") != mode:
+            continue
+        rows.append(art)
+    return rows
+
+
+def table(mesh: str = "single", mode: str = "lci_dedicated") -> str:
+    rows = load_cells(mesh, mode)
+    out = [f"{'arch':22s} {'shape':12s} {'comp_ms':>8s} {'mem_ms':>8s} "
+           f"{'coll_ms':>8s} {'bound':>10s} {'useful':>7s} {'roofl%':>7s}"]
+    for art in rows:
+        if art.get("status") == "skipped":
+            out.append(f"{art['cell'].split('__')[0]:22s} "
+                       f"{art['cell'].split('__')[1]:12s} "
+                       f"{'—':>8s} {'—':>8s} {'—':>8s} {'skipped':>10s}")
+            continue
+        if art.get("status") != "ok":
+            continue
+        r = art["roofline"]
+        out.append(
+            f"{art['arch']:22s} {art['shape']:12s} "
+            f"{r['compute_s'] * 1e3:8.2f} {r['memory_s'] * 1e3:8.2f} "
+            f"{r['collective_s'] * 1e3:8.2f} {r['dominant']:>10s} "
+            f"{r['useful_flop_ratio']:7.2f} "
+            f"{r['roofline_fraction'] * 100:6.1f}%")
+    return "\n".join(out)
+
+
+def run(quick: bool = True) -> List[dict]:
+    rows = []
+    for art in load_cells("single", "lci_dedicated"):
+        if art.get("status") != "ok":
+            continue
+        r = art["roofline"]
+        rows.append({
+            "bench": "roofline",
+            "case": f"{art['arch']}/{art['shape']}",
+            "us_per_call": r["bound_s"] * 1e6,
+            "derived": (f"{r['dominant']}-bound "
+                        f"{r['roofline_fraction'] * 100:.0f}% "
+                        f"useful={r['useful_flop_ratio']:.2f}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    print(table())

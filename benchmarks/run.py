@@ -1,0 +1,63 @@
+"""Benchmark aggregator — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,case,us_per_call,derived`` CSV rows:
+
+    message_rate  -> paper Fig 2/3 (lanes x shared/dedicated)
+    bandwidth     -> paper Fig 4  (size sweep, protocol crossovers)
+    resources     -> paper Fig 5  (CQ / matching / packet pool Mops)
+    kmer          -> paper Fig 6  (HipMer k-mer stage, strong scaling)
+    amt_pipeline  -> paper Fig 7  (AMT DAG: BSP barrier vs LCI async)
+    roofline      -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale iteration counts (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (amt_pipeline, bandwidth, kmer, message_rate, resources,
+                   roofline)
+    suites = {
+        "message_rate": message_rate.run,
+        "bandwidth": bandwidth.run,
+        "resources": resources.run,
+        "kmer": kmer.run,
+        "amt_pipeline": amt_pipeline.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,case,us_per_call,derived")
+    failures = []
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            rows = fn(quick=quick)
+        except Exception as e:                      # pragma: no cover
+            failures.append((name, repr(e)))
+            print(f"{name},ERROR,,{e!r}", flush=True)
+            continue
+        for r in rows:
+            print(f"{r['bench']},{r['case']},{r['us_per_call']:.3f},"
+                  f"\"{r['derived']}\"", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Quickstart: the LCI-X public API in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's core concepts end to end on CPU:
+  1. runtime + resources (devices, completion queues, handlers)
+  2. post_comm / Table-1 (send-recv, active messages, RMA put)
+  3. the ternary done/posted/retry status protocol + OFF idiom
+  4. completion graphs (DAG-scheduled comm + compute)
+  5. an in-graph ring collective under shard_map (the TPU adaptation)
+"""
+import numpy as np
+
+from repro.core import (CommConfig, CompletionGraph, LocalCluster,
+                        MatchingPolicy, post_am_x, post_put_x, post_recv_x,
+                        post_send_x)
+
+
+def main():
+    # -- 1. runtime lifecycle (paper §3.2.2): no global init; allocate --
+    cfg = CommConfig(inject_max_bytes=64, bufcopy_max_bytes=4096)
+    cluster = LocalCluster(n_ranks=2, config=cfg)
+    r0, r1 = cluster[0], cluster[1]
+    print(f"ranks: {r0.get_rank_me()}/{r0.get_rank_n()}")
+
+    # -- 2a. active messages with a remote completion queue ------------
+    rcq = r1.alloc_cq()
+    rcomp = r1.register_rcomp(rcq)
+    status = post_am_x(r0, 1, np.arange(8, dtype=np.uint8), None,
+                       None, rcomp).tag(42)()       # OFF: options any order
+    print(f"inject AM -> {status.kind.name} (done = completed immediately)")
+    cluster.quiesce()
+    msg = rcq.pop()
+    print(f"delivered: tag={msg.tag} payload={msg.get_buffer()[:4]}...")
+
+    # -- 2b. send/recv with wildcard matching ---------------------------
+    buf = np.zeros(16, np.uint8)
+    post_recv_x(r1, 0, buf, 16, 0).matching_policy(
+        MatchingPolicy.RANK_ONLY)()
+    post_send_x(r0, 1, np.full(16, 7, np.uint8), 16, 999).matching_policy(
+        MatchingPolicy.RANK_ONLY)()
+    cluster.quiesce()
+    print(f"wildcard recv got: {buf[:4]}...")
+
+    # -- 2c. RMA put into registered memory -----------------------------
+    target = np.zeros(32, np.uint8)
+    region = r1.register_memory(target)
+    post_put_x(r0, 1, np.arange(32, dtype=np.uint8), (region.rid, 0), 32)()
+    cluster.quiesce()
+    print(f"RMA put landed: {target[:4]}...")
+
+    # -- 3. back-pressure: retry is a value, not an exception -----------
+    tiny = LocalCluster(2, cfg, fabric_depth=1)
+    tiny[0]
+    post_send_x(tiny[0], 1, np.zeros(8, np.uint8), 8, 0)()
+    st = post_send_x(tiny[0], 1, np.zeros(8, np.uint8), 8, 0)()
+    print(f"full fabric -> {st.kind.name} ({st.code.name}): caller decides")
+
+    # -- 4. completion graph: partial-order comm + compute ---------------
+    g = CompletionGraph("demo")
+    a = g.add_node(lambda: np.arange(4.0))
+    b = g.add_node(lambda: np.ones(4))
+    c = g.add_node(lambda x, y: x @ y, deps=[a, b])     # fires when ready
+    vals = g.execute()
+    print(f"graph result: {vals[c]} (fire order {g.fire_order})")
+
+    # -- 5. the in-graph layer: ring collectives (run under shard_map on
+    #       real meshes; here single-device degenerates to local math) ---
+    import jax.numpy as jnp
+    from repro.distributed.comm import local_comm
+    comm = local_comm()
+    x = jnp.ones((8, 4))
+    w = jnp.ones((4, 4))
+    y = comm.ag_matmul(x, w)          # on a mesh: ring all-gather matmul
+    print(f"ag_matmul: {y.shape}, comm degenerates locally; "
+          f"see launch/dryrun.py for the 512-chip meshes")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

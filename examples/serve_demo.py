@@ -1,0 +1,83 @@
+"""Serving demo: continuous batching with LCI admission semantics.
+
+    PYTHONPATH=src python examples/serve_demo.py [--arch olmo-1b]
+
+Builds the reduced (smoke) model, trains nothing — the demo is the
+*engine*: paged-KV admission (packet pool), retry/backlog under page
+pressure, completion queues for finished requests, greedy decode.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_smoke
+from repro.core.completion import CompletionQueue
+from repro.models.registry import build_model
+from repro.serving import PagedKVAllocator, ServeScheduler
+from repro.serving.engine import init_cache, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b",
+                    choices=[a for a in ARCH_NAMES])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    if cfg.family == "vlm" or cfg.is_encdec:
+        raise SystemExit("demo targets decoder-only archs")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    print(f"model: {cfg.name} "
+          f"({sum(x.size for x in jax.tree_util.tree_leaves(params)):,} "
+          f"params)")
+
+    cache = init_cache(cfg, 128, args.max_batch)
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    box = {"cache": cache}
+
+    def decode_fn(tokens, positions):
+        pad = args.max_batch - len(tokens)
+        toks = jnp.asarray(np.pad(tokens, (0, pad)), jnp.int32)
+        nxt, box["cache"] = serve(params, box["cache"], toks)
+        return np.asarray(nxt)[:len(tokens)]
+
+    alloc = PagedKVAllocator(n_pages=48, page_size=16)   # page pressure!
+    sched = ServeScheduler(decode_fn, max_batch=args.max_batch,
+                           allocator=alloc)
+    cq = CompletionQueue()
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    backlogged = 0
+    for i in range(args.requests):
+        st = sched.submit(rng.integers(0, cfg.vocab, size=6),
+                          args.max_new, comp=cq, allow_retry=False)
+        backlogged += st.code.name == "POSTED_BACKLOG"
+    print(f"submitted {args.requests} requests "
+          f"({backlogged} parked in the backlog under page pressure)")
+    rounds = 0
+    while sched.completed < args.requests:
+        sched.step()
+        rounds += 1
+        assert rounds < 10_000
+    dt = time.time() - t0
+    n_tok = 0
+    while True:
+        st = cq.pop()
+        if st.is_retry():
+            break
+        n_tok += len(st.get_buffer())
+    print(f"done: {n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s), "
+          f"{rounds} engine rounds, free pages back to "
+          f"{alloc.free_pages}/48")
+    print("serve demo OK")
+
+
+if __name__ == "__main__":
+    main()

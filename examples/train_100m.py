@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300] [--tiny]
+
+Uses the full production path: config -> model -> AdamW(fp32 master) ->
+train loop with async checkpointing, straggler monitoring, metrics CSV,
+and deterministic step-indexed data.  ``--tiny`` shrinks the model for a
+fast smoke run; the default is a true ~100M-parameter model (CPU-slow but
+real).  Resume: rerun the same command after an interrupt.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticPipeline
+from repro.models.common import ModelConfig
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.train import make_train_step, train_state_init
+from repro.train.loop import LoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = ModelConfig(name="lm-tiny", family="dense", n_layers=2,
+                          d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                          vocab=2048, tp_target=4, dtype=jnp.float32)
+    else:
+        # ~100M params: 12L x 640d x swiglu(1792) + 32k vocab (tied)
+        cfg = ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                          d_model=640, n_heads=10, n_kv_heads=5,
+                          d_ff=1792, vocab=32000, tie_embeddings=True,
+                          tp_target=4, dtype=jnp.float32)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=cosine_schedule(args.lr, 20, args.steps))
+    state, specs = train_state_init(model, jax.random.PRNGKey(0), opt)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
+    print(f"{cfg.name}: {n / 1e6:.1f}M params, {args.steps} steps "
+          f"@ {args.seq}x{args.batch}")
+
+    step_fn = jax.jit(make_train_step(model, specs, opt),
+                      donate_argnums=(0,))
+    pipe = SyntheticPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                             global_batch=args.batch, n_motifs=256,
+                             motif_len=16)
+    t0 = time.time()
+    state, hist = train_loop(
+        state, step_fn, pipe,
+        LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=100, log_every=20,
+                   metrics_csv=f"{args.ckpt_dir}/metrics.csv"),
+        batch_transform=lambda b, s: {k: jnp.asarray(v)
+                                      for k, v in b.items()})
+    dt = time.time() - t0
+    tok_s = args.steps * args.seq * args.batch / dt
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} | "
+          f"{dt:.0f}s total, {tok_s:,.0f} tok/s on CPU")
+    assert hist[-1]["loss"] < hist[0]["loss"], "did not learn"
+    print("train_100m OK")
+
+
+if __name__ == "__main__":
+    main()

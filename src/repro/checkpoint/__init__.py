@@ -1,0 +1,2 @@
+from .store import (CheckpointStore, latest_step, restore, restore_resharded,
+                    save_async, save_sync)

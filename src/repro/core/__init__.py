@@ -1,0 +1,59 @@
+"""LCI-X core — the paper's contribution as a composable JAX module.
+
+Public surface mirrors the paper's C++ API (Listing 2) where it makes
+sense in Python, plus the in-graph collective layer that is the TPU
+adaptation of the zero-copy protocol.
+"""
+from .backlog import BacklogQueue, Ring, init_ring, ring_pop, ring_push, ring_size
+from .channels import Channel, Device, make_channels
+from .completion import (CompletionHandler, CompletionObject, CompletionQueue,
+                         MPMCArray, Synchronizer, SyncState, init_sync,
+                         sync_ready, sync_signal)
+from .graph import CompletionGraph
+from .matching import (HostMatchingEngine, MatchKind, MatchTable,
+                       MatchingPolicy, encode_key, init_table, insert,
+                       insert_batch, make_key, pending_count)
+from .modes import CommConfig, CommMode, parse_mode
+from .off import off
+from .packet_pool import (HostPacketPool, SlotPool, free_count, init_pool,
+                          pool_get, pool_put)
+from .post import (CommKind, Direction, classify, post_am, post_am_x,
+                   post_comm, post_comm_x, post_get, post_get_x, post_put,
+                   post_put_x, post_recv, post_recv_x, post_send,
+                   post_send_x)
+from .protocol import Protocol, ProtocolStats, select_protocol
+from .runtime import (Fabric, LocalCluster, MemoryRegion, Runtime,
+                      WireKind, WireMsg, g_runtime, g_runtime_fina,
+                      g_runtime_init, progress, progress_x)
+from .status import (ErrorCode, ErrorKind, FatalError, Status, done, posted,
+                     retry)
+from . import collectives
+
+__all__ = [
+    # status
+    "ErrorCode", "ErrorKind", "FatalError", "Status", "done", "posted",
+    "retry",
+    # resources
+    "BacklogQueue", "Channel", "Device", "CompletionGraph",
+    "CompletionHandler", "CompletionObject", "CompletionQueue", "MPMCArray",
+    "Synchronizer", "HostMatchingEngine", "HostPacketPool",
+    "MatchingPolicy", "MatchKind", "make_channels", "make_key",
+    # functional resources
+    "Ring", "init_ring", "ring_push", "ring_pop", "ring_size",
+    "SlotPool", "init_pool", "pool_get", "pool_put", "free_count",
+    "MatchTable", "init_table", "insert", "insert_batch", "encode_key",
+    "pending_count", "SyncState", "init_sync", "sync_signal", "sync_ready",
+    # posting
+    "CommKind", "Direction", "classify", "post_comm", "post_comm_x",
+    "post_send", "post_send_x", "post_recv", "post_recv_x", "post_am",
+    "post_am_x", "post_put", "post_put_x", "post_get", "post_get_x",
+    # runtime
+    "Fabric", "LocalCluster", "MemoryRegion", "Runtime", "WireKind",
+    "WireMsg", "g_runtime", "g_runtime_fina", "g_runtime_init", "progress",
+    "progress_x",
+    # modes & protocol
+    "CommConfig", "CommMode", "parse_mode", "Protocol", "ProtocolStats",
+    "select_protocol", "off",
+    # in-graph collectives
+    "collectives",
+]

@@ -1,0 +1,114 @@
+"""Backlog queue (paper §4.1.5) — storage for temporarily postponed requests.
+
+The paper: "The backlog queue is used to store communication requests that
+cannot be immediately submitted and cannot be back-propagated to the user
+... LCI expects such scenarios to be rare, so we implement it with a simple
+C++ queue with a spinlock. An atomic flag prevents the progress engine from
+unnecessarily polling an empty backlog queue."
+
+Host-side :class:`BacklogQueue` keeps that shape: a plain deque + an
+``empty_flag`` fast-path check (the atomic-flag analogue), with an optional
+capacity bound that surfaces ``retry(RETRY_BACKLOG_FULL)``.
+
+The functional ring (:func:`init_ring` / :func:`ring_push` /
+:func:`ring_pop`) is the in-graph variant used by the serving scheduler's
+admission queue and the MoE overflow ledger.  It doubles as the fixed-size
+FAA completion-queue implementation (paper §4.1.4: "a hand-written
+Fetch-And-Add-based fix-sized array") — a CQ *is* an MPSC ring here.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .status import ErrorCode, Status, done, retry
+
+
+class BacklogQueue:
+    """Host-side backlog: FIFO of postponed communication descriptors."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        self._q: collections.deque = collections.deque()
+        self.capacity = capacity
+        self.max_depth = 0          # telemetry: paper expects this to stay ~0
+
+    @property
+    def empty_flag(self) -> bool:
+        """The atomic-flag fast path: progress() checks this before polling."""
+        return not self._q
+
+    def push(self, item: Any) -> Status:
+        if self.capacity is not None and len(self._q) >= self.capacity:
+            return retry(ErrorCode.RETRY_BACKLOG_FULL)
+        self._q.append(item)
+        self.max_depth = max(self.max_depth, len(self._q))
+        return done()
+
+    def pop(self) -> tuple[Any, Status]:
+        if not self._q:
+            return None, retry(ErrorCode.RETRY_LOCKED)
+        return self._q.popleft(), done()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+# ---------------------------------------------------------------------------
+# Functional MPSC/MPMC ring (fixed-size, FAA-style head/tail counters).
+#
+#   buf  (cap, width) int32/float payload records
+#   head ()           int32  -- next pop position (monotone counter)
+#   tail ()           int32  -- next push position (monotone counter)
+#
+# Indices wrap modulo cap; (tail - head) is the live count.  Inside a jitted
+# program pushes are sequenced by dataflow, which makes the monotone-counter
+# design exact rather than merely linearizable.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ring:
+    buf: jax.Array
+    head: jax.Array
+    tail: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    Ring,
+    lambda r: ((r.buf, r.head, r.tail), None),
+    lambda _, c: Ring(*c))
+
+
+def init_ring(cap: int, width: int, dtype=jnp.int32) -> Ring:
+    return Ring(buf=jnp.zeros((cap, width), dtype),
+                head=jnp.zeros((), jnp.int32),
+                tail=jnp.zeros((), jnp.int32))
+
+
+def ring_push(ring: Ring, record) -> tuple[Ring, jax.Array]:
+    """Push one record. Returns (ring', status): 0 ok, 1 full (retry)."""
+    cap = ring.buf.shape[0]
+    live = ring.tail - ring.head
+    ok = live < cap
+    pos = ring.tail % cap
+    record = jnp.asarray(record, ring.buf.dtype)
+    buf = ring.buf.at[pos].set(jnp.where(ok, record, ring.buf[pos]))
+    return (Ring(buf, ring.head, ring.tail + jnp.where(ok, 1, 0)),
+            jnp.where(ok, 0, 1).astype(jnp.int32))
+
+
+def ring_pop(ring: Ring) -> tuple[Ring, jax.Array, jax.Array]:
+    """Pop one record. Returns (ring', record, status): 0 ok, 1 empty."""
+    cap = ring.buf.shape[0]
+    ok = ring.tail > ring.head
+    pos = ring.head % cap
+    rec = jnp.where(ok, ring.buf[pos], jnp.zeros_like(ring.buf[pos]))
+    return (Ring(ring.buf, ring.head + jnp.where(ok, 1, 0), ring.tail),
+            rec, jnp.where(ok, 0, 1).astype(jnp.int32))
+
+
+def ring_size(ring: Ring) -> jax.Array:
+    return ring.tail - ring.head

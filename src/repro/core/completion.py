@@ -1,0 +1,190 @@
+"""Completion objects (paper §3.2.5/§4.1.4) — handler, queue, synchronizer.
+
+The paper: "a completion object is a functor with a virtual signal method
+that takes a status_t object as an argument. Derived from it, LCI defines
+four built-in completion object types: handler, queue, synchronizer, and
+graph."  The graph lives in :mod:`repro.core.graph`.
+
+Host-side objects carry the paper's exact semantics and are used by the
+runtime (:mod:`repro.core.runtime`), the serving scheduler, and the k-mer
+mini-app.  Their in-graph counterpart for queues is the FAA ring in
+:mod:`repro.core.backlog`; synchronizers in-graph are plain signal counters
+(:func:`sync_signal`).
+
+Atomicity notes from the paper, and what happens to them here:
+
+* completion queue — "one based on the state-of-the-art LCRQ and the other
+  on a hand-written Fetch-And-Add-based fix-sized array".  The host queue is
+  a deque (single-threaded host runtime); the in-graph queue is the FAA ring
+  whose monotone head/tail counters are the FAA counters, sequenced by
+  dataflow instead of x86 atomics.
+* synchronizer — "an atomic flag (when expecting one signal) or a fixed-size
+  array protected by two atomic counters".  Kept structurally: one expected
+  signal skips the array entirely.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .status import ErrorCode, FatalError, Status, done, retry
+
+
+class CompletionObject:
+    """Base functor: ``signal(status)`` delivers one completion."""
+
+    def signal(self, status: Status) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class CompletionHandler(CompletionObject):
+    """Handler: a function invoked inline at completion time.
+
+    Paper: "Completion handler is essentially a function and does not need
+    any special treatment."
+    """
+
+    def __init__(self, fn: Callable[[Status], None]):
+        self.fn = fn
+        self.signals = 0
+
+    def signal(self, status: Status) -> None:
+        self.signals += 1
+        self.fn(status)
+
+
+class CompletionQueue(CompletionObject):
+    """Queue: completions are enqueued; the client polls with ``pop``.
+
+    ``capacity`` bounds the queue like the FAA fixed-size array; a full
+    queue surfaces ``retry(RETRY_QUEUE_FULL)`` to the *signaler* (the
+    progress engine pushes it to the backlog instead of dropping it).
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        self._q: collections.deque = collections.deque()
+        self.capacity = capacity
+        self.pushes = 0
+        self.pops = 0
+
+    def signal(self, status: Status) -> Status:
+        if self.capacity is not None and len(self._q) >= self.capacity:
+            return retry(ErrorCode.RETRY_QUEUE_FULL)
+        self._q.append(status)
+        self.pushes += 1
+        return done()
+
+    def pop(self) -> Status:
+        """``cq_pop``: done-status with payload, or retry when empty."""
+        if not self._q:
+            return retry(ErrorCode.RETRY_LOCKED)
+        self.pops += 1
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class Synchronizer(CompletionObject):
+    """Synchronizer: becomes ready after ``expected`` signals.
+
+    Paper: "similar to MPI requests but can accept multiple signals before
+    becoming ready."
+    """
+
+    def __init__(self, expected: int = 1):
+        if expected < 1:
+            raise FatalError("synchronizer needs expected >= 1")
+        self.expected = expected
+        self._received: List[Status] = []
+
+    def signal(self, status: Status) -> None:
+        if len(self._received) >= self.expected:
+            raise FatalError("synchronizer signaled past ready")
+        self._received.append(status)
+
+    @property
+    def ready(self) -> bool:
+        return len(self._received) >= self.expected
+
+    def test(self) -> tuple[bool, List[Status]]:
+        """Nonblocking readiness check; payloads valid once ready."""
+        return self.ready, list(self._received)
+
+    def reset(self) -> None:
+        self._received.clear()
+
+
+# ---------------------------------------------------------------------------
+# Remote-completion registry — the MPMC array (paper §4.1.1).
+#
+# "rarely written but frequently read ... a write and append is protected by
+# a lock to prevent missed writes, but read is lock-free.  Every resize
+# swaps the old array with a new one that doubles the size."  We keep the
+# doubling-growth array shape (reads index a plain list slot; appends may
+# reallocate) because the Fig-5 benchmark and tests exercise its geometry.
+# ---------------------------------------------------------------------------
+
+class MPMCArray:
+    """Append-mostly registry with doubling growth and O(1) reads."""
+
+    def __init__(self, initial_cap: int = 8):
+        self._arr: list = [None] * initial_cap
+        self._n = 0
+        self.resizes = 0
+
+    def append(self, item: Any) -> int:
+        if self._n == len(self._arr):
+            old = self._arr
+            self._arr = old + [None] * len(old)   # swap-with-doubled copy
+            self.resizes += 1
+        idx = self._n
+        self._arr[idx] = item
+        self._n += 1
+        return idx
+
+    def __getitem__(self, idx: int) -> Any:
+        if idx >= self._n:
+            raise FatalError(f"MPMCArray read past end: {idx} >= {self._n}")
+        return self._arr[idx]
+
+    def __len__(self) -> int:
+        return self._n
+
+
+# ---------------------------------------------------------------------------
+# In-graph synchronizer: a signal counter + fixed payload slots.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyncState:
+    expected: jax.Array    # () int32
+    received: jax.Array    # () int32
+    payload: jax.Array     # (expected_max, width)
+
+
+jax.tree_util.register_pytree_node(
+    SyncState,
+    lambda s: ((s.expected, s.received, s.payload), None),
+    lambda _, c: SyncState(*c))
+
+
+def init_sync(expected: int, width: int, max_signals: int = 0) -> SyncState:
+    cap = max(expected, max_signals, 1)
+    return SyncState(expected=jnp.asarray(expected, jnp.int32),
+                     received=jnp.zeros((), jnp.int32),
+                     payload=jnp.zeros((cap, width), jnp.float32))
+
+
+def sync_signal(state: SyncState, record) -> SyncState:
+    pos = jnp.minimum(state.received, state.payload.shape[0] - 1)
+    return SyncState(state.expected, state.received + 1,
+                     state.payload.at[pos].set(record))
+
+
+def sync_ready(state: SyncState) -> jax.Array:
+    return state.received >= state.expected

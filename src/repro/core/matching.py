@@ -1,0 +1,249 @@
+"""Matching engine (paper §4.1.3) — hash-bucket send/recv matching.
+
+The engine exposes two methods, exactly as in the paper:
+
+* ``make_key(rank, tag, policy)`` — build the match key.  ``matching_policy``
+  (§3.3.2) selects which fields participate: ``rank_tag`` (default),
+  ``rank_only``, ``tag_only``, or a user ``make_key`` function.
+* ``insert(key, kind, value)`` — insert a send or receive; returns the
+  matched value of the complementary kind if present, else stores the entry.
+
+Two implementations live here:
+
+1. :class:`HostMatchingEngine` — a plain Python dict-of-deques used at trace
+   time (matching program-builder sends with recvs before emitting ppermute)
+   and by the serving router.  The paper's per-bucket spinlock concern does
+   not arise: trace time is single-threaded by construction.
+2. Functional jnp engine (:func:`init_table`, :func:`insert_batch`) — a
+   fixed-capacity hash table living inside jitted programs; used by the MoE
+   dispatch path (token -> expert matching with capacity) and exercised
+   directly by the Fig-5 resource benchmark and hypothesis tests.
+
+The paper's relaxed semantics (out-of-order delivery, restricted wildcard)
+are what make the hash-table design legal; we adopt the same semantics and
+the same default bucket count (65536).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Any, Callable, Hashable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MatchKind(enum.IntEnum):
+    SEND = 1
+    RECV = 2
+
+    @property
+    def complement(self) -> "MatchKind":
+        return MatchKind.RECV if self is MatchKind.SEND else MatchKind.SEND
+
+
+class MatchingPolicy(enum.Enum):
+    RANK_TAG = "rank_tag"    # default: match on (engine, source rank, tag)
+    RANK_ONLY = "rank_only"  # wildcard tag
+    TAG_ONLY = "tag_only"    # wildcard rank
+
+
+def make_key(rank: int, tag: int,
+             policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
+             custom: Optional[Callable[[int, int], Hashable]] = None
+             ) -> Hashable:
+    """Build the insertion key (paper: 'the matching_policy will instruct the
+    matching engine on how to make the insertion key based on rank and tag';
+    users can also supply their own make_key)."""
+    if custom is not None:
+        return custom(rank, tag)
+    if policy == MatchingPolicy.RANK_TAG:
+        return (rank, tag)
+    if policy == MatchingPolicy.RANK_ONLY:
+        return (rank, None)
+    return (None, tag)
+
+
+class HostMatchingEngine:
+    """Trace-time / host-side matching engine.
+
+    Buckets are materialized lazily (a Python dict is already a hash table);
+    each bucket holds FIFO queues per kind, mirroring the paper's
+    list-of-queues buckets.  ``insert`` returns the matched value or None.
+    """
+
+    def __init__(self, n_buckets: int = 65536):
+        self.n_buckets = n_buckets
+        self._buckets: dict[Hashable, dict[MatchKind, collections.deque]] = {}
+        self.inserts = 0
+        self.matches = 0
+
+    def insert(self, key: Hashable, kind: MatchKind, value: Any):
+        self.inserts += 1
+        bucket = self._buckets.setdefault(
+            key, {MatchKind.SEND: collections.deque(),
+                  MatchKind.RECV: collections.deque()})
+        other = bucket[kind.complement]
+        if other:
+            self.matches += 1
+            return other.popleft()
+        bucket[kind].append(value)
+        return None
+
+    def pending(self) -> int:
+        return sum(len(q) for b in self._buckets.values()
+                   for q in b.values())
+
+
+# ---------------------------------------------------------------------------
+# Functional (in-graph) engine.
+#
+# Fixed geometry: ``n_buckets`` x ``bucket_cap`` slots. State arrays:
+#   keys  (n_buckets, bucket_cap) int32   -- 0 == empty
+#   kinds (n_buckets, bucket_cap) int32   -- MatchKind or 0
+#   vals  (n_buckets, bucket_cap) int32   -- payload index (e.g. packet slot)
+#
+# The paper's low-load fast path ("fixed-size arrays instead of linked lists
+# ... an insertion with a single cache miss") is structural here: every slot
+# probe is a vectorized compare over one bucket row.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MatchTable:
+    keys: jax.Array
+    kinds: jax.Array
+    vals: jax.Array
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.keys, self.kinds, self.vals), None
+
+
+jax.tree_util.register_pytree_node(
+    MatchTable,
+    lambda t: ((t.keys, t.kinds, t.vals), None),
+    lambda _, c: MatchTable(*c))
+
+
+def init_table(n_buckets: int, bucket_cap: int) -> MatchTable:
+    shape = (n_buckets, bucket_cap)
+    return MatchTable(
+        keys=jnp.zeros(shape, jnp.int32),
+        kinds=jnp.zeros(shape, jnp.int32),
+        vals=jnp.full(shape, -1, jnp.int32),
+    )
+
+
+def _hash_key(key: jax.Array, n_buckets: int) -> jax.Array:
+    """Cheap integer hash (Knuth multiplicative) -> bucket index."""
+    h = (key.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(16)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def encode_key(rank, tag, policy: MatchingPolicy = MatchingPolicy.RANK_TAG):
+    """Pack (rank, tag) into one nonzero int32 key under the policy.
+
+    Layout: bit 30 = nonzero marker, bits 16..29 = rank (14 bits),
+    bits 0..15 = tag.  (Bit 31 would overflow int32.)"""
+    rank = jnp.asarray(rank, jnp.int32)
+    tag = jnp.asarray(tag, jnp.int32)
+    if policy == MatchingPolicy.RANK_ONLY:
+        tag = jnp.zeros_like(tag)
+    elif policy == MatchingPolicy.TAG_ONLY:
+        rank = jnp.zeros_like(rank)
+    return ((rank & 0x3FFF) << 16) | (tag & 0xFFFF) | (1 << 30)
+
+
+def insert(table: MatchTable, key: jax.Array, kind: int, val: jax.Array):
+    """Insert one entry; returns (table', matched_val, status).
+
+    matched_val == -1 when no complementary entry existed (entry stored,
+    status=posted->0 stored / 1 matched); status==2 => bucket full (retry).
+    """
+    n_buckets, cap = table.keys.shape
+    b = _hash_key(key, n_buckets)
+    row_keys = table.keys[b]
+    row_kinds = table.kinds[b]
+    comp = jnp.int32(MatchKind(kind).complement)
+
+    is_match = (row_keys == key) & (row_kinds == comp)
+    any_match = jnp.any(is_match)
+    match_slot = jnp.argmax(is_match)          # first matching slot
+    matched_val = jnp.where(any_match, table.vals[b, match_slot], -1)
+
+    is_empty = row_kinds == 0
+    any_empty = jnp.any(is_empty)
+    empty_slot = jnp.argmax(is_empty)
+
+    # On match: clear the matched slot. On store: fill the empty slot.
+    slot = jnp.where(any_match, match_slot, empty_slot)
+    new_key = jnp.where(any_match, 0, key)
+    new_kind = jnp.where(any_match, 0, jnp.int32(kind))
+    new_val = jnp.where(any_match, -1, val)
+    can_write = any_match | any_empty
+
+    def write(arr, v):
+        return jax.lax.cond(
+            can_write,
+            lambda a: a.at[b, slot].set(v.astype(a.dtype)),
+            lambda a: a, arr)
+
+    table = MatchTable(write(table.keys, new_key),
+                       write(table.kinds, new_kind),
+                       write(table.vals, new_val))
+    status = jnp.where(any_match, 1, jnp.where(any_empty, 0, 2))
+    return table, matched_val, status
+
+
+def insert_batch(table: MatchTable, keys, kinds, vals):
+    """Sequential batch insert via scan (keeps matching semantics exact)."""
+
+    def step(tab, kkv):
+        k, kind, v = kkv
+        tab, m, s = _insert_dyn(tab, k, kind, v)
+        return tab, (m, s)
+
+    table, (matched, status) = jax.lax.scan(
+        step, table, (keys, kinds.astype(jnp.int32), vals))
+    return table, matched, status
+
+
+def _insert_dyn(table: MatchTable, key, kind, val):
+    """insert() with traced ``kind`` (scan-compatible)."""
+    n_buckets, _ = table.keys.shape
+    b = _hash_key(key, n_buckets)
+    row_keys = table.keys[b]
+    row_kinds = table.kinds[b]
+    comp = jnp.where(kind == jnp.int32(MatchKind.SEND),
+                     jnp.int32(MatchKind.RECV), jnp.int32(MatchKind.SEND))
+
+    is_match = (row_keys == key) & (row_kinds == comp)
+    any_match = jnp.any(is_match)
+    match_slot = jnp.argmax(is_match)
+    matched_val = jnp.where(any_match, table.vals[b, match_slot], -1)
+
+    is_empty = row_kinds == 0
+    any_empty = jnp.any(is_empty)
+    empty_slot = jnp.argmax(is_empty)
+
+    slot = jnp.where(any_match, match_slot, empty_slot)
+    new_key = jnp.where(any_match, 0, key)
+    new_kind = jnp.where(any_match, 0, kind)
+    new_val = jnp.where(any_match, -1, val)
+    can_write = any_match | any_empty
+
+    def sel(arr, v):
+        old = arr[b, slot]
+        return arr.at[b, slot].set(jnp.where(can_write, v.astype(arr.dtype),
+                                             old))
+
+    table = MatchTable(sel(table.keys, new_key),
+                       sel(table.kinds, new_kind),
+                       sel(table.vals, new_val))
+    status = jnp.where(any_match, 1, jnp.where(any_empty, 0, 2))
+    return table, matched_val, status
+
+
+def pending_count(table: MatchTable) -> jax.Array:
+    return jnp.sum(table.kinds != 0)

@@ -1,0 +1,76 @@
+"""Communication execution modes — the paper's evaluation axes, on TPU.
+
+The paper compares (§5.2):
+
+* *process-based*      — one process per core (the classic MPI mode)
+* *thread, shared*     — all threads share one set of comm resources
+* *thread, dedicated*  — one device (NIC resource set) per thread
+
+On TPU the serialization the paper fights lives in the *schedule*: a
+monolithic collective is one giant serialized transfer that the step must
+wait on, while chunked collectives on independent channels can be scheduled
+by XLA concurrently with compute.  The three modes map to:
+
+* ``BSP``            — monolithic blocking collectives, compute strictly
+  after comm (the "MPI baseline"); no chunking, no overlap.
+* ``LCI_SHARED``     — asynchronous posting, but a single channel
+  (one chunk-stream); overlap only across *different* operations.
+* ``LCI_DEDICATED``  — ``n_channels`` independent chunk-streams; ring
+  collective-matmuls interleave ICI steps with MXU work (full overlap).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class CommMode(enum.Enum):
+    BSP = "bsp"                    # paper baseline: MPI-like bulk synchronous
+    LCI_SHARED = "lci_shared"      # async, shared single channel
+    LCI_DEDICATED = "lci_dedicated"  # async, dedicated per-stream channels
+
+    @property
+    def is_lci(self) -> bool:
+        return self is not CommMode.BSP
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Per-step communication configuration (attached to the Runtime).
+
+    ``n_channels`` is the resource-replication knob (paper: #devices).
+    In ``LCI_DEDICATED`` mode ring collectives split their payload into
+    ``n_channels`` chunks per ring step so that chunk *i+1* is in flight
+    while chunk *i* is being consumed by the MXU.
+    """
+
+    mode: CommMode = CommMode.LCI_DEDICATED
+    n_channels: int = 4
+    # protocol thresholds, bytes (paper §4.3: inject / buffer-copy / zero-copy)
+    inject_max_bytes: int = 64 * 1024          # aggregate below this
+    bufcopy_max_bytes: int = 2 * 1024 * 1024   # staged through packet slots
+    # matching-engine defaults (paper §4.1.3: 65536 buckets by default)
+    matching_buckets: int = 65536
+    # packet pool
+    packets_per_lane: int = 64
+    packet_bytes: int = 8192
+    # ring wire format: cast reduce-ring accumulators to bf16 per hop
+    # (local accumulation stays fp32).  ~1.5-2x fewer scatter bytes at
+    # ~sqrt(hops)*2^-9 relative rounding noise — a §Perf (cell 3) knob.
+    wire_bf16: bool = False
+
+    def resolved_channels(self) -> int:
+        if self.mode == CommMode.BSP:
+            return 1
+        if self.mode == CommMode.LCI_SHARED:
+            return 1
+        return max(1, self.n_channels)
+
+
+def parse_mode(name: str) -> CommMode:
+    try:
+        return CommMode(name)
+    except ValueError as e:
+        raise ValueError(
+            f"unknown comm mode {name!r}; pick from "
+            f"{[m.value for m in CommMode]}") from e

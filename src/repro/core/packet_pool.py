@@ -1,0 +1,207 @@
+"""Packet pool (paper §4.1.2) — fixed-size pre-registered buffer management.
+
+The paper's packet pool is a collection of per-thread deques of fixed-size
+pre-registered buffers ("packets"):
+
+* ``get`` pops from the tail of the local deque; when empty it steals *half*
+  of a randomly selected victim's packets from the head (one attempt, then
+  the nonblocking ``get`` fails and ``post_comm`` returns ``retry``).
+* ``put`` pushes to the tail (cache locality: hot packets are reused first).
+* stealing happens at the head end (cold packets), local traffic at the tail.
+
+Two implementations, mirroring :mod:`repro.core.matching`:
+
+1. :class:`HostPacketPool` — Python deques, used by the host-side runtime
+   (message staging for the buffer-copy protocol, serving KV page allocator,
+   aggregation buffers).  Thread safety concerns from the paper (per-deque
+   spinlock) do not arise: the host runtime is single-threaded per rank by
+   construction, and the *contention-free* property the paper buys with
+   try-locks is preserved structurally — each lane owns its deque.
+2. Functional jnp pool (:func:`init_pool` / :func:`pool_get` /
+   :func:`pool_put`) — a fixed-geometry slot pool living inside jitted
+   programs.  Used for MoE expert-capacity slots and paged-KV page
+   allocation, and exercised by the Fig-5 resource benchmark.
+
+Status protocol: ``get`` returns packet id ``-1`` + ``retry`` status on
+exhaustion (paper: "``get`` can be nonblocking and will return a nullptr
+when it fails the first packet stealing attempts").
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .status import ErrorCode, Status, done, retry
+
+
+class HostPacketPool:
+    """Host-side packet pool: per-lane deques + steal-half.
+
+    ``n_lanes`` plays the role of the paper's thread count; each lane owns a
+    deque seeded with ``packets_per_lane`` packet ids.  Packets are plain
+    integer ids into a backing buffer table (``buffer_of``), so "allocation"
+    never copies.
+    """
+
+    def __init__(self, n_lanes: int, packets_per_lane: int,
+                 packet_bytes: int = 8192, seed: int = 0):
+        self.n_lanes = n_lanes
+        self.packet_bytes = packet_bytes
+        self.n_packets = n_lanes * packets_per_lane
+        self._deques = [
+            collections.deque(range(i * packets_per_lane,
+                                    (i + 1) * packets_per_lane))
+            for i in range(n_lanes)
+        ]
+        self._rng = np.random.default_rng(seed)
+        # pre-registered fixed-size buffers (the paper registers them with
+        # the NIC; here registration == preallocation)
+        self.buffer_of = [bytearray(packet_bytes) for _ in range(self.n_packets)]
+        self.steals = 0
+        self.gets = 0
+        self.puts = 0
+
+    def get(self, lane: int) -> tuple[int, Status]:
+        """Pop a packet id; one steal attempt on local exhaustion."""
+        self.gets += 1
+        dq = self._deques[lane]
+        if dq:
+            return dq.pop(), done()          # tail end: cache locality
+        # steal half from a random victim (head end); never pick self —
+        # that would waste the single nonblocking attempt
+        if self.n_lanes == 1:
+            return -1, retry(ErrorCode.RETRY_NOPACKET)
+        victim = (lane + 1 + int(self._rng.integers(self.n_lanes - 1))) \
+            % self.n_lanes
+        vdq = self._deques[victim]
+        n_steal = len(vdq) // 2
+        if n_steal == 0:
+            # a single failed attempt -> retry (nonblocking semantics)
+            return -1, retry(ErrorCode.RETRY_NOPACKET)
+        self.steals += 1
+        for _ in range(n_steal):
+            dq.appendleft(vdq.popleft())     # head end on both sides
+        return dq.pop(), done()
+
+    def put(self, lane: int, packet: int) -> Status:
+        self.puts += 1
+        self._deques[lane].append(packet)    # tail end
+        return done()
+
+    def free_packets(self) -> int:
+        return sum(len(d) for d in self._deques)
+
+
+# ---------------------------------------------------------------------------
+# Functional (in-graph) slot pool.
+#
+# Geometry: ``n_lanes`` lanes x ``lane_cap`` slots holding packet ids.
+#   slots (n_lanes, lane_cap) int32  -- packet ids, -1 == empty position
+#   count (n_lanes,)          int32  -- live entries per lane (stack top)
+#
+# Each lane is a *stack* (the deque's tail end); stealing takes the bottom
+# half of the victim's stack (the head end), preserving the paper's
+# cache-locality split.  All ops are O(lane_cap) vectorized.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SlotPool:
+    slots: jax.Array
+    count: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    SlotPool,
+    lambda p: ((p.slots, p.count), None),
+    lambda _, c: SlotPool(*c))
+
+
+def init_pool(n_lanes: int, packets_per_lane: int,
+              lane_cap: Optional[int] = None) -> SlotPool:
+    """Seed each lane with its own contiguous packet-id range."""
+    cap = lane_cap or n_lanes * packets_per_lane   # worst case: all in one lane
+    ids = np.full((n_lanes, cap), -1, np.int32)
+    for i in range(n_lanes):
+        ids[i, :packets_per_lane] = np.arange(
+            i * packets_per_lane, (i + 1) * packets_per_lane, dtype=np.int32)
+    return SlotPool(slots=jnp.asarray(ids),
+                    count=jnp.full((n_lanes,), packets_per_lane, jnp.int32))
+
+
+def pool_get(pool: SlotPool, lane, steal_seed) -> tuple[SlotPool, jax.Array,
+                                                        jax.Array]:
+    """Functional ``get``: returns (pool', packet_id, status).
+
+    packet_id == -1 and status == IN_GRAPH_RETRY(1) when both the local pop
+    and the single steal attempt fail, mirroring the host pool.
+    """
+    n_lanes, cap = pool.slots.shape
+    lane = jnp.asarray(lane, jnp.int32)
+    cnt = pool.count[lane]
+
+    # --- fast path: local pop from the stack top (deque tail) -------------
+    def local_pop(p: SlotPool):
+        top = p.count[lane] - 1
+        pid = p.slots[lane, top]
+        return (SlotPool(p.slots.at[lane, top].set(-1),
+                         p.count.at[lane].add(-1)),
+                pid, jnp.int32(0))
+
+    # --- slow path: steal half from a pseudo-random victim ----------------
+    def steal(p: SlotPool):
+        victim = (lane + 1 + jnp.asarray(steal_seed, jnp.int32)
+                  % jnp.maximum(n_lanes - 1, 1)) % n_lanes
+        vcnt = p.count[victim]
+        n_steal = vcnt // 2
+        ok = (n_steal > 0) & (victim != lane)
+
+        idx = jnp.arange(cap, dtype=jnp.int32)
+        take = idx < n_steal                       # victim head end
+        stolen = jnp.where(take, p.slots[victim], -1)
+        # compact the victim: shift the remaining entries down
+        remaining = jnp.where((idx >= n_steal) & (idx < vcnt),
+                              p.slots[victim], -1)
+        shifted = jnp.roll(remaining, -n_steal)
+        new_victim = jnp.where(ok, shifted, p.slots[victim])
+        # prepend stolen packets at our head (positions [0, n_steal) shift up)
+        my = p.slots[lane]
+        my_shift = jnp.roll(my, n_steal)
+        pos = idx < n_steal
+        new_mine = jnp.where(ok, jnp.where(pos, stolen, my_shift), my)
+
+        slots = p.slots.at[victim].set(new_victim).at[lane].set(new_mine)
+        count = (p.count.at[victim].add(jnp.where(ok, -n_steal, 0))
+                 .at[lane].add(jnp.where(ok, n_steal, 0)))
+        p2 = SlotPool(slots, count)
+
+        def pop_after(p3):
+            return local_pop(p3)
+
+        def fail(p3):
+            return p3, jnp.int32(-1), jnp.int32(1)   # retry
+
+        return jax.lax.cond(ok, pop_after, fail, p2)
+
+    return jax.lax.cond(cnt > 0, local_pop, steal, pool)
+
+
+def pool_put(pool: SlotPool, lane, packet_id) -> tuple[SlotPool, jax.Array]:
+    """Functional ``put``: push to stack top. Returns (pool', status)."""
+    lane = jnp.asarray(lane, jnp.int32)
+    cnt = pool.count[lane]
+    cap = pool.slots.shape[1]
+    ok = cnt < cap
+    slots = pool.slots.at[lane, jnp.minimum(cnt, cap - 1)].set(
+        jnp.where(ok, jnp.asarray(packet_id, jnp.int32),
+                  pool.slots[lane, jnp.minimum(cnt, cap - 1)]))
+    count = pool.count.at[lane].add(jnp.where(ok, 1, 0))
+    return SlotPool(slots, count), jnp.where(ok, 0, 1).astype(jnp.int32)
+
+
+def free_count(pool: SlotPool) -> jax.Array:
+    return jnp.sum(pool.count)

@@ -1,0 +1,176 @@
+"""``post_comm`` — the unified communication posting operation (paper §3.2.4).
+
+"LCI offers a generic communication posting operation, post_comm.  This
+operation takes the target rank, the local buffer, the message size, and
+the local completion object as positional arguments.  It takes a wide range
+of optional arguments, among which the most important ones include the
+direction, the remote buffer, and the remote completion object."
+
+Table 1 of the paper, implemented verbatim by :func:`post_comm`:
+
+    ======== ============ ================ ===========================
+    direction remote buf   remote comp      meaning
+    ======== ============ ================ ===========================
+    OUT       none         none             send
+    OUT       none         specified        active message
+    OUT       specified    none             RMA put
+    OUT       specified    specified        RMA put with signal
+    IN        none         none             receive
+    IN        none         specified        (invalid)
+    IN        specified    none             RMA get
+    IN        specified    specified        RMA get with signal (not
+                                            implemented — mirrors paper §4.3)
+    ======== ============ ================ ===========================
+
+The five derived operations (``post_send/recv/am/put/get``) are "just
+syntactic sugar for post_comm with the optional arguments set to the
+corresponding values", each with an OFF ``_x`` variant.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, Optional, Sequence
+
+from .matching import MatchingPolicy
+from .off import off
+from .status import FatalError, Status
+
+
+class Direction(enum.Enum):
+    OUT = "out"
+    IN = "in"
+
+
+class CommKind(enum.Enum):
+    SEND = "send"
+    AM = "am"
+    PUT = "put"
+    PUT_SIGNAL = "put_signal"
+    RECV = "recv"
+    GET = "get"
+    GET_SIGNAL = "get_signal"
+
+
+def classify(direction: Direction, remote_buf, remote_comp) -> CommKind:
+    """Table-1 dispatch; raises on the invalid / unimplemented rows."""
+    if direction == Direction.OUT:
+        if remote_buf is None and remote_comp is None:
+            return CommKind.SEND
+        if remote_buf is None:
+            return CommKind.AM
+        if remote_comp is None:
+            return CommKind.PUT
+        return CommKind.PUT_SIGNAL
+    if remote_buf is None and remote_comp is None:
+        return CommKind.RECV
+    if remote_buf is None:
+        raise FatalError("post_comm: direction=IN with a remote completion "
+                         "but no remote buffer is invalid (paper Table 1)")
+    if remote_comp is None:
+        return CommKind.GET
+    # paper §4.3: "Due to the lack of support for RDMA read with
+    # notification in the interconnects we have access to, LCI does not
+    # implement the get with signal communication operation"
+    raise NotImplementedError(
+        "get with signal is not implemented (paper §4.3: no 'RDMA read "
+        "with notification' support on target interconnects)")
+
+
+def payload_nbytes(buf: Any) -> int:
+    """Size of a message payload; supports buffer *lists* (paper §3.3.1)."""
+    if buf is None:
+        return 0
+    if isinstance(buf, (bytes, bytearray, memoryview)):
+        return len(buf)
+    if isinstance(buf, (list, tuple)):
+        return sum(payload_nbytes(b) for b in buf)
+    if hasattr(buf, "nbytes"):
+        return int(buf.nbytes)
+    return len(bytes(buf))
+
+
+@off
+def post_comm(runtime, direction: Direction, rank: int, buf: Any,
+              local_comp=None, *, tag: int = 0, size: Optional[int] = None,
+              remote_buf=None, remote_comp=None, device=None,
+              matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
+              allow_retry: bool = True, user_context: Any = None) -> Status:
+    """Generic posting operation; dispatches on Table 1 and hands the
+    descriptor to the runtime's device path."""
+    kind = classify(direction, remote_buf, remote_comp)
+    return runtime._post(kind=kind, rank=rank, buf=buf, tag=tag,
+                         size=size if size is not None else payload_nbytes(buf),
+                         local_comp=local_comp, remote_buf=remote_buf,
+                         remote_comp=remote_comp, device=device,
+                         matching_policy=matching_policy,
+                         allow_retry=allow_retry, user_context=user_context)
+
+
+# -- derived operations (sugar over post_comm; each has an OFF `.x`) --------
+
+@off
+def post_send(runtime, rank: int, buf: Any, size: Optional[int] = None,
+              tag: int = 0, local_comp=None, *, device=None,
+              matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
+              allow_retry: bool = True) -> Status:
+    return post_comm(runtime, Direction.OUT, rank, buf, local_comp,
+                     tag=tag, size=size, device=device,
+                     matching_policy=matching_policy,
+                     allow_retry=allow_retry)
+
+
+@off
+def post_recv(runtime, rank: int, buf: Any, size: Optional[int] = None,
+              tag: int = 0, local_comp=None, *, device=None,
+              matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
+              allow_retry: bool = True) -> Status:
+    return post_comm(runtime, Direction.IN, rank, buf, local_comp,
+                     tag=tag, size=size, device=device,
+                     matching_policy=matching_policy,
+                     allow_retry=allow_retry)
+
+
+@off
+def post_am(runtime, rank: int, buf: Any, size: Optional[int] = None,
+            local_comp=None, remote_comp=None, *, tag: int = 0, device=None,
+            allow_retry: bool = True) -> Status:
+    if remote_comp is None:
+        raise FatalError("post_am requires a remote completion handle")
+    return post_comm(runtime, Direction.OUT, rank, buf, local_comp,
+                     tag=tag, size=size, remote_comp=remote_comp,
+                     device=device, allow_retry=allow_retry)
+
+
+@off
+def post_put(runtime, rank: int, buf: Any, remote_buf=None,
+             size: Optional[int] = None, local_comp=None, remote_comp=None,
+             *, tag: int = 0, device=None, allow_retry: bool = True
+             ) -> Status:
+    if remote_buf is None:
+        raise FatalError("post_put requires a remote buffer")
+    return post_comm(runtime, Direction.OUT, rank, buf, local_comp,
+                     tag=tag, size=size, remote_buf=remote_buf,
+                     remote_comp=remote_comp, device=device,
+                     allow_retry=allow_retry)
+
+
+@off
+def post_get(runtime, rank: int, buf: Any, remote_buf=None,
+             size: Optional[int] = None, local_comp=None, remote_comp=None,
+             *, tag: int = 0, device=None, allow_retry: bool = True
+             ) -> Status:
+    if remote_buf is None:
+        raise FatalError("post_get requires a remote buffer")
+    return post_comm(runtime, Direction.IN, rank, buf, local_comp,
+                     tag=tag, size=size, remote_buf=remote_buf,
+                     remote_comp=remote_comp, device=device,
+                     allow_retry=allow_retry)
+
+
+# OFF variants under the paper's names
+post_comm_x = post_comm.x
+post_send_x = post_send.x
+post_recv_x = post_recv.x
+post_am_x = post_am.x
+post_put_x = post_put.x
+post_get_x = post_get.x

@@ -1,0 +1,103 @@
+"""LCI status objects — the ternary ``done/posted/retry`` return protocol.
+
+The paper (§3.2.5) defines four categories for every posting operation:
+
+* ``done``   — completed immediately; completion objects will NOT be signaled.
+* ``posted`` — accepted; completion objects will be signaled later.
+* ``retry``  — temporary resource unavailability; caller should resubmit
+  (or do something useful first: aggregate, poll other queues, ...).
+* fatal     — raised as an exception (we mirror that: Python exceptions).
+
+Compared to MPI's binary success/failure this surfaces back-pressure to the
+client.  In LCI-X the same protocol governs trace-time posting (e.g. a send
+with no matching recv yet -> ``posted``; a matched pair -> ``done`` with the
+emitted value) and in-graph functional resources (packet pool exhaustion ->
+``retry`` encoded as a status code in a traced int32).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional
+
+
+class ErrorKind(enum.IntEnum):
+    """Top-level status category (paper §3.2.5)."""
+
+    DONE = 0
+    POSTED = 1
+    RETRY = 2
+
+
+class ErrorCode(enum.IntEnum):
+    """Fine-grained codes within a category — "each category includes
+    multiple error codes to deliver more information"."""
+
+    # done
+    DONE_OK = 0
+    DONE_INLINE = 1            # const-folded / immediately completed comm
+    # posted
+    POSTED_OK = 10
+    POSTED_UNMATCHED = 11      # send/recv inserted into matching engine
+    POSTED_BACKLOG = 12        # moved to backlog queue
+    # retry
+    RETRY_NOPACKET = 20        # packet pool exhausted
+    RETRY_NOSLOT = 21          # capacity slot unavailable (MoE / KV page)
+    RETRY_LOCKED = 22          # try-lock analogue: resource busy
+    RETRY_BACKLOG_FULL = 23
+    RETRY_QUEUE_FULL = 24      # completion queue ring full
+
+
+class FatalError(RuntimeError):
+    """Paper: 'fatal errors are reported through C++ exceptions'."""
+
+
+@dataclasses.dataclass
+class Status:
+    """The ``status_t`` object returned by posting/checking operations.
+
+    When ``kind == DONE`` the payload fields (``value``/``buffer``, ``rank``,
+    ``tag``) carry valid information about the completed operation.
+    """
+
+    kind: ErrorKind
+    code: ErrorCode = ErrorCode.DONE_OK
+    value: Any = None          # delivered payload (traced array or pytree)
+    rank: Optional[int] = None
+    tag: Optional[int] = None
+    user_context: Any = None
+
+    # -- predicates mirroring the paper's is_done / is_posted / is_retry ----
+    def is_done(self) -> bool:
+        return self.kind == ErrorKind.DONE
+
+    def is_posted(self) -> bool:
+        return self.kind == ErrorKind.POSTED
+
+    def is_retry(self) -> bool:
+        return self.kind == ErrorKind.RETRY
+
+    def get_buffer(self):
+        if not self.is_done():
+            raise FatalError("status payload only valid when done")
+        return self.value
+
+
+def done(value: Any = None, *, code: ErrorCode = ErrorCode.DONE_OK,
+         rank: int | None = None, tag: int | None = None) -> Status:
+    return Status(ErrorKind.DONE, code, value=value, rank=rank, tag=tag)
+
+
+def posted(*, code: ErrorCode = ErrorCode.POSTED_OK, ctx: Any = None) -> Status:
+    return Status(ErrorKind.POSTED, code, user_context=ctx)
+
+
+def retry(code: ErrorCode = ErrorCode.RETRY_LOCKED) -> Status:
+    return Status(ErrorKind.RETRY, code)
+
+
+# Integer encodings for *in-graph* (traced) status values. Functional
+# resources (packet pool, completion queue, ...) return an int32 status lane
+# so that jitted code can branch on it with lax.cond / jnp.where.
+IN_GRAPH_DONE = 0
+IN_GRAPH_RETRY = 1

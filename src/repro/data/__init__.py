@@ -1,0 +1,2 @@
+from .pipeline import (SyntheticPipeline, TokenFilePipeline, stub_frames,
+                       stub_image_embeds)

@@ -1,0 +1,3 @@
+"""Distributed layer: comm abstraction, sharding rules, pipeline, and
+resilience features (compression, elastic resharding, stragglers)."""
+from .comm import Comm, local_comm

@@ -1,0 +1,226 @@
+"""The ``Comm`` object — how model code talks to the LCI-X layer.
+
+Model code is written in *local view* (the shapes one device sees inside
+``shard_map``), and every data movement goes through a :class:`Comm`, which
+is the in-graph analogue of an LCI *device*: a full set of communication
+resources the caller posts operations to.  Three deployments of the same
+model code:
+
+* **local** (``local_comm()``) — no mesh axes; every collective degenerates
+  to its local computation.  Used by CPU smoke tests and single-chip runs.
+* **shard_map manual** — axes bound; collectives lower to the explicit ring
+  schedules of :mod:`repro.core.collectives` in the mode picked by
+  ``CommConfig`` (BSP = paper's bulk-synchronous baseline, LCI_* = the
+  paper's contribution).
+* **GSPMD** (``model_axis=None`` but constraints on) — the escape hatch for
+  comparing against XLA's automatic SPMD partitioner (§Perf).
+
+Axis conventions (DESIGN.md §5): ``model`` = TP/EP/SP axis; ``data`` =
+DP/FSDP axis (a tuple like ``("pod", "data")`` on the multi-pod mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as C
+from repro.core.modes import CommConfig, CommMode
+
+AxisSpec = Union[str, Tuple[str, ...], None]
+
+
+def _axes(a: AxisSpec) -> Tuple[str, ...]:
+    if a is None:
+        return ()
+    return (a,) if isinstance(a, str) else tuple(a)
+
+
+@dataclasses.dataclass(frozen=True)
+class Comm:
+    """In-graph communication device handed to model code."""
+
+    config: CommConfig
+    model_axis: AxisSpec = None
+    data_axis: AxisSpec = None
+    fsdp: bool = True          # gather FSDP-dim weights in weight()
+
+    # -- axis sizes (1 when unbound) ----------------------------------------
+    @property
+    def tp(self) -> int:
+        return math.prod([lax.axis_size(a)
+                          for a in _axes(self.model_axis)] or [1])
+
+    @property
+    def dp(self) -> int:
+        return math.prod([lax.axis_size(a)
+                          for a in _axes(self.data_axis)] or [1])
+
+    def _one_model_axis(self) -> Optional[str]:
+        ax = _axes(self.model_axis)
+        if len(ax) > 1:
+            raise ValueError("model axis must be a single mesh axis")
+        return ax[0] if ax else None
+
+    # -- tensor-parallel matmuls (SP <-> TP boundary) ------------------------
+    def ag_matmul(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """``allgather(x, axis=0 over model) @ w`` — column-parallel entry.
+        x: (s_local, ..., k) seq-sharded; w: (k, n_local)."""
+        ax = self._one_model_axis()
+        if ax is None:
+            return jnp.tensordot(x, w, axes=1).astype(x.dtype)
+        return C.all_gather_matmul(x, w, ax, self.config)
+
+    def matmul_rs(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """``reduce_scatter(x @ w, axis=0 over model)`` — row-parallel exit.
+        x: (s, ..., k_local); w: (k_local, n).  Returns (s/TP, ..., n)."""
+        ax = self._one_model_axis()
+        if ax is None:
+            return jnp.tensordot(x, w, axes=1).astype(x.dtype)
+        return C.matmul_reduce_scatter(x, w, ax, self.config)
+
+    def matmul_ar(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """``allreduce(x @ w)`` — row-parallel exit without SP (decode path
+        where s is tiny and scattering it is not possible)."""
+        ax = self._one_model_axis()
+        y = jnp.tensordot(x, w, axes=1).astype(x.dtype)
+        if ax is None:
+            return y
+        return lax.psum(y, ax)
+
+    # -- raw collectives over the model axis ---------------------------------
+    def ag_seq(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
+        """All-gather the SP (sequence) dim back to full length."""
+        ax = self._one_model_axis()
+        if ax is None:
+            return x
+        return C.all_gather(x, ax, self.config, axis=axis)
+
+    def rs_seq(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
+        ax = self._one_model_axis()
+        if ax is None:
+            return x
+        return C.reduce_scatter(x, ax, self.config, axis=axis)
+
+    def psum_model(self, x: jax.Array) -> jax.Array:
+        ax = self._one_model_axis()
+        if ax is None:
+            return x
+        return lax.psum(x, ax)
+
+    def psum_model_ge(self, x: jax.Array) -> jax.Array:
+        """Gradient-exact psum over the model axis.
+
+        Under ``shard_map(check_vma=False)`` the transpose of ``psum`` is
+        ``psum``, which overcounts cotangents by the axis size when the
+        consumer (the loss) is *replicated* across the axis.  For that
+        replicated-consumer case the exact transpose is identity: each
+        rank's operand enters the sum with coefficient one.  Forward value
+        is the psum; backward passes the cotangent through untouched::
+
+            y = x + stop_gradient(psum(x) - x)
+
+        Use this (not psum_model) on every differentiable reduction that
+        feeds the replicated loss (vocab-parallel CE, SSM norm stats,
+        router aux means) — tests/helpers/dist_equivalence.py asserts the
+        resulting distributed grads equal the single-device oracle.
+        """
+        ax = self._one_model_axis()
+        if ax is None:
+            return x
+        return x + lax.stop_gradient(lax.psum(x, ax) - x)
+
+    def pmax_model(self, x: jax.Array) -> jax.Array:
+        ax = self._one_model_axis()
+        if ax is None:
+            return x
+        return lax.pmax(x, ax)
+
+    def a2a(self, x: jax.Array, *, split_axis: int, concat_axis: int
+            ) -> jax.Array:
+        """All-to-all over the model axis (MoE dispatch/combine)."""
+        ax = self._one_model_axis()
+        if ax is None:
+            return x
+        return C.all_to_all(x, ax, split_axis=split_axis,
+                            concat_axis=concat_axis, config=self.config)
+
+    def model_index(self) -> jax.Array:
+        ax = self._one_model_axis()
+        if ax is None:
+            return jnp.zeros((), jnp.int32)
+        return lax.axis_index(ax)
+
+    # -- FSDP (data axis) weight gather --------------------------------------
+    def weight(self, w: jax.Array, *, fsdp_axis: Optional[int]) -> jax.Array:
+        """Gather a weight's FSDP-sharded dim back to full size.
+
+        This is the zero-copy bulk-transfer path (rendezvous protocol): in
+        LCI modes it is a chunked ppermute ring whose steps XLA overlaps
+        with the previous layer's compute; its VJP is the matching ring
+        reduce(-scatter) of the weight gradient.
+        """
+        if fsdp_axis is None or not self.fsdp:
+            return w
+        axes = _axes(self.data_axis)
+        if not axes:
+            return w
+        for a in reversed(axes):          # innermost axis gathered first
+            w = C.all_gather(w, a, self.config, axis=fsdp_axis)
+        return w
+
+    # -- data-parallel reductions (loss/grad sync) ----------------------------
+    def psum_data(self, x: jax.Array) -> jax.Array:
+        axes = _axes(self.data_axis)
+        for a in axes:
+            x = lax.psum(x, a)
+        return x
+
+    def data_index(self) -> jax.Array:
+        """Flat index along the (possibly multi-axis) data dimension."""
+        idx = jnp.zeros((), jnp.int32)
+        for a in _axes(self.data_axis):
+            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        return idx
+
+    def ag_data(self, x: jax.Array, *, axis: int) -> jax.Array:
+        """All-gather over the data axes along ``axis`` (tiny tensors —
+        the 2D-TP serving column reassembly)."""
+        for a in reversed(_axes(self.data_axis)):
+            x = C.all_gather(x, a, self.config, axis=axis)
+        return x
+
+    def pmean_data(self, x: jax.Array) -> jax.Array:
+        axes = _axes(self.data_axis)
+        if not axes:
+            return x
+        return jax.tree_util.tree_map(
+            lambda v: self.psum_data(v) / self.dp, x)
+
+    def psum_all(self, x: jax.Array) -> jax.Array:
+        return self.psum_model(self.psum_data(x))
+
+    def pmean_all(self, x: jax.Array) -> jax.Array:
+        """Mean over every mesh axis — makes a metric fully replicated."""
+        n = self.tp * self.dp
+        return jax.tree_util.tree_map(
+            lambda v: self.psum_all(v) / n, x)
+
+    # -- barrier (paper §6 primitive, used by the launcher) -------------------
+    def barrier(self) -> jax.Array:
+        ax = self._one_model_axis()
+        tok = jnp.ones((), jnp.int32)
+        if ax is not None:
+            tok = C.dissemination_barrier(ax)
+        for a in _axes(self.data_axis):
+            tok = tok * 0 + C.dissemination_barrier(a)
+        return tok
+
+
+def local_comm(config: Optional[CommConfig] = None) -> Comm:
+    """A Comm with no mesh axes: collectives degenerate to local compute."""
+    return Comm(config or CommConfig(), model_axis=None, data_axis=None)

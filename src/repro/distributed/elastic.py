@@ -1,0 +1,63 @@
+"""Elastic scaling: reshard a running job onto a different mesh.
+
+The mechanism (DESIGN.md §7): checkpoints store *global* arrays with a
+manifest; :func:`reshard_state` places them under the NEW mesh's
+NamedShardings (``jax.device_put`` re-chunks).  The launcher flow on a
+node failure / resize:
+
+    1. watchdog flags dead hosts (distributed.straggler.HostWatchdog)
+    2. survivors agree on the new mesh (next divisor-compatible shape)
+    3. restore_resharded(ckpt, tree, new_shardings)
+    4. data pipeline replays from manifest["next_step"] — bit-exact
+
+``compatible_meshes`` enumerates legal (data, model) shapes for a config
+(the model axis must divide every TP-sharded dim).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.common import ModelConfig, shard_decisions
+
+
+def compatible_meshes(cfg: ModelConfig, n_devices: int
+                      ) -> List[Tuple[int, int]]:
+    """All (data, model) shapes on n_devices this config can run under."""
+    dec = shard_decisions(cfg)
+    out = []
+    for model in range(1, n_devices + 1):
+        if n_devices % model:
+            continue
+        data = n_devices // model
+        if dec["attn"] and model > 1 and cfg.n_heads % model:
+            continue
+        if dec["ssm"] and model > 1 and cfg.ssm_heads % model:
+            continue
+        if cfg.n_experts and model > 1 and cfg.n_experts % model:
+            continue
+        if cfg.padded_vocab % model:
+            continue
+        out.append((data, model))
+    return out
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Place every leaf with the new mesh's sharding (re-chunking move)."""
+    return jax.tree_util.tree_map(
+        lambda x, sh: jax.device_put(x, sh), state, shardings)
+
+
+def shrink_mesh(old_shape: Tuple[int, ...], dead_fraction: float,
+                cfg: Optional[ModelConfig] = None
+                ) -> Tuple[int, ...]:
+    """Pick the largest compatible mesh after losing ``dead_fraction``."""
+    import math
+    n_old = math.prod(old_shape)
+    target = int(n_old * (1 - dead_fraction))
+    # keep the model axis, shrink data (DP is the elastic axis)
+    model = old_shape[-1]
+    data = max(1, target // model)
+    return (data, model)

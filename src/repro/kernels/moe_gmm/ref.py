@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the grouped-matmul kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x, w1, w2, *, act: str = "swiglu"):
+    h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w1.astype(jnp.float32))
+    if act == "swiglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    elif act == "geglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.gelu(g, approximate=True) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    o = jnp.einsum("ecf,efd->ecd", h, w2.astype(jnp.float32))
+    return o.astype(x.dtype)

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the RMSNorm kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rmsnorm_tpu
+from .ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
+    """x (..., d); w (d,)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = rmsnorm_tpu(x2, w, eps=eps, block_rows=block_rows,
+                      interpret=jax.default_backend() != "tpu")
+    return out.reshape(shape)

@@ -1,0 +1,102 @@
+"""Mamba2 SSD Pallas TPU kernel — chunked scan with VMEM-resident state.
+
+Grid = (batch, heads, chunks) with the chunk dimension ``arbitrary``
+(sequential): the (N, P) recurrent state lives in VMEM scratch across
+chunk steps, so the inter-chunk recurrence never round-trips HBM — the
+TPU-native replacement for the GPU kernel's shared-memory state.  Each
+step does the intra-chunk quadratic part as (L×L)·(L×P) MXU matmuls.
+
+Layout: x (b, h, s, p); dt (b, h, s); B/C (b, g, s, n); per-head A_log/D.
+Chunk length L is the MXU tile (default 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, d_ref, o_ref,
+                state_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L,)
+    a = -jnp.exp(alog_ref[0, 0].astype(jnp.float32))   # scalar
+    b = b_ref[0, 0].astype(jnp.float32)          # (L, N)
+    c = c_ref[0, 0].astype(jnp.float32)          # (L, N)
+    d_skip = d_ref[0, 0].astype(jnp.float32)     # scalar
+
+    la = dt * a                                  # (L,) log decay
+    cum = jnp.cumsum(la)                         # (L,)
+    xbar = x * dt[:, None]
+
+    # intra-chunk: Y_diag[l] = Σ_{j<=l} (C_l·B_j) e^{cum_l-cum_j} xbar_j
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    li = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.where(li >= lj, scores * decay, 0.0)
+    y = jax.lax.dot_general(m, xbar, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # incoming state contribution: C_l · H_in · e^{cum_l}
+    h_in = state_scr[...]                        # (N, P)
+    y = y + jax.lax.dot_general(
+        c * jnp.exp(cum)[:, None], h_in, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    o_ref[0, 0] = (y + d_skip * x).astype(o_ref.dtype)
+
+    # state update: H_out = e^{cum_last} H_in + Σ_j e^{cum_last-cum_j} B_j⊗xbar_j
+    dstate = jnp.exp(cum[-1] - cum)              # (L,)
+    s_new = jax.lax.dot_general(
+        b * dstate[:, None], xbar, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (N, P)
+    state_scr[...] = jnp.exp(cum[-1]) * h_in + s_new
+
+
+def ssd_scan_tpu(x, dt, a_log, b, c, d_skip, *, chunk: int = 128,
+                 interpret: bool = True):
+    """x (bs, h, s, p); dt (bs, h, s); a_log/d_skip (h,);
+    b/c (bs, g, s, n).  Returns y (bs, h, s, p)."""
+    bs, h, s, p = x.shape
+    g, n = b.shape[1], b.shape[3]
+    assert h % g == 0
+    r = h // g
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    grid = (bs, h, n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (0, hi)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, r=r: (bi, hi // r, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, r=r: (bi, hi // r, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (0, hi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log[None, :], b, c, d_skip[None, :])

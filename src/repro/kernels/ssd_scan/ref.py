@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD kernel: the naive per-step recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip):
+    """x (bs, h, s, p); dt (bs, h, s); b/c (bs, g, s, n) -> (bs, h, s, p)."""
+    bs, h, s, p = x.shape
+    g, n = b.shape[1], b.shape[3]
+    r = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bf = jnp.repeat(b.astype(jnp.float32), r, axis=1)   # (bs, h, s, n)
+    cf = jnp.repeat(c.astype(jnp.float32), r, axis=1)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(hstate, t):
+        at = jnp.exp(dtf[:, :, t] * a[None, :])         # (bs, h)
+        upd = jnp.einsum("bhn,bhp->bhnp", bf[:, :, t],
+                         xf[:, :, t] * dtf[:, :, t][..., None])
+        hstate = at[..., None, None] * hstate + upd
+        yt = jnp.einsum("bhn,bhnp->bhp", cf[:, :, t], hstate)
+        return hstate, yt
+
+    h0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    ys = jnp.moveaxis(ys, 0, 2)                         # (bs, h, s, p)
+    ys = ys + d_skip.astype(jnp.float32)[None, :, None, None] * xf
+    return ys.astype(x.dtype)

@@ -1,0 +1,125 @@
+"""Training launcher.
+
+CPU-runnable end to end (smoke configs / small device counts), and the
+same code path the dry-run proves out for the production meshes.
+
+    # local single-device run of a reduced config
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+        --steps 50
+
+    # 8 simulated devices, (2,4) mesh, LCI-dedicated collectives
+    REPRO_DEVICES=8 PYTHONPATH=src python -m repro.launch.train \
+        --arch olmo-1b --smoke --steps 20 --mesh 2x4 --mode lci_dedicated
+
+Checkpoint/restart: pass --ckpt-dir; rerunning resumes from the last
+committed step with exact data replay.
+"""
+import os
+
+if os.environ.get("REPRO_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DEVICES"])
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke
+from repro.core.modes import CommConfig, parse_mode
+from repro.data import SyntheticPipeline, stub_frames, stub_image_embeds
+from repro.distributed.comm import Comm, local_comm
+from repro.launch.mesh import shard
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.train import make_train_step, train_state_init
+from repro.train.loop import LoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 2x4 => (data=2, model=4); empty = local")
+    ap.add_argument("--mode", default="lci_dedicated")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--metrics-csv", default="")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=cosine_schedule(args.lr, 10, args.steps))
+    state, specs = train_state_init(model, jax.random.PRNGKey(0), opt)
+
+    pipe = SyntheticPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                             global_batch=args.batch)
+
+    def extras(step):
+        out = {}
+        if cfg.family == "vlm":
+            out["image_embeds"] = stub_image_embeds(
+                max(cfg.n_image_tokens, 4), args.batch, cfg.d_model, step
+            ).astype(np.float32)
+        if cfg.is_encdec:
+            t = max(((cfg.n_audio_frames + 15) // 16) * 16, 16)
+            out["frames"] = stub_frames(t, args.batch, cfg.d_model, step
+                                        ).astype(np.float32)
+        return {k: jnp.asarray(v, cfg.dtype) for k, v in out.items()}
+
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        comm = Comm(CommConfig(mode=parse_mode(args.mode)),
+                    model_axis="model", data_axis="data",
+                    fsdp=cfg.fsdp_params)
+        step_inner = make_train_step(model, specs, opt, comm)
+        pspecs = jax.tree_util.tree_map(lambda sp: sp.pspec(), specs)
+        from repro.optim.adamw import OptState
+        from repro.train.step import TrainState
+        sspecs = TrainState(pspecs, OptState(P(), pspecs, pspecs, pspecs))
+        bspec = {"tokens": P("model", "data"), "labels": P("model", "data")}
+        if cfg.family == "vlm":
+            bspec["image_embeds"] = P(None, "data", None)
+        if cfg.is_encdec:
+            bspec["frames"] = P("model", "data", None)
+        mkeys = ("loss", "ce", "ntok", "aux_lb", "aux_z", "dropped_frac",
+                 "grad_norm")
+        step_fn = jax.jit(jax.shard_map(
+            step_inner, mesh=mesh, in_specs=(sspecs, bspec),
+            out_specs=(sspecs, {k: P() for k in mkeys}), check_vma=False),
+            donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(make_train_step(model, specs, opt),
+                          donate_argnums=(0,))
+
+    def transform(batch, step):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        b.update(extras(step))
+        return b
+
+    loop_cfg = LoopConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir or None,
+        ckpt_every=args.ckpt_every,
+        metrics_csv=args.metrics_csv or None)
+    t0 = time.time()
+    state, hist = train_loop(state, step_fn, pipe, loop_cfg,
+                             batch_transform=transform)
+    dt = time.time() - t0
+    print(f"[train] {args.steps} steps in {dt:.1f}s; "
+          f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: dense/GQA/SWA transformers, MoE, Mamba2 SSD, Hymba hybrid,
+VLM cross-attention, Whisper encoder-decoder — all comm-parameterized."""
+from .common import ModelConfig, ParamSpec
+# registry imported lazily (populated as model families land)

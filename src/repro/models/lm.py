@@ -1,0 +1,344 @@
+"""Full language models: init + loss for every assigned architecture family.
+
+Layer stacks are ``lax.scan``-rolled over stacked (L, ...) parameter
+pytrees so that HLO size and compile time are O(1) in depth — a 104B-param
+64-layer config compiles the same program as a 4-layer smoke config.  The
+scan body is optionally ``jax.checkpoint``-ed (remat) for activation
+memory.  All data movement inside blocks goes through ``Comm`` (LCI-X).
+
+Batch convention (seq-major local view):
+    tokens  (s_local, b)   int32
+    labels  (s_local, b)   int32   (-100 = ignore)
+    [frames (t_local, b, d)]        audio stub (whisper)
+    [image_embeds (ti, b, d)]       vision stub (llama-3.2-vision)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.comm import Comm
+from .blocks import (TPPlan, attention_op, init_attention, init_mlp,
+                     layer_window, swa_attention_op, tp_plan)
+from .common import ModelConfig, ParamFactory, ParamSpec
+from .layers import (apply_norm, embed_tokens, lm_head_loss, mlp_block,
+                     rms_norm, sinusoidal_positions)
+from .moe import init_moe, moe_block
+from .ssm import init_ssm, ssm_op
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_norm(pf: ParamFactory, cfg: ModelConfig, name: str, L: int):
+    if cfg.norm == "layernorm_np":
+        return {}                          # OLMo: non-parametric, no weight
+    return {name: pf.ones(name, (L, cfg.d_model), stacked=True)}
+
+
+def _init_layer_stack(pf: ParamFactory, cfg: ModelConfig, L: int,
+                      *, causal_attn: bool = True) -> Dict[str, jax.Array]:
+    """One homogeneous stack of L layers for the config's family."""
+    p: Dict[str, jax.Array] = {}
+    p.update(_init_norm(pf, cfg, "norm1", L))
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        p.update(init_attention(pf, cfg, stacked_layers=L))
+    if cfg.family in ("ssm", "hybrid"):
+        p.update(init_ssm(pf, cfg, stacked_layers=L))
+    if cfg.family == "hybrid":
+        p["mix_norm_a"] = pf.ones("mix_norm_a", (L, cfg.d_model),
+                                  stacked=True)
+        p["mix_norm_s"] = pf.ones("mix_norm_s", (L, cfg.d_model),
+                                  stacked=True)
+    if cfg.family == "moe":
+        p.update(_init_norm(pf, cfg, "norm2", L))
+        p.update(init_moe(pf, cfg, stacked_layers=L))
+        if cfg.shared_expert_ff:
+            p.update(init_mlp(pf, cfg, prefix="shared_", stacked_layers=L,
+                              d_ff=cfg.shared_expert_ff))
+    elif cfg.family != "ssm" and cfg.d_ff and not cfg.parallel_block:
+        p.update(_init_norm(pf, cfg, "norm2", L))
+        p.update(init_mlp(pf, cfg, stacked_layers=L))
+    elif cfg.parallel_block and cfg.d_ff:
+        p.update(init_mlp(pf, cfg, stacked_layers=L))   # shares norm1
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (params, specs) — parallel pytrees."""
+    pf = ParamFactory(key, cfg.dtype, fsdp=cfg.fsdp_params)
+    d = cfg.d_model
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    def grab(sub: Dict[str, jax.Array], dest_key: str):
+        params[dest_key] = sub
+        specs[dest_key] = {k: pf.specs[k] for k in sub}
+        pf.specs.clear()
+
+    # embedding: vocab (padded) TP-sharded, features FSDP-sharded
+    params["emb"] = pf.dense("emb", (cfg.padded_vocab, d), tp_axis=0,
+                             fsdp_axis=1, stacked=False, scale=1.0)
+    specs["emb"] = pf.specs.pop("emb")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = pf.dense("lm_head", (cfg.padded_vocab, d),
+                                     tp_axis=0, fsdp_axis=1, stacked=False)
+        specs["lm_head"] = pf.specs.pop("lm_head")
+    params["final_norm"] = pf.ones("final_norm", (d,), stacked=False)
+    specs["final_norm"] = pf.specs.pop("final_norm")
+
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        n_self = cfg.n_layers - n_cross
+        grab(_init_layer_stack(pf, cfg, n_self), "layers")
+        cp: Dict[str, jax.Array] = {}
+        cp.update({"normx": pf.ones("normx", (n_cross, d), stacked=True)})
+        cp.update(init_attention(pf, cfg, prefix="x_",
+                                 stacked_layers=n_cross))
+        cp["gate_attn"] = pf.zeros("gate_attn", (n_cross,), stacked=True,
+                                   dtype=jnp.float32)
+        cp.update({"normm": pf.ones("normm", (n_cross, d), stacked=True)})
+        cp.update(init_mlp(pf, cfg, prefix="xm_", stacked_layers=n_cross))
+        cp["gate_mlp"] = pf.zeros("gate_mlp", (n_cross,), stacked=True,
+                                  dtype=jnp.float32)
+        grab(cp, "cross_layers")
+    elif cfg.is_encdec:
+        grab(_init_layer_stack(pf, cfg, cfg.encoder_layers), "encoder")
+        params["enc_final_norm"] = pf.ones("enc_final_norm", (d,),
+                                           stacked=False)
+        specs["enc_final_norm"] = pf.specs.pop("enc_final_norm")
+        dp: Dict[str, jax.Array] = {}
+        L = cfg.n_layers
+        dp.update(_init_norm(pf, cfg, "norm1", L))
+        dp.update(init_attention(pf, cfg, stacked_layers=L))
+        dp.update({"normx": pf.ones("normx", (L, d), stacked=True)})
+        dp.update(init_attention(pf, cfg, prefix="x_", stacked_layers=L))
+        dp.update(_init_norm(pf, cfg, "norm2", L))
+        dp.update(init_mlp(pf, cfg, stacked_layers=L))
+        grab(dp, "layers")
+    else:
+        grab(_init_layer_stack(pf, cfg, cfg.n_layers), "layers")
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# blocks (scan bodies)
+# ---------------------------------------------------------------------------
+
+def _mlp_op(x, lp, cfg, comm, prefix: str = "") -> jax.Array:
+    if cfg.mlp in ("swiglu", "geglu"):
+        w_in = jnp.concatenate(
+            [comm.weight(lp[prefix + "w_gate"], fsdp_axis=0),
+             comm.weight(lp[prefix + "w_up"], fsdp_axis=0)], axis=1)
+    else:
+        w_in = comm.weight(lp[prefix + "w_in"], fsdp_axis=0)
+    w_out = comm.weight(lp[prefix + "w_out"], fsdp_axis=1)
+    if not cfg.tp_mlp:
+        # SP-only MLP: weights replicated over model, tokens stay
+        # seq-sharded — a pointwise op with ZERO collectives
+        from .layers import mlp_activation
+        h = mlp_activation(cfg.mlp, jnp.tensordot(x, w_in, axes=1))
+        return jnp.tensordot(h, w_out, axes=1)
+    return mlp_block(x, w_in, w_out, cfg.mlp, comm)
+
+
+def _decoder_block(x, lp, idx, cfg: ModelConfig, comm: Comm, plan: TPPlan,
+                   q_offset, memory=None) -> Tuple[jax.Array, Dict]:
+    """One decoder layer of any family; returns (x', aux)."""
+    aux: Dict[str, jax.Array] = {}
+    h = apply_norm(cfg.norm, x, lp.get("norm1"))
+
+    if cfg.family == "ssm":
+        return x + ssm_op(h, lp, cfg, comm, plan), aux
+
+    if cfg.family == "hybrid":
+        a_out = swa_attention_op(h, lp, cfg, comm, plan, layer_idx=idx,
+                                 q_offset=q_offset)
+        s_out = ssm_op(h, lp, cfg, comm, plan)
+        mix = 0.5 * (rms_norm(a_out, lp["mix_norm_a"])
+                     + rms_norm(s_out, lp["mix_norm_s"]))
+        x = x + mix
+        h2 = apply_norm(cfg.norm, x, lp.get("norm2"))
+        return x + _mlp_op(h2, lp, cfg, comm), aux
+
+    attn = swa_attention_op(h, lp, cfg, comm, plan, layer_idx=idx,
+                            q_offset=q_offset)
+    if cfg.parallel_block:                       # Cohere: attn ∥ mlp
+        return x + attn + _mlp_op(h, lp, cfg, comm), aux
+
+    x = x + attn
+    if memory is not None and "x_wq" in lp:      # enc-dec cross-attention
+        hx = rms_norm(x, lp["normx"])
+        x = x + attention_op(hx, lp, cfg, comm, plan, window=0,
+                             q_offset=q_offset, memory=memory, prefix="x_")
+    h2 = apply_norm(cfg.norm, x, lp.get("norm2"))
+    if cfg.family == "moe":
+        moe_out, aux = moe_block(h2, lp, cfg, comm)
+        if cfg.shared_expert_ff:
+            moe_out = moe_out + _mlp_op(h2, lp, cfg, comm, prefix="shared_")
+        return x + moe_out, aux
+    return x + _mlp_op(h2, lp, cfg, comm), aux
+
+
+def _cross_block(x, lp, cfg, comm, plan, q_offset, memory):
+    """Gated cross-attention layer (llama-3.2-vision style)."""
+    hx = rms_norm(x, lp["normx"])
+    attn = attention_op(hx, lp, cfg, comm, plan, window=0,
+                        q_offset=q_offset, memory=memory, prefix="x_")
+    x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * attn
+    hm = rms_norm(x, lp["normm"])
+    ff = _mlp_op(hm, lp, cfg, comm, prefix="xm_")
+    return x + jnp.tanh(lp["gate_mlp"]).astype(x.dtype) * ff
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+_AUX_KEYS = ("aux_lb", "aux_z", "dropped_frac")
+
+
+def _scan_stack(x, stack, cfg, comm, plan, q_offset, *, body, remat: bool,
+                length: int):
+    idxs = jnp.arange(length, dtype=jnp.int32)
+
+    def fn(carry, sl):
+        xc, aux_acc = carry
+        idx, lp = sl
+        xc, aux = body(xc, lp, idx)
+        aux_acc = {k: aux_acc[k] + aux.get(k, 0.0) for k in _AUX_KEYS}
+        return (xc, aux_acc), ()
+
+    if remat:
+        fn = jax.checkpoint(fn, prevent_cse=False)
+    aux0 = {k: jnp.zeros((), jnp.float32) for k in _AUX_KEYS}
+    (x, aux), _ = jax.lax.scan(fn, (x, aux0), (idxs, stack))
+    return x, aux
+
+
+def forward(params: Dict[str, Any], batch: Dict[str, jax.Array],
+            cfg: ModelConfig, comm: Comm, *, remat: bool = True
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (x_full (s, b, d) post-final-norm full-sequence, aux)."""
+    plan = tp_plan(cfg, comm.tp)
+    tokens = batch["tokens"]
+    s_l, b = tokens.shape
+    q_offset = comm.model_index() * s_l
+
+    emb = comm.weight(params["emb"], fsdp_axis=1)
+    x = embed_tokens(tokens, emb, comm,
+                     scale_by_sqrt_dim=cfg.name.startswith("gemma"))
+
+    memory = None
+    if cfg.family == "vlm":
+        memory = batch["image_embeds"]              # (ti, b, d) replicated
+    if cfg.is_encdec:
+        memory = _encode(params, batch, cfg, comm, plan, remat=remat)
+
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1              # self layers per block
+        stack = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_cross, per) + a.shape[1:]),
+            params["layers"])
+        cstack = params["cross_layers"]
+        mem = memory
+
+        def superblock(xc, lp_pair, idx):
+            self_lp, cross_lp = lp_pair
+
+            def inner(xc2, sl):
+                j, lp = sl
+                y, _ = _decoder_block(xc2, lp, idx * per + j, cfg, comm,
+                                      plan, q_offset)
+                return y, ()
+            xc, _ = jax.lax.scan(
+                inner, xc, (jnp.arange(per, dtype=jnp.int32), self_lp))
+            xc = _cross_block(xc, cross_lp, cfg, comm, plan, q_offset, mem)
+            return xc, {}
+
+        x, aux = _scan_stack(
+            x, (stack, cstack), cfg, comm, plan, q_offset,
+            body=lambda xc, lp, idx: superblock(xc, lp, idx),
+            remat=remat, length=n_cross)
+    else:
+        mem = memory
+
+        def body(xc, lp, idx):
+            return _decoder_block(xc, lp, idx, cfg, comm, plan, q_offset,
+                                  memory=mem)
+
+        x, aux = _scan_stack(x, params["layers"], cfg, comm, plan,
+                             q_offset, body=body, remat=remat,
+                             length=cfg.n_layers)
+
+    x = apply_norm("rmsnorm" if cfg.norm == "rmsnorm" else "layernorm",
+                   x, params["final_norm"])
+    x = comm.ag_seq(x)                              # full seq for the head
+    n_layers = max(cfg.n_layers, 1)
+    # aux terms (router losses) are computed from *local* tokens, so they
+    # vary across the model axis; grad-exact-mean them so the total loss is
+    # replicated (required for exact distributed gradients — see
+    # Comm.psum_model_ge).
+    tp = comm.tp
+    aux = {k: comm.psum_model_ge(v / n_layers) / tp for k, v in aux.items()}
+    return x, aux
+
+
+def _encode(params, batch, cfg, comm, plan, *, remat: bool) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings -> full memory."""
+    frames = batch["frames"]                        # (t_local, b, d)
+    t_l, b, d = frames.shape
+    offset = comm.model_index() * t_l
+    pos = sinusoidal_positions(t_l, d, offset=offset).astype(frames.dtype)
+    x = frames + pos[:, None, :]
+
+    def body(xc, lp, idx):
+        h = apply_norm(cfg.norm, xc, lp.get("norm1"))
+        attn = attention_op(h, lp, cfg, comm, plan, window=0, q_offset=0,
+                            causal=False)
+        xc = xc + attn
+        h2 = apply_norm(cfg.norm, xc, lp.get("norm2"))
+        return xc + _mlp_op(h2, lp, cfg, comm), {}
+
+    x, _ = _scan_stack(x, params["encoder"], cfg, comm, plan, 0,
+                       body=body, remat=remat, length=cfg.encoder_layers)
+    x = apply_norm("rmsnorm" if cfg.norm == "rmsnorm" else "layernorm",
+                   x, params["enc_final_norm"])
+    return comm.ag_seq(x)                           # memory: (t, b, d)
+
+
+def loss_and_metrics(params, batch, cfg: ModelConfig, comm: Comm, *,
+                     remat: bool = True, loss_chunk: int = 1024
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean CE (+ router aux) over this data shard; caller pmean's."""
+    x, aux = forward(params, batch, cfg, comm, remat=remat)
+    labels = comm.ag_seq(batch["labels"])           # (s, b)
+    head = params.get("lm_head", params["emb"])
+    head = comm.weight(head, fsdp_axis=1)
+
+    s = x.shape[0]
+    ck = min(loss_chunk, s)
+    while s % ck:
+        ck -= 1
+    nck = s // ck
+
+    def chunk_loss(args):
+        xb, lb = args
+        return lm_head_loss(xb, head, lb, comm, real_vocab=cfg.vocab)
+
+    sums, ns = jax.lax.map(
+        chunk_loss, (x.reshape(nck, ck, *x.shape[1:]),
+                     labels.reshape(nck, ck, *labels.shape[1:])))
+    total, n = sums.sum(), ns.sum()
+    ce = total / jnp.maximum(n, 1)
+    loss = (ce + cfg.router_aux_coef * aux["aux_lb"]
+            + cfg.router_z_coef * aux["aux_z"])
+    metrics = {"loss": loss, "ce": ce, "ntok": n, **aux}
+    return loss, metrics

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts — MoE dispatch as an LCI active-message system.
+
+The mapping (DESIGN.md §4, the *fullest* use of the paper's machinery):
+
+* a token choosing expert ``e`` posts an **active message** whose *tag* is
+  the expert id and whose *target rank* is the EP shard owning ``e``;
+* the **matching engine** is the token→(expert, slot) assignment — the
+  hash-bucket insert becomes a vectorized rank-in-expert computation;
+* **packet-pool capacity slots**: each expert exposes ``capacity`` fixed
+  slots per source rank (pre-registered packets); a token that finds the
+  pool exhausted gets ``retry`` — here: it is *dropped* into the overflow
+  ledger (the **backlog queue** analogue) and rides the residual stream;
+* the **all-to-all** is the progress engine flushing aggregated messages
+  (chunked over channels in LCI modes for compute overlap);
+* the **combine** is the completion: each token's synchronizer joins its
+  top-k expert replies weighted by router probabilities.
+
+Experts are sharded over the ``model`` axis (EP == TP axis, standard for
+MoE at TP≤experts); expert weights are additionally FSDP-sharded over
+``data`` at rest.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamFactory
+from .layers import mlp_activation
+
+
+def init_moe(pf: ParamFactory, cfg: ModelConfig, stacked_layers: int = 0
+             ) -> Dict[str, jax.Array]:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff
+    mult = 2 if cfg.mlp in ("swiglu", "geglu") else 1
+    L = (stacked_layers,) if stacked_layers else ()
+    st = bool(stacked_layers)
+    p = {
+        "router": pf.dense("router", L + (d, e), tp_axis=None, fsdp_axis=0,
+                           stacked=st, scale=0.1),
+        # expert weights: EP on the expert dim, FSDP on d_model
+        "we_in": pf.dense("we_in", L + (e, d, mult * ff), tp_axis=0,
+                          fsdp_axis=1, stacked=st),
+        "we_out": pf.dense("we_out", L + (e, ff, d), tp_axis=0,
+                           fsdp_axis=2, stacked=st),
+    }
+    return p
+
+
+def router_topk(logits: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
+    """Top-k routing with aux losses.
+
+    logits: (T, E) fp32.  Returns (weights (T,k), experts (T,k) int32,
+    probs (T,E), aux: dict of scalar losses/metrics).
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(
+        weights.sum(axis=-1, keepdims=True), 1e-9)        # renormalize top-k
+    # Switch-style load-balance loss over all k assignments
+    e = logits.shape[-1]
+    assign = jax.nn.one_hot(experts, e, dtype=jnp.float32).sum(axis=1)
+    f = assign.mean(axis=0) * e / cfg.top_k               # dispatch fraction
+    p_mean = probs.mean(axis=0) * e
+    aux_lb = (f * p_mean).mean()
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    aux_z = (lse * lse).mean()
+    aux = {"aux_lb": aux_lb, "aux_z": aux_z}
+    return weights.astype(jnp.float32), experts, probs, aux
+
+
+def moe_block(x: jax.Array, p: Dict[str, jax.Array], cfg: ModelConfig,
+              comm) -> Tuple[jax.Array, Dict]:
+    """x: (s_local, b, d) pre-normed.  Returns (out (s_local, b, d), aux).
+
+    Capacity per (expert, source-rank) = ceil(T·k/E · cf) rounded up to 8,
+    where T is the *local* token count — fixed-size packet slots, so the
+    a2a payload is static-shaped (a hard requirement under jit and exactly
+    the paper's fixed-size pre-registered packet design).
+    """
+    s_l, b, d = x.shape
+    t = s_l * b
+    e, k = cfg.n_experts, cfg.top_k
+    tp = comm.tp
+    assert e % tp == 0, f"experts {e} must divide over model axis {tp}"
+    e_local = e // tp
+
+    xf = x.reshape(t, d)
+    router_w = comm.weight(p["router"], fsdp_axis=0)
+    logits = jnp.tensordot(xf.astype(jnp.float32),
+                           router_w.astype(jnp.float32), axes=1)
+    weights, experts, probs, aux = router_topk(logits, cfg)
+
+    cap = int(-(-t * k // e) * cfg.capacity_factor)
+    cap = max(8, -(-cap // 8) * 8)                        # pad to 8
+
+    # -- matching engine: slot assignment (position of each msg in its
+    #    expert's packet queue), vectorized hash-bucket insert ------------
+    flat_e = experts.reshape(t * k)                       # message tags
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # (T·k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot             # rank within expert
+    pos = (pos * onehot).sum(axis=-1)                     # (T·k,)
+    keep = pos < cap                                      # packet available?
+    dropped = (~keep).sum()                               # backlog ledger
+    aux["dropped_frac"] = dropped.astype(jnp.float32) / (t * k)
+
+    # -- stage payloads into packet slots: (E, cap, d) ---------------------
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_p = jnp.where(keep, pos, 0)
+    payload = jnp.repeat(xf, k, axis=0)                   # (T·k, d)
+    payload = jnp.where(keep[:, None], payload, 0).astype(x.dtype)
+    dispatch = jnp.zeros((e, cap, d), x.dtype)
+    dispatch = dispatch.at[slot_e, slot_p].add(payload)
+
+    # -- progress: flush aggregated messages (all-to-all over EP axis) -----
+    recv = comm.a2a(dispatch, split_axis=0, concat_axis=1)  # (E_l, cap·tp, d)
+
+    # -- expert compute (grouped matmul over local experts) ----------------
+    we_in = comm.weight(p["we_in"], fsdp_axis=1)          # (E_l, d, m·ff)
+    we_out = comm.weight(p["we_out"], fsdp_axis=2)        # (E_l, ff, d)
+    h = jnp.einsum("ecd,edf->ecf", recv, we_in,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    h = mlp_activation(cfg.mlp, h)
+    out = jnp.einsum("ecf,efd->ecd", h, we_out,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # -- completion: return replies, combine with synchronizer weights -----
+    back = comm.a2a(out, split_axis=1, concat_axis=0)     # (E, cap, d)
+    gathered = back.reshape(e * cap, d)[slot_e * cap + slot_p]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = (gathered.reshape(t, k, d).astype(jnp.float32)
+                * weights[..., None]).sum(axis=1)
+    return combined.reshape(s_l, b, d).astype(x.dtype), aux

@@ -1,0 +1,62 @@
+"""Model registry — build a Model facade from a ModelConfig."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.distributed.comm import Comm, local_comm
+from .common import ModelConfig
+from . import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Facade: init + loss, comm-parameterized (local or shard_map)."""
+
+    cfg: ModelConfig
+
+    def init(self, key: jax.Array) -> Tuple[Dict, Dict]:
+        return lm.init_params(self.cfg, key)
+
+    def abstract_params(self, key: Optional[jax.Array] = None
+                        ) -> Tuple[Dict, Dict]:
+        """ShapeDtypeStruct params (no allocation) + specs — dry-run path."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        shapes = jax.eval_shape(lambda k: lm.init_params(self.cfg, k)[0],
+                                key)
+        _, specs = _specs_only(self.cfg)
+        return shapes, specs
+
+    def loss(self, params, batch, comm: Optional[Comm] = None, *,
+             remat: bool = True):
+        return lm.loss_and_metrics(params, batch, self.cfg,
+                                   comm or local_comm(), remat=remat)
+
+    def forward(self, params, batch, comm: Optional[Comm] = None, *,
+                remat: bool = True):
+        return lm.forward(params, batch, self.cfg, comm or local_comm(),
+                          remat=remat)
+
+
+def _specs_only(cfg: ModelConfig):
+    """Specs without materializing params (init under eval_shape loses the
+    side-band spec dict, so recompute it directly)."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(0)
+    # init_params builds specs eagerly as a plain dict side channel; running
+    # it under eval_shape executes the Python (cheap) without allocating.
+    out = {}
+
+    def capture(k):
+        params, specs = lm.init_params(cfg, k)
+        out["specs"] = specs
+        return params
+
+    jax.eval_shape(capture, key)
+    return None, out["specs"]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,280 @@
+"""Mamba2 SSD (state-space duality, arXiv:2405.21060) — chunked scan.
+
+The SSD layer computes, per head, the linear recurrence
+
+    h_t = a_t · h_{t-1} + dt_t · (B_t ⊗ x_t),      y_t = C_t · h_t + D · x_t
+
+with ``a_t = exp(dt_t · A)`` (A negative).  The chunked algorithm splits
+the sequence into chunks of length L and evaluates:
+
+  1. *intra-chunk* (quadratic within the chunk — the "duality" with
+     attention: a masked decay-weighted score matrix),
+  2. *chunk states* (each chunk's contribution to the running state),
+  3. *inter-chunk* recurrence (a tiny scan over chunk summaries),
+  4. *state→output* (incoming state projected through C).
+
+TPU adaptation: the chunk length is the MXU-friendly tile (default 64);
+all heavy ops are einsums.  The per-head recurrence is also exposed as
+:func:`ssd_reference` (naive O(s·n·p) scan), which doubles as the Pallas
+kernel's oracle.  Tensor layout is seq-major local view like everything
+else: x (s, b, heads, headdim); B/C (s, b, groups, state).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamFactory, shard_decisions
+from .layers import rms_norm
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+             c: jax.Array, d_skip: jax.Array, *, chunk: int = 64,
+             h0: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x: (s, bs, h, p); dt: (s, bs, h) (already softplus'd); a_log: (h,);
+    b, c: (s, bs, g, n); d_skip: (h,); h0: (bs, h, n, p) initial state.
+    Returns (y (s, bs, h, p), h_final (bs, h, n, p)).  fp32 internally.
+    """
+    s, bs, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    r = h // g                                  # heads per group
+    L = min(chunk, s)
+    while s % L:
+        L -= 1
+    nc = s // L
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))     # (h,) negative
+    la = dtf * a                                # log a_t  (s, bs, h)
+    xbar = xf * dtf[..., None]                  # dt-scaled input
+
+    # chunked layout: (nc, L, bs, g, r, ...)
+    def ck(t, extra=()):                        # (s, bs, ...) -> chunked
+        return t.reshape((nc, L) + t.shape[1:])
+
+    la_c = ck(la).reshape(nc, L, bs, g, r)
+    cum = jnp.cumsum(la_c, axis=1)              # (nc, L, bs, g, r)
+    xb_c = ck(xbar).reshape(nc, L, bs, g, r, p)
+    b_c = ck(b.astype(jnp.float32))             # (nc, L, bs, g, n)
+    c_c = ck(c.astype(jnp.float32))
+
+    # 1. intra-chunk: Y_diag[l] = sum_{j<=l} (C_l·B_j) exp(cum_l-cum_j) xbar_j
+    scores = jnp.einsum("clbgn,cjbgn->cljbg", c_c, b_c)      # (nc,L,L,bs,g)
+    decay = jnp.exp(cum[:, :, None] - cum[:, None, :])       # (nc,L,L,bs,g,r)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, :, :, None, None, None], decay, 0.0)
+    y_diag = jnp.einsum("cljbg,cljbgr,cjbgrp->clbgrp", scores, decay, xb_c)
+
+    # 2. chunk states: S_c = sum_j exp(cum_last - cum_j) B_j ⊗ xbar_j
+    dstate = jnp.exp(cum[:, -1:] - cum)                      # (nc,L,bs,g,r)
+    states = jnp.einsum("cjbgn,cjbgr,cjbgrp->cbgrnp", b_c, dstate, xb_c)
+
+    # 3. inter-chunk recurrence over chunk summaries
+    a_tot = jnp.exp(cum[:, -1])                              # (nc,bs,g,r)
+    h_init = (jnp.zeros((bs, g, r, n, p), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32).reshape(bs, g, r, n, p))
+
+    def step(hstate, inp):
+        a_c, s_c = inp
+        h_in = hstate
+        h_out = a_c[..., None, None] * hstate + s_c
+        return h_out, h_in
+
+    h_final, h_in = jax.lax.scan(step, h_init, (a_tot, states))
+
+    # 4. incoming state -> output: Y_off[l] = C_l · H_in · exp(cum_l)
+    y_off = jnp.einsum("clbgn,cbgrnp,clbgr->clbgrp", c_c, h_in,
+                       jnp.exp(cum))
+
+    y = (y_diag + y_off).reshape(nc, L, bs, h, p).reshape(s, bs, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), h_final.reshape(bs, h, n, p)
+
+
+def ssd_reference(x, dt, a_log, b, c, d_skip, h0=None):
+    """Naive per-step recurrence oracle (same signature/returns)."""
+    s, bs, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    r = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bf = jnp.repeat(b.astype(jnp.float32), r, axis=2)        # (s,bs,h,n)
+    cf = jnp.repeat(c.astype(jnp.float32), r, axis=2)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    h_state = (jnp.zeros((bs, h, n, p), jnp.float32) if h0 is None
+               else h0.astype(jnp.float32))
+
+    def step(hs, inp):
+        xt, dtt, bt, ct = inp                                # (bs,h,...)
+        at = jnp.exp(dtt * a)                                # (bs,h)
+        upd = jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        hs = at[..., None, None] * hs + upd
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, hs)
+        return hs, yt
+
+    h_final, ys = jax.lax.scan(step, h_state, (xf, dtf, bf, cf))
+    ys = ys + d_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return ys.astype(x.dtype), h_final
+
+
+def ssd_decode_step(h_state, x_tok, dt_tok, a_log, b_tok, c_tok, d_skip):
+    """One-token SSD update for serving.
+
+    h_state (bs,h,n,p); x_tok (bs,h,p); dt_tok (bs,h); b/c_tok (bs,g,n).
+    Returns (h_state', y (bs,h,p))."""
+    bs, h, n, p = h_state.shape
+    g = b_tok.shape[1]
+    r = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bf = jnp.repeat(b_tok.astype(jnp.float32), r, axis=1)
+    cf = jnp.repeat(c_tok.astype(jnp.float32), r, axis=1)
+    dtf = dt_tok.astype(jnp.float32)
+    xf = x_tok.astype(jnp.float32)
+    at = jnp.exp(dtf * a)
+    upd = jnp.einsum("bhn,bhp->bhnp", bf, xf * dtf[..., None])
+    h_new = at[..., None, None] * h_state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", cf, h_new)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * xf
+    return h_new, y.astype(x_tok.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the full Mamba2 mixer (in-proj, conv, SSD, gated norm, out-proj)
+# ---------------------------------------------------------------------------
+
+def init_ssm(pf: ParamFactory, cfg: ModelConfig, stacked_layers: int = 0,
+             prefix: str = "ssm_") -> Dict[str, jax.Array]:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    K = cfg.ssm_conv_kernel
+    L = (stacked_layers,) if stacked_layers else ()
+    st = bool(stacked_layers)
+    shard = shard_decisions(cfg)["ssm"]
+    tp1 = 1 if shard else None
+    tp0 = 0 if shard else None
+
+    def nm(s):
+        return prefix + s
+
+    # z and x stored separately: a fused [Z|X] matrix sharded on the fused
+    # dim would hand each rank a slice crossing the Z/X boundary.
+    p = {
+        nm("w_z"): pf.dense(nm("w_z"), L + (d, di), tp_axis=tp1,
+                            fsdp_axis=0, stacked=st),
+        nm("w_x"): pf.dense(nm("w_x"), L + (d, di), tp_axis=tp1,
+                            fsdp_axis=0, stacked=st),
+        nm("w_dt"): pf.dense(nm("w_dt"), L + (d, h), tp_axis=tp1,
+                             fsdp_axis=0, stacked=st),
+        nm("w_bc"): pf.dense(nm("w_bc"), L + (d, 2 * g * n), tp_axis=None,
+                             fsdp_axis=0, stacked=st),
+        nm("conv_w"): pf.dense(nm("conv_w"), L + (K, di), tp_axis=tp1,
+                               fsdp_axis=None, stacked=st, scale=0.5),
+        nm("a_log"): pf.zeros(nm("a_log"), L + (h,), tp_axis=tp0,
+                              stacked=st, dtype=jnp.float32),
+        nm("d_skip"): pf.ones(nm("d_skip"), L + (h,), tp_axis=tp0,
+                              stacked=st, dtype=jnp.float32),
+        nm("dt_bias"): pf.zeros(nm("dt_bias"), L + (h,), tp_axis=tp0,
+                                stacked=st, dtype=jnp.float32),
+        nm("norm_w"): pf.ones(nm("norm_w"), L + (di,), tp_axis=tp0,
+                              stacked=st),
+        nm("w_out"): pf.dense(nm("w_out"), L + (di, d), tp_axis=tp0,
+                              fsdp_axis=1, stacked=st),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over dim 0.  x (s, bs, ch), w (K, ch)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for k in range(1, K):
+        shifted = jnp.pad(x[:-k], ((k, 0), (0, 0), (0, 0)))
+        out = out + shifted * w[K - 1 - k]
+    return out
+
+
+def ssm_op(x: jax.Array, p: Dict[str, jax.Array], cfg: ModelConfig,
+           comm, plan, *, prefix: str = "ssm_") -> jax.Array:
+    """x: (s_local, bs, d) pre-normed -> (s_local, bs, d).
+
+    Sharded-heads path: the fused [zx|dt] projection enters via ag_matmul
+    (ring overlap), B/C are projected locally and seq-gathered (tiny), the
+    SSD scan runs on local heads over the full sequence, and the output
+    projection exits via matmul_rs.  Replicated path (hymba's 50 heads):
+    everything is gathered, the scan is computed once per rank redundantly,
+    and only the local rows are projected out (DESIGN.md notes the padding
+    optimization as a hillclimb candidate).
+    """
+    def nm(s):
+        return prefix + s
+
+    s_l, bs, d = x.shape
+    di, h = cfg.ssm_d_inner, cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    tp = comm.tp
+    shard = plan.shard_ssm_heads
+    h_l = h // tp if shard else h
+    di_l = di // tp if shard else di
+
+    # fused [Z_l | X_l | dt_l] from LOCAL shards (one gather, one matmul)
+    fused = jnp.concatenate(
+        [comm.weight(p[nm("w_z")], fsdp_axis=0),
+         comm.weight(p[nm("w_x")], fsdp_axis=0),
+         comm.weight(p[nm("w_dt")], fsdp_axis=0)], axis=1)
+    w_bc = comm.weight(p[nm("w_bc")], fsdp_axis=0)
+    w_out = comm.weight(p[nm("w_out")], fsdp_axis=1)
+
+    if shard:
+        zxdt = comm.ag_matmul(x, fused)                  # (s, bs, ...)
+        bc = comm.ag_seq(jnp.tensordot(x, w_bc, axes=1))
+    else:
+        zxdt = comm.ag_seq(jnp.tensordot(x, fused, axes=1))
+        bc = comm.ag_seq(jnp.tensordot(x, w_bc, axes=1))
+
+    z, xs, dt_raw = jnp.split(zxdt, [di_l, 2 * di_l], axis=-1)
+    b_proj, c_proj = jnp.split(bc, 2, axis=-1)
+    s_full = zxdt.shape[0]
+
+    xs = _causal_conv(xs, p[nm("conv_w")])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p[nm("dt_bias")].astype(jnp.float32))
+    y, _ = ssd_scan(
+        xs.reshape(s_full, bs, h_l, cfg.ssm_headdim), dt,
+        p[nm("a_log")], b_proj.reshape(s_full, bs, g, n),
+        c_proj.reshape(s_full, bs, g, n), p[nm("d_skip")],
+        chunk=cfg.ssm_chunk)
+    y = y.reshape(s_full, bs, di_l)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    # gated RMSNorm over the FULL d_inner: with channels TP-sharded the
+    # sum-of-squares must be psum'd over the model axis, otherwise the
+    # norm statistics silently depend on the shard width (shard-variant
+    # semantics — caught by tests/test_distributed.py).
+    yf = y.astype(jnp.float32)
+    ssq = (yf * yf).sum(axis=-1, keepdims=True)
+    denom = di_l
+    if shard:
+        # NOT grad-exact psum: this reduction feeds per-rank-varying values
+        # (the normalized activations), not a replicated consumer; psum's
+        # psum-transpose is the correct adjoint here (each rank's ssq
+        # cotangent is the sum of all ranks' sensitivities to the shared
+        # statistic).
+        ssq = comm.psum_model(ssq)
+        denom = di
+    yf = yf * jax.lax.rsqrt(ssq / denom + 1e-6)
+    y = (yf * p[nm("norm_w")].astype(jnp.float32)).astype(y.dtype)
+
+    if shard:
+        return comm.matmul_rs(y, w_out)                  # (s_l, bs, d)
+    # replicated: slice local rows, project locally
+    start = comm.model_index() * s_l
+    y_local = jax.lax.dynamic_slice(
+        y, (start, jnp.int32(0), jnp.int32(0)), (s_l, bs, di_l))
+    return jnp.tensordot(y_local, w_out, axes=1)

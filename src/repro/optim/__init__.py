@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, OptState, adamw_init, adamw_update
+from .schedules import cosine_schedule, linear_warmup
+from .grad_sync import grad_sync, global_norm, clip_by_global_norm

@@ -1,0 +1,112 @@
+"""AdamW with fp32 master weights and shard-local state (ZeRO-by-layout).
+
+State tensors (``mu``, ``nu``, ``master``) mirror the parameter layout
+exactly — TP-sharded over ``model``, FSDP-sharded over ``data`` — so the
+optimizer never communicates: updates are element-wise on local shards.
+At 104B params on 256 chips the at-rest per-chip cost is
+``(2 + 4 + 4 + 4) · N / 256 ≈ 5.7 GB`` (bf16 param + fp32 master/mu/nu).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    use_master: bool = True           # fp32 master copy of bf16 params
+
+
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array                   # () int32
+    mu: Dict[str, Any]
+    nu: Dict[str, Any]
+    master: Optional[Dict[str, Any]]  # fp32 params (None if disabled)
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.step, s.mu, s.nu, s.master), None),
+    lambda _, c: OptState(*c))
+
+
+def adamw_init(params: Dict[str, Any], cfg: AdamWConfig) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: with fp32 params, astype would alias the param buffer and
+    # break donation (same buffer donated twice in the train step)
+    master = (jax.tree_util.tree_map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        if cfg.use_master else None)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                    master=master)
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms, biases, scalars (standard practice)."""
+    lowered = path.lower()
+    return not any(t in lowered for t in
+                   ("norm", "bias", "a_log", "d_skip", "gate_attn",
+                    "gate_mlp"))
+
+
+def adamw_update(grads: Dict[str, Any], state: OptState,
+                 params: Dict[str, Any], cfg: AdamWConfig
+                 ) -> Tuple[Dict[str, Any], OptState]:
+    step = state.step + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    paths = _leaf_paths(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    flat_p = jax.tree_util.tree_leaves(
+        state.master if state.master is not None else params)
+    treedef = jax.tree_util.tree_structure(params)
+
+    new_p, new_m, new_v = [], [], []
+    for path, g, m, v, p in zip(paths, flat_g, flat_m, flat_v, flat_p):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * pf
+        pf = pf - lr * upd
+        new_p.append(pf)
+        new_m.append(m)
+        new_v.append(v)
+
+    master = (jax.tree_util.tree_unflatten(treedef, new_p)
+              if cfg.use_master else None)
+    cast = jax.tree_util.tree_unflatten(treedef, new_p)
+    dtypes = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda p: p.dtype, params))
+    params_out = jax.tree_util.tree_unflatten(
+        treedef, [x.astype(d) for x, d in zip(new_p, dtypes)])
+    return params_out, OptState(
+        step=step,
+        mu=jax.tree_util.tree_unflatten(treedef, new_m),
+        nu=jax.tree_util.tree_unflatten(treedef, new_v),
+        master=master)
+
+
+def _leaf_paths(tree: Dict[str, Any]) -> list:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append("/".join(str(getattr(k, "key", k)) for k in kp))
+    return paths

@@ -1,0 +1,662 @@
+"""Serving engine: prefill and single-token decode for every arch family.
+
+Cache layout (global view; local view divides by the mesh):
+
+    k/v      (L, S, B, n_kv, dh)     seq-sharded over ``model`` (and over
+                                     ``data`` too when B == 1: long-context
+                                     flash-decode over the joint axis)
+    ssm_state (L, B, H, N, P)        heads over ``model``, batch over ``data``
+    conv_tail (L, K-1, B, d_inner)   channels with the heads
+    cross_k/v (L, T, B, n_kv, dh)    (enc-dec / VLM) precomputed memory KV
+
+Decode dataflow per layer (the LCI reading: every KV shard is a *channel*;
+partial attention results are joined by a synchronizer — implemented as
+the flash-decode max/sum-exp psum combine):
+
+    x (b, d) replicated over model
+      -> q/k/v local head shards   (tiny matmuls)
+      -> all-gather q,kv over model (bytes ~ b·h·dh: inject-protocol small)
+      -> cache write at ``pos`` on the owning seq shard
+      -> decode_attention against the LOCAL seq shard (all heads)
+      -> combine partials (psum/pmax over the KV-sharding axes)
+      -> out-projection row shard + psum
+
+Weights keep their at-rest layout: TP over ``model``; the FSDP dim over
+``data`` is gathered per layer exactly like training ("FSDP-serving") —
+HBM-bound deployments trade ICI for memory.
+
+**2D-TP serving** (``tp2d=True``, the §Perf hillclimb result): weights are
+*stationary* in their 2-D (data × model) shards; instead of gathering a
+weight the engine slices the (tiny) activation along the contraction dim
+per data rank and psums partial products — per-matmul wire bytes drop
+from O(weight) to O(activation), turning decode from collective-bound
+into its natural memory-bound regime.  MoE expert weights keep the gather
+path (dispatch already owns the a2a); everything else goes through
+:func:`_wmul`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.comm import Comm, _axes, local_comm
+from repro.models.attention import (combine_decode_partials, decode_attention)
+from repro.models.blocks import TPPlan, layer_window, tp_plan
+from repro.models.common import ModelConfig, shard_decisions
+from repro.models.layers import (apply_norm, apply_rope, greedy_sample,
+                                 lm_head_logits, mlp_activation, rms_norm)
+from repro.models.moe import moe_block
+from repro.models.ssm import ssd_decode_step
+from repro.models import lm as lm_mod
+
+
+# ---------------------------------------------------------------------------
+# cache container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeCache:
+    k: Optional[jax.Array] = None            # (L, S_loc, b, n_kv, dh)
+    v: Optional[jax.Array] = None
+    ssm_state: Optional[jax.Array] = None    # (L, b, H_loc, N, P)
+    conv_tail: Optional[jax.Array] = None    # (L, K-1, b, di_loc)
+    cross_k: Optional[jax.Array] = None      # (L, T, b, n_kv, dh)
+    cross_v: Optional[jax.Array] = None
+    length: Optional[jax.Array] = None       # () int32 — #valid positions
+
+
+jax.tree_util.register_pytree_node(
+    DecodeCache,
+    lambda c: ((c.k, c.v, c.ssm_state, c.conv_tail, c.cross_k, c.cross_v,
+                c.length), None),
+    lambda _, xs: DecodeCache(*xs))
+
+
+def _has_attn(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _n_cross(cfg: ModelConfig) -> int:
+    if cfg.family == "vlm":
+        return cfg.n_layers // cfg.cross_attn_every
+    if cfg.is_encdec:
+        return cfg.n_layers
+    return 0
+
+
+def init_cache(cfg: ModelConfig, seq_len: int, batch: int, *,
+               kv_shards: int = 1, data_shards: int = 1,
+               n_memory: int = 0) -> DecodeCache:
+    """GLOBAL-shape cache (callers shard via :func:`cache_pspecs`)."""
+    L = cfg.n_layers - _n_cross(cfg) if cfg.family == "vlm" else cfg.n_layers
+    c = DecodeCache(length=jnp.zeros((), jnp.int32))
+    if _has_attn(cfg):
+        dh = cfg.resolved_head_dim
+        shape = (L, seq_len, batch, cfg.n_kv_heads, dh)
+        c.k = jnp.zeros(shape, cfg.dtype)
+        c.v = jnp.zeros(shape, cfg.dtype)
+    if _has_ssm(cfg):
+        c.ssm_state = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+             cfg.ssm_headdim), jnp.float32)
+        c.conv_tail = jnp.zeros(
+            (cfg.n_layers, cfg.ssm_conv_kernel - 1, batch, cfg.ssm_d_inner),
+            cfg.dtype)
+    nx = _n_cross(cfg)
+    if nx and n_memory:
+        xshape = (nx, n_memory, batch, cfg.n_kv_heads,
+                  cfg.resolved_head_dim)
+        c.cross_k = jnp.zeros(xshape, cfg.dtype)
+        c.cross_v = jnp.zeros(xshape, cfg.dtype)
+    return c
+
+
+def cache_pspecs(cfg: ModelConfig, *, batch: int, model_axis="model",
+                 data_axis="data", tp2d: bool = False):
+    """PartitionSpecs for the cache: seq over model (+data when B==1 or
+    under 2D-TP serving, where the batch is replicated over data and the
+    data axis becomes extra sequence parallelism for the KV)."""
+    from jax.sharding import PartitionSpec as P
+    daxes = _axes(data_axis)
+    joint = batch == 1
+    seq_axes = ((model_axis,) + daxes) if joint else (model_axis,)
+    batch_spec = None if joint else daxes
+    dec = shard_decisions(cfg)
+    ssm_head = model_axis if dec["ssm"] else None
+    return DecodeCache(
+        k=P(None, seq_axes, batch_spec, None, None) if _has_attn(cfg) else None,
+        v=P(None, seq_axes, batch_spec, None, None) if _has_attn(cfg) else None,
+        ssm_state=(P(None, batch_spec, ssm_head, None, None)
+                   if _has_ssm(cfg) else None),
+        conv_tail=(P(None, None, batch_spec, ssm_head)
+                   if _has_ssm(cfg) else None),
+        cross_k=(P(None, None, batch_spec, None, None) if _n_cross(cfg)
+                 else None),
+        cross_v=(P(None, None, batch_spec, None, None) if _n_cross(cfg)
+                 else None),
+        length=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode helpers
+# ---------------------------------------------------------------------------
+
+def _embed_flat(tokens: jax.Array, emb: jax.Array, comm: Comm, *,
+                scale: bool, tp2d: bool = False) -> jax.Array:
+    """tokens (b,) replicated over model -> (b, d) via vocab-shard psum.
+    tp2d: emb columns stay data-sharded; reassemble with a tiny ag."""
+    v_local, d_loc = emb.shape
+    rank = comm.model_index()
+    local = tokens - rank * v_local
+    valid = (local >= 0) & (local < v_local)
+    rows = jnp.take(emb, jnp.clip(local, 0, v_local - 1), axis=0)
+    rows = jnp.where(valid[:, None], rows, 0).astype(jnp.float32)
+    out = comm.psum_model(rows)
+    if tp2d:
+        out = comm.ag_data(out, axis=1)
+    if scale:
+        out = out * jnp.sqrt(jnp.float32(out.shape[-1]))
+    return out.astype(emb.dtype)
+
+
+def _wmul(x, w, *, fsdp_axis: int, comm: Comm, tp2d: bool) -> jax.Array:
+    """``x @ w`` with w's FSDP dim either gathered (classic) or stationary.
+
+    tp2d & fsdp_axis == 0 (contraction dim data-sharded): slice the
+    activation's last dim to this data rank's rows, partial product, psum
+    over data — wire bytes O(activation), not O(weight).
+    tp2d & fsdp_axis == 1 (output dim data-sharded): local product, then
+    all-gather the (tiny) output columns over data.
+    """
+    if not tp2d or not comm.fsdp:
+        # tp2d presumes data-sharded weights; with fsdp off the weight is
+        # already full — plain local product
+        return jnp.tensordot(x, comm.weight(w, fsdp_axis=fsdp_axis),
+                             axes=1)
+    if fsdp_axis == 0:
+        k_l = w.shape[0]
+        start = comm.data_index() * k_l
+        xs = jax.lax.dynamic_slice_in_dim(x, start, k_l, axis=x.ndim - 1)
+        return comm.psum_data(jnp.tensordot(xs, w, axes=1))
+    y = jnp.tensordot(x, w, axes=1)
+    return comm.ag_data(y, axis=y.ndim - 1)
+
+
+def _row_parallel_out(x_loc, w, *, comm: Comm, tp2d: bool,
+                      shard_model: bool) -> jax.Array:
+    """Row-parallel exit (wo / w_out): model psum + (tp2d) data column
+    gather, in the cheap order (reduce the narrow shard first)."""
+    if not tp2d or not comm.fsdp:
+        w_full = comm.weight(w, fsdp_axis=1)
+        y = jnp.tensordot(x_loc, w_full, axes=1)
+        return comm.psum_model(y) if shard_model else y
+    part = jnp.tensordot(x_loc, w, axes=1)        # (..., d/dp)
+    if shard_model:
+        part = comm.psum_model(part)
+    return comm.ag_data(part, axis=part.ndim - 1)
+
+
+def _kv_axes(comm: Comm, *, joint: bool):
+    """Axes the KV seq dim is sharded over (model [+ data for B==1])."""
+    axes = list(_axes(comm.model_axis))
+    if joint:
+        axes = list(_axes(comm.data_axis)) + axes
+    return tuple(axes)
+
+
+def _axes_index(comm: Comm, axes) -> jax.Array:
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _axes_size(comm: Comm, axes) -> int:
+    import math
+    return math.prod([jax.lax.axis_size(a) for a in axes] or [1])
+
+
+def _psum_axes(x, axes):
+    for a in axes:
+        x = jax.lax.psum(x, a)
+    return x
+
+
+def _pmax_axes(x, axes):
+    for a in axes:
+        x = jax.lax.pmax(x, a)
+    return x
+
+
+def _decode_attn_layer(x, lp, cfg, comm: Comm, plan: TPPlan, k_cache,
+                       v_cache, pos, window, *, joint_kv: bool,
+                       prefix: str = "", memory_kv=None,
+                       tp2d: bool = False, defer_out: bool = False):
+    """One attention layer for a single token.
+
+    x (b, d) replicated over model; k/v_cache (S_loc, b, nkv, dh) local seq
+    shard.  Returns (out (b, d), k_cache', v_cache').
+    """
+    dh = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+
+    # local projections, then tiny gathers to full heads
+    q = _wmul(x, lp[prefix + "wq"], fsdp_axis=0, comm=comm, tp2d=tp2d)
+    if plan.shard_heads:
+        q = comm.ag_seq(q.T, axis=0).T             # (b, nq*dh)
+    q = q.reshape(-1, nq, dh)
+
+    is_cross = memory_kv is not None
+    if is_cross:
+        k_new = v_new = None
+    else:
+        k_new = _wmul(x, lp[prefix + "wk"], fsdp_axis=0, comm=comm,
+                      tp2d=tp2d)
+        v_new = _wmul(x, lp[prefix + "wv"], fsdp_axis=0, comm=comm,
+                      tp2d=tp2d)
+        if plan.shard_kv:
+            k_new = comm.ag_seq(k_new.T, axis=0).T
+            v_new = comm.ag_seq(v_new.T, axis=0).T
+        k_new = k_new.reshape(-1, nkv, dh)
+        v_new = v_new.reshape(-1, nkv, dh)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, lp[prefix + "q_norm"])
+        if not is_cross:
+            k_new = rms_norm(k_new, lp[prefix + "k_norm"])
+    # tp2d §Perf iteration 2: x/q are batch-replicated over data (the
+    # weight-stationary layout), but the attention inner loop is cheapest
+    # batch-SHARDED: slice this data rank's batch rows, attend against the
+    # classic (seq/model, batch/data) cache, combine over model only, and
+    # reassemble (b, d) once after the out-projection.
+    b_full = x.shape[0]
+    dp = comm.dp
+    batch_sharded = tp2d and not joint_kv and dp > 1 and b_full % dp == 0
+    if batch_sharded:
+        b_l = b_full // dp
+        bstart = comm.data_index() * b_l
+        q = jax.lax.dynamic_slice_in_dim(q, bstart, b_l, axis=0)
+        if not is_cross:
+            k_new = jax.lax.dynamic_slice_in_dim(k_new, bstart, b_l, axis=0)
+            v_new = jax.lax.dynamic_slice_in_dim(v_new, bstart, b_l, axis=0)
+    if not is_cross:
+        posv = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q[None], posv, cfg.rope_theta)[0]
+        k_new = apply_rope(k_new[None], posv, cfg.rope_theta)[0]
+
+        # cache write on the owning seq shard
+        axes = _kv_axes(comm, joint=joint_kv and not batch_sharded)
+        if batch_sharded:
+            axes = _kv_axes(comm, joint=False)
+        shard_len = k_cache.shape[0]
+        my_idx = _axes_index(comm, axes)
+        my_start = my_idx * shard_len
+        rel = pos - my_start
+        owns = (rel >= 0) & (rel < shard_len)
+        rel_c = jnp.clip(rel, 0, shard_len - 1)
+        k_cache = k_cache.at[rel_c].set(
+            jnp.where(owns, k_new.astype(k_cache.dtype), k_cache[rel_c]))
+        v_cache = v_cache.at[rel_c].set(
+            jnp.where(owns, v_new.astype(v_cache.dtype), v_cache[rel_c]))
+        num, m, l = decode_attention(
+            q, k_cache, v_cache, valid_len=pos + 1, kv_offset=my_start,
+            window=window, q_pos=pos)
+        m_g = _pmax_axes(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = _psum_axes(l * corr, axes)
+        num_g = _psum_axes(num * corr[..., None], axes)
+        attn = (num_g / jnp.maximum(l_g, 1e-37)[..., None])
+    else:
+        mk, mv = memory_kv                        # (T, b, nkv, dh) local full
+        num, m, l = decode_attention(q, mk, mv, valid_len=None)
+        attn = num / jnp.maximum(l, 1e-37)[..., None]
+
+    attn = attn.reshape(-1, nq * dh).astype(x.dtype)
+    if batch_sharded:
+        # rejoin the batch rows BEFORE the out-projection (bf16, one
+        # ~b·h·dh stream); the stationary out-proj then produces complete
+        # rows — reassembling after would leave diagonal blocks (rank r
+        # holds rows r x wo-columns r and nobody computes the rest)
+        attn = comm.ag_data(attn, axis=0)             # (b, nq*dh)
+    if plan.shard_heads:
+        nq_l = plan.q_local(cfg)
+        start = comm.model_index() * (nq_l * dh)
+        attn_loc = jax.lax.dynamic_slice_in_dim(attn, start, nq_l * dh,
+                                                axis=1)
+        if defer_out:
+            return (jnp.tensordot(attn_loc, lp[prefix + "wo"], axes=1),
+                    k_cache, v_cache)
+        out = _row_parallel_out(attn_loc, lp[prefix + "wo"], comm=comm,
+                                tp2d=tp2d, shard_model=True)
+    else:
+        if defer_out:
+            return (jnp.tensordot(attn, lp[prefix + "wo"], axes=1),
+                    k_cache, v_cache)
+        out = _row_parallel_out(attn, lp[prefix + "wo"], comm=comm,
+                                tp2d=tp2d, shard_model=False)
+    return out, k_cache, v_cache
+
+
+def _decode_mlp(x, lp, cfg, comm: Comm, prefix: str = "",
+                tp2d: bool = False, defer_out: bool = False) -> jax.Array:
+    if cfg.mlp in ("swiglu", "geglu"):
+        h = jnp.concatenate(
+            [_wmul(x, lp[prefix + "w_gate"], fsdp_axis=0, comm=comm,
+                   tp2d=tp2d),
+             _wmul(x, lp[prefix + "w_up"], fsdp_axis=0, comm=comm,
+                   tp2d=tp2d)], axis=-1)
+    else:
+        h = _wmul(x, lp[prefix + "w_in"], fsdp_axis=0, comm=comm,
+                  tp2d=tp2d)
+    h = mlp_activation(cfg.mlp, h)
+    if defer_out:
+        return jnp.tensordot(h, lp[prefix + "w_out"], axes=1)
+    return _row_parallel_out(h, lp[prefix + "w_out"], comm=comm,
+                             tp2d=tp2d, shard_model=True)
+
+
+def _decode_ssm(x, lp, cfg, comm: Comm, plan: TPPlan, state, conv_tail,
+                prefix: str = "ssm_", tp2d: bool = False):
+    """x (b, d); state (b, H_loc, N, P); conv_tail (K-1, b, di_loc)."""
+    def nm(s):
+        return prefix + s
+
+    di, h = cfg.ssm_d_inner, cfg.ssm_heads
+    tp = comm.tp if plan.shard_ssm_heads else 1
+    di_l, h_l = di // tp, h // tp
+    zxdt = jnp.concatenate(
+        [_wmul(x, lp[nm("w_z")], fsdp_axis=0, comm=comm, tp2d=tp2d),
+         _wmul(x, lp[nm("w_x")], fsdp_axis=0, comm=comm, tp2d=tp2d),
+         _wmul(x, lp[nm("w_dt")], fsdp_axis=0, comm=comm, tp2d=tp2d)],
+        axis=-1)
+    bc = _wmul(x, lp[nm("w_bc")], fsdp_axis=0, comm=comm, tp2d=tp2d)
+    # tp2d: the recurrent state/conv caches are batch-sharded over data;
+    # slice this rank's batch rows for the recurrence, rejoin after
+    b_full = x.shape[0]
+    dp = comm.dp
+    batch_sharded = tp2d and dp > 1 and b_full % dp == 0
+    if batch_sharded:
+        b_l = b_full // dp
+        bstart = comm.data_index() * b_l
+        zxdt = jax.lax.dynamic_slice_in_dim(zxdt, bstart, b_l, axis=0)
+        bc = jax.lax.dynamic_slice_in_dim(bc, bstart, b_l, axis=0)
+    z, xs, dt_raw = jnp.split(zxdt, [di_l, 2 * di_l], axis=-1)
+    b_t, c_t = jnp.split(bc, 2, axis=-1)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    # causal conv: roll the tail window
+    conv_w = lp[nm("conv_w")]                      # (K, di_l)
+    K = conv_w.shape[0]
+    window = jnp.concatenate([conv_tail, xs[None]], axis=0)  # (K, b, di_l)
+    xs_c = jnp.einsum("kbc,kc->bc", window.astype(jnp.float32),
+                      conv_w.astype(jnp.float32)).astype(x.dtype)
+    conv_tail = window[1:]
+    xs_c = jax.nn.silu(xs_c.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp[nm("dt_bias")].astype(jnp.float32))
+    state, y = ssd_decode_step(
+        state, xs_c.reshape(-1, h_l, cfg.ssm_headdim), dt,
+        lp[nm("a_log")], b_t.reshape(-1, g, n), c_t.reshape(-1, g, n),
+        lp[nm("d_skip")])
+    y = y.reshape(-1, di_l)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    ssq = (yf * yf).sum(axis=-1, keepdims=True)
+    denom = di_l
+    if plan.shard_ssm_heads:
+        ssq = comm.psum_model(ssq)
+        denom = di
+    yf = yf * jax.lax.rsqrt(ssq / denom + 1e-6)
+    y = (yf * lp[nm("norm_w")].astype(jnp.float32)).astype(x.dtype)
+    if batch_sharded:
+        y = comm.ag_data(y, axis=0)          # rejoin rows pre-out-proj
+    out = _row_parallel_out(y, lp[nm("w_out")], comm=comm, tp2d=tp2d,
+                            shard_model=plan.shard_ssm_heads)
+    return out, state, conv_tail
+
+
+# ---------------------------------------------------------------------------
+# serve_step
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, comm: Optional[Comm] = None, *,
+                    joint_kv: bool = False, tp2d: bool = False):
+    """Build ``serve_step(params, cache, tokens) -> (next_tokens, cache')``.
+
+    tokens: (b,) int32 — the tokens decoded at position ``cache.length``;
+    returns greedily sampled next tokens and the updated cache.
+    ``joint_kv``: shard the KV seq dim over data AND model (B == 1 long-
+    context shapes).
+    """
+    comm = comm or local_comm()
+
+    def serve_step(params, cache: DecodeCache, tokens: jax.Array):
+        plan = tp_plan(cfg, comm.tp)
+        pos = cache.length
+        emb_w = (params["emb"] if tp2d
+                 else comm.weight(params["emb"], fsdp_axis=1))
+        x = _embed_flat(tokens, emb_w, comm,
+                        scale=cfg.name.startswith("gemma"), tp2d=tp2d)
+
+        is_vlm = cfg.family == "vlm"
+        n_cross = _n_cross(cfg)
+        per = (cfg.cross_attn_every - 1) if is_vlm else 0
+
+        def layer(carry, scanned):
+            xc, kall, vall, sall, call_ = carry
+            idx, lp = scanned["idx"], scanned["lp"]
+            aux_kv = scanned.get("xlp")
+            h = apply_norm(cfg.norm, xc, lp.get("norm1"))
+            window = layer_window(cfg, idx) if cfg.sliding_window else 0
+
+            kc = kall[idx] if kall is not None else None
+            vc = vall[idx] if vall is not None else None
+            st = sall[idx] if sall is not None else None
+            ct = call_[idx] if call_ is not None else None
+
+            if cfg.family == "ssm":
+                out, st, ct = _decode_ssm(h, lp, cfg, comm, plan, st, ct,
+                                          tp2d=tp2d)
+                xc = xc + out
+            elif cfg.family == "hybrid":
+                a_out, kc, vc = _decode_attn_layer(
+                    h, lp, cfg, comm, plan, kc, vc, pos, window,
+                    joint_kv=joint_kv, tp2d=tp2d)
+                s_out, st, ct = _decode_ssm(h, lp, cfg, comm, plan, st, ct,
+                                            tp2d=tp2d)
+                mix = 0.5 * (rms_norm(a_out, lp["mix_norm_a"])
+                             + rms_norm(s_out, lp["mix_norm_s"]))
+                xc = xc + mix
+                h2 = apply_norm(cfg.norm, xc, lp.get("norm2"))
+                xc = xc + _decode_mlp(h2, lp, cfg, comm, tp2d=tp2d)
+            else:
+                a_out, kc, vc = _decode_attn_layer(
+                    h, lp, cfg, comm, plan, kc, vc, pos, window,
+                    joint_kv=joint_kv, tp2d=tp2d,
+                    defer_out=tp2d and cfg.parallel_block)
+                if cfg.parallel_block:
+                    # §Perf iteration 3: under tp2d, attention and MLP
+                    # write the SAME residual; add their pre-reduction
+                    # partials and pay one psum_model + one column gather
+                    if tp2d:
+                        pm = _decode_mlp(h, lp, cfg, comm, tp2d=True,
+                                         defer_out=True)
+                        combined = comm.psum_model(a_out + pm)
+                        xc = xc + comm.ag_data(combined,
+                                               axis=combined.ndim - 1)
+                    else:
+                        xc = xc + a_out + _decode_mlp(h, lp, cfg, comm)
+                else:
+                    xc = xc + a_out
+                    if cfg.is_encdec and aux_kv is not None:
+                        hx = rms_norm(xc, lp["normx"])
+                        x_out, _, _ = _decode_attn_layer(
+                            hx, lp, cfg, comm, plan, None, None, pos, 0,
+                            joint_kv=joint_kv, prefix="x_",
+                            memory_kv=aux_kv, tp2d=tp2d)
+                        xc = xc + x_out
+                    h2 = apply_norm(cfg.norm, xc, lp.get("norm2"))
+                    if cfg.family == "moe":
+                        # MoE experts keep the gather path (dispatch owns
+                        # the a2a); router/shared-mlp ride tp2d
+                        mo, _ = moe_block(h2[None], lp, cfg, comm)
+                        mo = mo[0]
+                        if cfg.shared_expert_ff:
+                            mo = mo + _decode_mlp(h2, lp, cfg, comm,
+                                                  prefix="shared_",
+                                                  tp2d=tp2d)
+                        xc = xc + mo
+                    else:
+                        xc = xc + _decode_mlp(h2, lp, cfg, comm,
+                                              tp2d=tp2d)
+
+            if kall is not None and kc is not None:
+                kall = kall.at[idx].set(kc)
+                vall = vall.at[idx].set(vc)
+            if sall is not None and st is not None:
+                sall = sall.at[idx].set(st)
+                call_ = call_.at[idx].set(ct)
+            return (xc, kall, vall, sall, call_), ()
+
+        L_self = cfg.n_layers - n_cross if is_vlm else cfg.n_layers
+        scanned = {"idx": jnp.arange(L_self, dtype=jnp.int32),
+                   "lp": params["layers"]}
+        carry = (x, cache.k, cache.v, cache.ssm_state, cache.conv_tail)
+        if cfg.is_encdec:
+            def layer_encdec(c, sl):
+                idx, lp, xk, xv = sl
+                return layer(c, {"idx": idx, "lp": lp,
+                                 "xlp": (xk, xv)})
+            carry, _ = jax.lax.scan(
+                layer_encdec, carry,
+                (scanned["idx"], params["layers"], cache.cross_k,
+                 cache.cross_v))
+        elif is_vlm:
+            stack = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_cross, per) + a.shape[1:]),
+                params["layers"])
+
+            def superblock(c, sl):
+                sb_idx, self_lp, cross_lp, xk, xv = sl
+
+                def inner(c2, sl2):
+                    j, lp2 = sl2
+                    return layer(c2, {"idx": sb_idx * per + j, "lp": lp2})
+                c, _ = jax.lax.scan(
+                    inner, c, (jnp.arange(per, dtype=jnp.int32), self_lp))
+                xc = c[0]
+                hx = rms_norm(xc, cross_lp["normx"])
+                x_out, _, _ = _decode_attn_layer(
+                    hx, cross_lp, cfg, comm, tp_plan(cfg, comm.tp), None,
+                    None, pos, 0, joint_kv=joint_kv, prefix="x_",
+                    memory_kv=(xk, xv), tp2d=tp2d)
+                xc = xc + jnp.tanh(cross_lp["gate_attn"]).astype(xc.dtype) \
+                    * x_out
+                hm = rms_norm(xc, cross_lp["normm"])
+                ff = _decode_mlp(hm, cross_lp, cfg, comm, prefix="xm_",
+                                 tp2d=tp2d)
+                xc = xc + jnp.tanh(cross_lp["gate_mlp"]).astype(xc.dtype) \
+                    * ff
+                return (xc,) + c[1:], ()
+
+            carry, _ = jax.lax.scan(
+                superblock, carry,
+                (jnp.arange(n_cross, dtype=jnp.int32), stack,
+                 params["cross_layers"], cache.cross_k, cache.cross_v))
+        else:
+            def layer_plain(c, sl):
+                idx, lp = sl
+                return layer(c, {"idx": idx, "lp": lp})
+            carry, _ = jax.lax.scan(layer_plain, carry,
+                                    (scanned["idx"], params["layers"]))
+
+        xc, kall, vall, sall, call_ = carry
+        xc = apply_norm("rmsnorm" if cfg.norm == "rmsnorm" else "layernorm",
+                        xc, params["final_norm"])
+        head = params.get("lm_head", params["emb"])
+        if tp2d:
+            # head columns (d) stay data-sharded: slice x, partial logits,
+            # psum over data; vocab masking/argmax unchanged
+            d_l = head.shape[1]
+            start = comm.data_index() * d_l
+            x_slice = jax.lax.dynamic_slice_in_dim(xc, start, d_l, axis=1)
+            logits = jnp.tensordot(x_slice.astype(jnp.float32),
+                                   head.astype(jnp.float32).T, axes=1)
+            logits = comm.psum_data(logits)
+            v_local = head.shape[0]
+            gid = comm.model_index() * v_local + jnp.arange(v_local)
+            logits = jnp.where(gid[None, :] < cfg.vocab, logits, -1e30)
+        else:
+            head_full = comm.weight(head, fsdp_axis=1)
+            logits = lm_head_logits(xc, head_full, comm,
+                                    real_vocab=cfg.vocab)
+        next_tokens = greedy_sample(logits, comm)
+        new_cache = DecodeCache(k=kall, v=vall, ssm_state=sall,
+                                conv_tail=call_, cross_k=cache.cross_k,
+                                cross_v=cache.cross_v, length=pos + 1)
+        return next_tokens, new_cache
+
+    return serve_step
+
+
+def precompute_cross_kv(params, memory: jax.Array, cfg: ModelConfig,
+                        comm: Optional[Comm] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Project encoder/image memory through every cross-attn layer's K/V.
+
+    memory: (T, b, d) full-length (replicated over model).  Returns
+    (cross_k, cross_v): (L_cross, T, b, n_kv, dh) — computed once at
+    admission, reused every decode step (the big prefill→decode win for
+    enc-dec/VLM).
+    """
+    comm = comm or local_comm()
+    dh = cfg.resolved_head_dim
+    stack = (params["cross_layers"] if cfg.family == "vlm"
+             else params["layers"])
+
+    def one(lp):
+        wk = comm.weight(lp["x_wk"], fsdp_axis=0)
+        wv = comm.weight(lp["x_wv"], fsdp_axis=0)
+        k = jnp.tensordot(memory, wk, axes=1)
+        v = jnp.tensordot(memory, wv, axes=1)
+        k = k.reshape(*k.shape[:-1], -1, dh)
+        v = v.reshape(*v.shape[:-1], -1, dh)
+        return k, v
+
+    # lax.map (scan) rather than vmap: collectives inside the body follow
+    # the proven scan path, no batching rules involved
+    return jax.lax.map(one, stack)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, comm: Optional[Comm] = None):
+    """Build ``prefill(params, batch) -> (last_hidden (b,d), logits_local)``.
+
+    The prefill cell exercises the full-sequence forward at inference
+    (no loss, last-position head).  Cache *population* for the serving
+    engine's host path reuses the training forward's KV computation; the
+    dry-run measures the compute/comm of the forward itself.
+    """
+    comm = comm or local_comm()
+
+    def prefill(params, batch):
+        x, _ = lm_mod.forward(params, batch, cfg, comm, remat=False)
+        last = x[-1]                                   # (b, d)
+        head = params.get("lm_head", params["emb"])
+        head = comm.weight(head, fsdp_axis=1)
+        logits = lm_head_logits(last, head, comm, real_vocab=cfg.vocab)
+        return greedy_sample(logits, comm), last
+
+    return prefill

@@ -1,0 +1,130 @@
+"""Serving scheduler — continuous batching on LCI admission semantics.
+
+Requests are *posted* to the engine; the scheduler returns the paper's
+ternary status to the client: ``done`` (finished, payload = generated
+ids), ``posted`` (admitted, completion object will be signaled), or
+``retry`` (KV pages exhausted — the request goes to the **backlog queue**
+and is re-admitted as pages free up).  Completion objects are real LCI
+objects: pass a CompletionQueue to poll finished requests, or a handler
+for push delivery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.backlog import BacklogQueue
+from repro.core.completion import CompletionObject, CompletionQueue
+from repro.core.matching import HostMatchingEngine, MatchKind
+from repro.core.status import ErrorCode, Status, done, posted, retry
+from .kv_cache import PagedKVAllocator
+
+_req_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (len,) int32
+    max_new: int
+    comp: Optional[CompletionObject]
+    generated: List[int] = dataclasses.field(default_factory=list)
+    position: int = 0
+
+
+class ServeScheduler:
+    """Continuous batching: admit -> decode rounds -> complete.
+
+    ``decode_fn(tokens (b,), positions (b,)) -> next tokens (b,)`` is the
+    device-side step (the engine's serve_step bound to params/cache); the
+    scheduler owns admission, the backlog, and completion delivery.  The
+    matching engine routes finished requests back to per-client queues
+    (client id = rank, request id = tag — exactly the send/recv pattern).
+    """
+
+    def __init__(self, decode_fn: Callable, *, max_batch: int,
+                 allocator: PagedKVAllocator, eos_id: int = -1):
+        self.decode_fn = decode_fn
+        self.max_batch = max_batch
+        self.alloc = allocator
+        self.eos_id = eos_id
+        self.active: Dict[int, Request] = {}
+        self.backlog = BacklogQueue()
+        self.router = HostMatchingEngine()
+        self.completed = 0
+        self.retries = 0
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int,
+               comp: Optional[CompletionObject] = None,
+               allow_retry: bool = True) -> Status:
+        rid = next(_req_ids)
+        req = Request(rid, np.asarray(prompt, np.int32), max_new, comp)
+        st = self._admit(req)
+        if st.is_retry():
+            self.retries += 1
+            if allow_retry:
+                return st
+            self.backlog.push(req)
+            return posted(code=ErrorCode.POSTED_BACKLOG, ctx=rid)
+        return posted(ctx=rid)
+
+    def _admit(self, req: Request) -> Status:
+        if len(self.active) >= self.max_batch:
+            return retry(ErrorCode.RETRY_NOSLOT)
+        st = self.alloc.admit(req.rid, len(req.prompt) + req.max_new)
+        if st.is_retry():
+            return st
+        req.position = len(req.prompt)
+        self.active[req.rid] = req
+        return done()
+
+    # -- engine progress -----------------------------------------------------
+    def step(self) -> int:
+        """One decode round over the active set; returns #finished."""
+        # (3) drain the backlog first, exactly like the progress engine
+        while not self.backlog.empty_flag and len(self.active) < \
+                self.max_batch:
+            req, st = self.backlog.pop()
+            if st.is_retry():
+                break
+            if self._admit(req).is_retry():
+                self.backlog.push(req)
+                break
+
+        if not self.active:
+            return 0
+        reqs = list(self.active.values())
+        tokens = np.array([r.prompt[-1] if not r.generated
+                           else r.generated[-1] for r in reqs], np.int32)
+        positions = np.array([r.position for r in reqs], np.int32)
+        nxt = np.asarray(self.decode_fn(tokens, positions))
+
+        finished = 0
+        for r, t in zip(reqs, nxt):
+            r.generated.append(int(t))
+            r.position += 1
+            if len(r.generated) >= r.max_new or int(t) == self.eos_id:
+                self._complete(r)
+                finished += 1
+        return finished
+
+    def _complete(self, req: Request) -> None:
+        del self.active[req.rid]
+        self.alloc.release(req.rid)
+        st = done(np.array(req.generated, np.int32), tag=req.rid)
+        if req.comp is not None:
+            req.comp.signal(st)
+        else:
+            self.router.insert(req.rid, MatchKind.SEND, st)
+        self.completed += 1
+
+    def poll(self, rid: int) -> Status:
+        """Pull-style completion for clients without a completion object."""
+        match = self.router.insert(rid, MatchKind.RECV, None)
+        if match is None:
+            return retry()
+        return match

@@ -1,0 +1,106 @@
+"""Training loop: steps, async checkpoints, straggler stats, metrics log.
+
+The loop owns the *operational* behaviour (DESIGN.md §7): resume from the
+last committed checkpoint with exact data replay (step-indexed pipeline),
+async checkpointing off the critical path, per-step timing with z-score
+straggler flagging, and a metrics CSV for offline analysis.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.distributed.straggler import StepTimeMonitor
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    log_every: int = 10
+    metrics_csv: Optional[str] = None
+    resume: bool = True
+
+
+def train_loop(state, step_fn: Callable, pipeline, loop_cfg: LoopConfig,
+               *, batch_transform: Optional[Callable] = None,
+               on_step: Optional[Callable] = None):
+    """Run the loop; returns (final_state, history list of metric dicts)."""
+    start_step = 0
+    store = None
+    pending_save = None
+    if loop_cfg.ckpt_dir:
+        store = CheckpointStore(loop_cfg.ckpt_dir)
+        if loop_cfg.resume and store.latest() is not None:
+            abstract = jax.tree_util.tree_map(np.asarray, state)
+            state, manifest = store.restore(abstract)
+            start_step = manifest["meta"].get("next_step",
+                                              manifest["step"] + 1)
+            print(f"[loop] resumed from step {manifest['step']}, "
+                  f"continuing at {start_step}")
+
+    monitor = StepTimeMonitor()
+    history = []
+    writer = None
+    csv_file = None
+    if loop_cfg.metrics_csv:
+        os.makedirs(os.path.dirname(loop_cfg.metrics_csv) or ".",
+                    exist_ok=True)
+        csv_file = open(loop_cfg.metrics_csv, "a", newline="")
+        writer = csv.writer(csv_file)
+
+    for step in range(start_step, loop_cfg.total_steps):
+        batch = pipeline.get_batch(step)
+        if batch_transform:
+            batch = batch_transform(batch, step)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(jax.tree_util.tree_leaves(metrics)[0])
+        dt = time.perf_counter() - t0
+
+        flagged = monitor.record(step, dt)
+        if flagged is not None:
+            print(f"[straggler] step {step}: {dt * 1e3:.1f} ms "
+                  f"(z={flagged.zscore:.1f}, mean={flagged.mean * 1e3:.1f})")
+
+        row = {"step": step, "dt": dt,
+               **{k: float(np.asarray(v)) for k, v in metrics.items()}}
+        history.append(row)
+        if writer:
+            if step == start_step:
+                writer.writerow(list(row))
+            writer.writerow(list(row.values()))
+        if loop_cfg.log_every and step % loop_cfg.log_every == 0:
+            print(f"[step {step}] loss={row.get('loss', float('nan')):.4f} "
+                  f"dt={dt * 1e3:.1f}ms")
+        if on_step:
+            on_step(step, state, row)
+
+        if store and loop_cfg.ckpt_every and \
+                (step + 1) % loop_cfg.ckpt_every == 0:
+            if pending_save is not None and not pending_save.ready:
+                # previous async save still in flight: let it finish first
+                while not pending_save.ready:
+                    time.sleep(0.01)
+            pending_save = store.save(step, state,
+                                      meta={"next_step": step + 1})
+
+    if store:
+        if pending_save is not None:
+            while not pending_save.ready:
+                time.sleep(0.01)
+        store.save(loop_cfg.total_steps - 1, state,
+                   meta={"next_step": loop_cfg.total_steps}, blocking=True)
+        store.gc()
+    if csv_file:
+        csv_file.close()
+    print(f"[loop] done; straggler summary: {monitor.summary()}")
+    return state, history

@@ -1,0 +1,63 @@
+"""The training step — fwd, bwd, grad sync, clip, AdamW — comm-local.
+
+One function serves every deployment: local (CPU smoke), shard_map manual
+SPMD (production; the dry-run lowers exactly this), and any CommMode
+(BSP baseline vs LCI overlap schedules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.comm import Comm, local_comm
+from repro.models.registry import Model
+from repro.optim import (AdamWConfig, OptState, adamw_init, adamw_update,
+                         clip_by_global_norm, grad_sync)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Dict[str, Any]
+    opt: OptState
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, c: TrainState(*c))
+
+
+def train_state_init(model: Model, key: jax.Array, opt_cfg: AdamWConfig
+                     ) -> Tuple[TrainState, Dict[str, Any]]:
+    params, specs = model.init(key)
+    return TrainState(params, adamw_init(params, opt_cfg)), specs
+
+
+def make_train_step(model: Model, specs: Dict[str, Any],
+                    opt_cfg: AdamWConfig,
+                    comm: Optional[Comm] = None, *, remat: bool = True
+                    ) -> Callable:
+    comm = comm or local_comm()
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        def loss_fn(params):
+            return model.loss(params, batch, comm, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        grads = grad_sync(grads, specs, comm)
+        grads, gnorm = clip_by_global_norm(grads, specs, comm,
+                                           opt_cfg.max_grad_norm)
+        params, opt = adamw_update(grads, state.opt, state.params, opt_cfg)
+        # metrics must leave the step fully replicated (shard_map out_specs
+        # P()): mean every scalar over all mesh axes
+        metrics = comm.pmean_all(
+            {k: v.astype(jnp.float32) for k, v in metrics.items()})
+        metrics["grad_norm"] = gnorm
+        return TrainState(params, opt), metrics
+
+    return train_step

@@ -1,0 +1,109 @@
+"""Checkpointing: atomic commit, hashes, async, resume, GC, elasticity."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointStore, latest_step, restore,
+                              save_async, save_sync)
+from repro.core.status import FatalError
+from repro.data import SyntheticPipeline
+from repro.models.common import ModelConfig
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig
+from repro.train import make_train_step, train_state_init
+from repro.train.loop import LoopConfig, train_loop
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab=64, tp_target=4,
+                  dtype=jnp.float32)
+
+
+def _tree():
+    return {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.ones(5, np.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_sync(str(tmp_path), 3, t, meta={"next_step": 4})
+    assert latest_step(str(tmp_path)) == 3
+    got, manifest = restore(str(tmp_path), t)
+    np.testing.assert_array_equal(got["a"], t["a"])
+    np.testing.assert_array_equal(got["b"]["c"], t["b"]["c"])
+    assert manifest["meta"]["next_step"] == 4
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    path = save_sync(str(tmp_path), 1, t)
+    victim = os.path.join(path, "a.npy")
+    arr = np.load(victim)
+    arr[0, 0] += 1
+    np.save(victim, arr)
+    with pytest.raises(FatalError, match="corrupt"):
+        restore(str(tmp_path), t)
+
+
+def test_async_save_signals_synchronizer(tmp_path):
+    t = _tree()
+    sync = save_async(str(tmp_path), 2, t)
+    for _ in range(500):
+        if sync.ready:
+            break
+        time.sleep(0.01)
+    assert sync.ready
+    ok, payloads = sync.test()
+    assert ok and payloads[0].is_done()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_atomic_commit_no_partial(tmp_path):
+    """A tmp dir from a 'crashed' save never becomes LATEST."""
+    t = _tree()
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    save_sync(str(tmp_path), 5, t)
+    assert latest_step(str(tmp_path)) == 5
+    got, _ = restore(str(tmp_path), t)          # ignores the stale tmp
+    np.testing.assert_array_equal(got["a"], t["a"])
+
+
+def test_gc_keeps_last(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep_last=2)
+    for s in range(5):
+        store.save(s, _tree(), blocking=True)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_resume_exactness(tmp_path):
+    model = build_model(CFG)
+    opt = AdamWConfig(lr=1e-3)
+    state, specs = train_state_init(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, specs, opt))
+    pipe = SyntheticPipeline(vocab=64, seq_len=16, global_batch=4)
+    wrap = lambda b, s: {k: jnp.asarray(v) for k, v in b.items()}
+
+    s_straight, _ = train_loop(
+        state, step, pipe, LoopConfig(total_steps=10, log_every=0),
+        batch_transform=wrap)
+    train_loop(state, step, pipe,
+               LoopConfig(total_steps=6, ckpt_dir=str(tmp_path),
+                          ckpt_every=3, log_every=0),
+               batch_transform=wrap)
+    s_resumed, _ = train_loop(
+        state, step, pipe,
+        LoopConfig(total_steps=10, ckpt_dir=str(tmp_path), ckpt_every=100,
+                   log_every=0),
+        batch_transform=wrap)
+    for a, b in zip(jax.tree_util.tree_leaves(s_straight.params),
+                    jax.tree_util.tree_leaves(s_resumed.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_elastic_restore_subprocess(helper_runner):
+    """Save under a (2,4) mesh, restore + continue under (4,2)."""
+    helper_runner("elastic_reshard", devices=8)

@@ -1,0 +1,22 @@
+"""Distributed correctness (subprocess: 8 fake devices, (2,4) mesh).
+
+The heavyweight guarantees of the framework:
+* every family's shard_map loss == local loss (BSP and LCI modes);
+* grad_sync'd distributed gradients == single-device gradients;
+* ring collectives == XLA collectives == local oracles.
+"""
+import pytest
+
+
+@pytest.mark.slow
+def test_all_families_distributed_equivalence(helper_runner):
+    out = helper_runner("dist_equivalence", devices=8, timeout=1500)
+    assert out.count("OK loss") >= 16       # 8 configs x 2 modes
+    assert out.count("OK grad") >= 8        # grad-checked configs x 2
+
+
+@pytest.mark.slow
+def test_tp2d_decode_matches_classic_and_oracle(helper_runner):
+    """2D-TP weight-stationary serving (§Perf cell 1) is exact."""
+    out = helper_runner("tp2d_decode", devices=8, timeout=1200)
+    assert out.count("tp2d=1.000") >= 4

@@ -1,0 +1,108 @@
+"""Training substrate: convergence, determinism, loop behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticPipeline, TokenFilePipeline
+from repro.models.common import ModelConfig
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, cosine_schedule, linear_warmup
+from repro.train import make_train_step, train_state_init
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=64, tp_target=4,
+                  dtype=jnp.float32)
+
+
+def test_overfit_fixed_batch():
+    model = build_model(CFG)
+    opt = AdamWConfig(lr=3e-3, weight_decay=0.0)
+    state, specs = train_state_init(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, specs, opt))
+    pipe = SyntheticPipeline(vocab=64, seq_len=32, global_batch=8)
+    batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(0).items()}
+    first = None
+    for _ in range(80):
+        state, metrics = step(state, batch)
+        first = first if first is not None else float(metrics["loss"])
+    assert float(metrics["loss"]) < 0.5 < first
+
+
+def test_stream_learning():
+    model = build_model(CFG)
+    opt = AdamWConfig(lr=3e-3, weight_decay=0.0)
+    state, specs = train_state_init(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, specs, opt))
+    pipe = SyntheticPipeline(vocab=64, seq_len=32, global_batch=8)
+    losses = []
+    for i in range(40):
+        state, m = step(state, {k: jnp.asarray(v)
+                                for k, v in pipe.get_batch(i).items()})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.4
+
+
+def test_training_is_deterministic():
+    model = build_model(CFG)
+    opt = AdamWConfig(lr=1e-3)
+
+    def run():
+        state, specs = train_state_init(model, jax.random.PRNGKey(0), opt)
+        step = jax.jit(make_train_step(model, specs, opt))
+        pipe = SyntheticPipeline(vocab=64, seq_len=16, global_batch=4)
+        for i in range(5):
+            state, _ = step(state, {k: jnp.asarray(v) for k, v in
+                                    pipe.get_batch(i).items()})
+        return state
+
+    s1, s2 = run(), run()
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_clip_engages():
+    model = build_model(CFG)
+    opt = AdamWConfig(lr=1e-3, max_grad_norm=1e-6)
+    state, specs = train_state_init(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, specs, opt))
+    pipe = SyntheticPipeline(vocab=64, seq_len=16, global_batch=4)
+    before = jax.tree_util.tree_map(np.asarray, state.params)
+    state, m = step(state, {k: jnp.asarray(v) for k, v in
+                            pipe.get_batch(0).items()})
+    # clip to 1e-6: the Adam update is still O(lr), but grad_norm reported
+    # is the pre-clip norm
+    assert float(m["grad_norm"]) > 1e-3
+
+
+def test_schedules():
+    warm = linear_warmup(1.0, 10)
+    assert float(warm(0)) == 0.0
+    assert abs(float(warm(5)) - 0.5) < 1e-6
+    assert float(warm(20)) == 1.0
+    cos = cosine_schedule(1.0, 10, 110, final_frac=0.1)
+    assert abs(float(cos(10)) - 1.0) < 1e-5
+    assert float(cos(110)) == pytest.approx(0.1, abs=1e-5)
+
+
+def test_token_file_pipeline(tmp_path):
+    path = tmp_path / "tokens.bin"
+    np.arange(10_000, dtype=np.uint16).tofile(path)
+    pipe = TokenFilePipeline(str(path), vocab=1 << 15, seq_len=64,
+                             global_batch=4)
+    b0 = pipe.get_batch(0)
+    b0_again = pipe.get_batch(0)
+    np.testing.assert_array_equal(b0["tokens"], b0_again["tokens"])
+    assert b0["tokens"].shape == (64, 4)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b0["labels"][:-1], b0["tokens"][1:])
+
+
+def test_synthetic_pipeline_determinism():
+    p1 = SyntheticPipeline(vocab=100, seq_len=32, global_batch=4, seed=7)
+    p2 = SyntheticPipeline(vocab=100, seq_len=32, global_batch=4, seed=7)
+    np.testing.assert_array_equal(p1.get_batch(11)["tokens"],
+                                  p2.get_batch(11)["tokens"])
+    assert not np.array_equal(p1.get_batch(1)["tokens"],
+                              p1.get_batch(2)["tokens"])
