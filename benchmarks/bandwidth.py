@@ -2,7 +2,9 @@
 
 Fixed lane count, sizes 16 B .. 1 MiB; reports MB/s through the runtime
 and which protocol carried each size (the protocol crossover points are
-the paper's §4.3 design made visible).
+the paper's §4.3 design made visible).  The endpoint sweep repeats the
+largest (zero-copy) size across Endpoint widths 1/2/4 — the Fig-8-style
+multi-device scaling curve for bulk transfers.
 """
 from __future__ import annotations
 
@@ -48,5 +50,40 @@ def run(quick: bool = True) -> List[dict]:
             "case": f"size={size}B({proto})",
             "us_per_call": dt / iters * 1e6,
             "derived": f"{mbps:.1f} MB/s",
+        })
+    rows.extend(run_endpoint_sweep(sizes[-1], iters, cfg))
+    return rows
+
+
+def run_endpoint_sweep(size: int, iters: int,
+                       cfg: CommConfig) -> List[dict]:
+    """Bulk-transfer bandwidth vs endpoint width (multi-device scaling)."""
+    rows = []
+    payload = np.random.default_rng(0).integers(0, 255, size, dtype=np.uint8)
+    for width in (1, 2, 4):
+        cl = LocalCluster(2, cfg, fabric_depth=1 << 14)
+        eps = cl.alloc_endpoint(n_devices=width, stripe="round_robin",
+                                progress="dedicated", name="bw")
+        cq = cl[1].alloc_cq()
+        rc = cl[1].register_rcomp(cq)
+        t0 = time.perf_counter()
+        delivered = 0
+        for _ in range(iters):
+            st = eps[0].post_am(1, payload, remote_comp=rc)
+            while st.is_retry():
+                cl.progress_all()
+                st = eps[0].post_am(1, payload, remote_comp=rc)
+            cl.quiesce()
+            while cq.pop().is_done():
+                delivered += 1
+        dt = time.perf_counter() - t0
+        assert delivered == iters
+        pushes = [d["pushes"] for d in eps[0].counters()["devices"]]
+        rows.append({
+            "bench": "bandwidth",
+            "case": f"endpoint_width={width}/size={size}B",
+            "us_per_call": dt / iters * 1e6,
+            "derived": f"{size * iters / dt / 1e6:.1f} MB/s "
+                       f"pushes={pushes}",
         })
     return rows

@@ -10,11 +10,24 @@ full posting+progress path (pool -> fabric -> CQ delivery).  The paper's
 headline — dedicated devices scale with lanes while shared serializes —
 reproduces here structurally: shared mode funnels every message through
 one backlog/CQ/packet-lane set.
+
+The **endpoint sweep** (``--devices N``, Fig-8 analogue) posts the same
+traffic through a striped multi-device Endpoint at widths 1..N and
+reports the per-device push counters — the evidence that ops really
+landed on every device of the bundle.  Results are also written to
+``BENCH_message_rate.json`` so later PRs have a perf trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
 from typing import List
+
+if __package__ in (None, ""):                 # `python benchmarks/...py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
@@ -55,6 +68,43 @@ def _run_lanes(n_lanes: int, dedicated: bool, iters: int) -> float:
     return sent / dt
 
 
+def _run_endpoint(width: int, stripe: str, iters: int) -> dict:
+    """One endpoint-width cell: post through a striped Endpoint, report
+    rate + per-device counters."""
+    cfg = CommConfig(inject_max_bytes=64, packets_per_lane=64,
+                     n_channels=width)
+    cl = LocalCluster(2, cfg, fabric_depth=1 << 16)
+    eps = cl.alloc_endpoint(n_devices=width, stripe=stripe,
+                            progress="dedicated", name="sweep")
+    ep0, ep1 = eps
+    cq = cl[1].alloc_cq()
+    rc = cl[1].register_rcomp(cq)
+    payload = np.zeros(PAPER.msg_rate_size, np.uint8)
+
+    t0 = time.perf_counter()
+    for i in range(iters):
+        ep0.post_am(1, payload, remote_comp=rc)
+        if i % 64 == 63:
+            ep1.progress()
+            while cq.pop().is_done():
+                pass
+    cl.quiesce()
+    while cq.pop().is_done():
+        pass
+    dt = time.perf_counter() - t0
+    counters = ep0.counters()
+    return {
+        "bench": "message_rate",
+        "case": f"endpoint_width={width}/{stripe}",
+        "us_per_call": dt / iters * 1e6,
+        "derived": f"{iters / dt / 1e3:.1f} kmsg/s",
+        "width": width,
+        "stripe": stripe,
+        "device_posts": [d["posts"] for d in counters["devices"]],
+        "device_pushes": [d["pushes"] for d in counters["devices"]],
+    }
+
+
 def run(quick: bool = True) -> List[dict]:
     iters = PAPER.msg_rate_iters // (4 if quick else 1)
     rows = []
@@ -70,3 +120,47 @@ def run(quick: bool = True) -> List[dict]:
                 "derived": f"{rate / 1e3:.1f} kmsg/s",
             })
     return rows
+
+
+def run_endpoint_sweep(max_width: int, iters: int,
+                       stripe: str = "round_robin") -> List[dict]:
+    widths = [w for w in (1, 2, 4, 8, 16) if w <= max_width]
+    if widths[-1] != max_width:
+        widths.append(max_width)
+    return [_run_endpoint(w, stripe, iters) for w in widths]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--devices", type=int, default=4, choices=(1, 2, 4),
+                    help="max endpoint width for the sweep")
+    ap.add_argument("--stripe", default="round_robin",
+                    choices=("round_robin", "by_peer", "by_size"))
+    ap.add_argument("--iters", type=int, default=0,
+                    help="messages per cell (0 = paper quick count)")
+    ap.add_argument("--json", default="BENCH_message_rate.json",
+                    help="output JSON path ('' disables)")
+    args = ap.parse_args()
+    iters = args.iters or PAPER.msg_rate_iters // 4
+
+    rows = run_endpoint_sweep(args.devices, iters, args.stripe)
+    for r in rows:
+        print(f"{r['case']:28s} {r['us_per_call']:8.3f} us/msg  "
+              f"{r['derived']:>14s}  pushes/device={r['device_pushes']}")
+    widest = rows[-1]
+    if args.stripe == "round_robin":
+        # by_peer/by_size legitimately concentrate homogeneous traffic on
+        # one device; only round-robin must touch the whole bundle
+        assert all(p > 0 for p in widest["device_pushes"]), (
+            f"striping failed: {widest['device_pushes']}")
+        print(f"striped across all {widest['width']} devices "
+              f"({args.stripe}): OK")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "message_rate", "iters": iters,
+                       "stripe": args.stripe, "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

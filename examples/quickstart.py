@@ -7,7 +7,8 @@ Walks the paper's core concepts end to end on CPU:
   2. post_comm / Table-1 (send-recv, active messages, RMA put)
   3. the ternary done/posted/retry status protocol + OFF idiom
   4. completion graphs (DAG-scheduled comm + compute)
-  5. an in-graph ring collective under shard_map (the TPU adaptation)
+  5. endpoints and progress (striped multi-device bundles, DESIGN.md §8)
+  6. an in-graph ring collective under shard_map (the TPU adaptation)
 """
 import numpy as np
 
@@ -64,7 +65,24 @@ def main():
     vals = g.execute()
     print(f"graph result: {vals[c]} (fire order {g.fire_order})")
 
-    # -- 5. the in-graph layer: ring collectives (run under shard_map on
+    # -- 5. endpoints and progress: devices are replicable resources; an
+    #       Endpoint is a named bundle of N of them with a striping policy
+    #       (which device each op rides) and a progress policy (who drives
+    #       them).  Progress stays explicit: nothing moves until someone
+    #       drives the endpoint's devices. -------------------------------
+    eps = cluster.alloc_endpoint(n_devices=2, stripe="by_peer",
+                                 progress="dedicated", name="demo")
+    ep0 = eps[0]                      # rank 0's side of the bundle
+    for i in range(4):
+        ep0.post_am(1, np.full(8, i, np.uint8), remote_comp=rcomp)
+    while eps[0].progress() + eps[1].progress():
+        pass                          # explicit, client-driven progress
+    print(f"endpoint striping: posts/device = "
+          f"{[d['posts'] for d in ep0.counters()['devices']]}")
+    while not rcq.pop().is_retry():
+        pass                          # drain the demo deliveries
+
+    # -- 6. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

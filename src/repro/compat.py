@@ -1,0 +1,47 @@
+"""Version-compatibility shims over the installed jax.
+
+The repo targets the modern jax surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``); older releases
+spell these ``jax.experimental.shard_map.shard_map(check_rep=...)`` and
+have no ``AxisType``.  Everything that builds meshes or shard_maps goes
+through this module so the version split lives in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+if not _NEW_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax; the experimental spelling on old jax
+    (where ``check_vma`` was named ``check_rep``)."""
+    if _NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a bound mesh axis (``jax.lax.axis_size`` on new jax)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax._src.core import get_axis_env
+    return get_axis_env().axis_size(axis_name)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              devices: Optional[Sequence[Any]] = None):
+    """``jax.make_mesh`` with every axis in Auto mode where the installed
+    jax knows about axis types; plain mesh otherwise (old jax is
+    implicitly all-Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = {} if devices is None else {"devices": devices}
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

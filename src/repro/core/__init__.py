@@ -22,8 +22,9 @@ from .post import (CommKind, Direction, classify, post_am, post_am_x,
                    post_put_x, post_recv, post_recv_x, post_send,
                    post_send_x)
 from .protocol import Protocol, ProtocolStats, select_protocol
-from .runtime import (Fabric, LocalCluster, MemoryRegion, Runtime,
-                      WireKind, WireMsg, g_runtime, g_runtime_fina,
+from .progress import (Endpoint, EndpointSpec, Fabric, MemoryRegion,
+                       ProgressEngine, RendezvousManager, WireKind, WireMsg)
+from .runtime import (LocalCluster, Runtime, g_runtime, g_runtime_fina,
                       g_runtime_init, progress, progress_x)
 from .status import (ErrorCode, ErrorKind, FatalError, Status, done, posted,
                      retry)
@@ -47,10 +48,11 @@ __all__ = [
     "CommKind", "Direction", "classify", "post_comm", "post_comm_x",
     "post_send", "post_send_x", "post_recv", "post_recv_x", "post_am",
     "post_am_x", "post_put", "post_put_x", "post_get", "post_get_x",
-    # runtime
+    # runtime + progress subsystem
     "Fabric", "LocalCluster", "MemoryRegion", "Runtime", "WireKind",
     "WireMsg", "g_runtime", "g_runtime_fina", "g_runtime_init", "progress",
-    "progress_x",
+    "progress_x", "Endpoint", "EndpointSpec", "ProgressEngine",
+    "RendezvousManager",
     # modes & protocol
     "CommConfig", "CommMode", "parse_mode", "Protocol", "ProtocolStats",
     "select_protocol", "off",

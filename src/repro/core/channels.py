@@ -75,8 +75,9 @@ class Device:
         self.index = 0                         # position in the owner's device list
         self.pending_tx = collections.deque()  # ops awaiting source completion
         # telemetry (paper's "progress" counters)
-        self.posts = 0
-        self.progresses = 0
+        self.posts = 0         # operations posted on this device
+        self.pushes = 0        # wire messages that hit the fabric
+        self.progresses = 0    # progress passes driven over it
 
     @property
     def n_channels(self) -> int:

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 from .modes import CommConfig, CommMode
 
 DEFAULT = CommConfig()
@@ -81,7 +83,7 @@ def all_gather(x: jax.Array, axis_name: str,
 
 def _ring_all_gather(x: jax.Array, axis_name: str, *, axis: int,
                      bidirectional: bool) -> jax.Array:
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     shard = x.shape[axis]
     out_shape = x.shape[:axis] + (shard * p,) + x.shape[axis + 1:]
@@ -136,7 +138,7 @@ def all_gather_matmul(x: jax.Array, w: jax.Array, axis_name: str,
         xg = lax.all_gather(x, axis_name, axis=0, tiled=True)
         return jnp.tensordot(xg, w, axes=1).astype(x.dtype)
 
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     m_shard = x.shape[0]
     out = jnp.zeros((m_shard * p,) + x.shape[1:-1] + (w.shape[1],), x.dtype)
@@ -186,7 +188,7 @@ def matmul_reduce_scatter(x: jax.Array, w: jax.Array, axis_name: str,
     the transfer of step i overlaps the matmul of step i+1.  Dedicated mode
     splits the n (feature) axis over two counter-rotating rings.
     """
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     m = x.shape[0]
     assert m % p == 0, f"matmul_reduce_scatter: m={m} not divisible by P={p}"
     m_shard = m // p
@@ -240,7 +242,7 @@ def reduce_scatter(x: jax.Array, axis_name: str,
                    config: CommConfig = DEFAULT, *, axis: int = 0
                    ) -> jax.Array:
     """Ring reduce-scatter of ``x`` along ``axis`` across ``axis_name``."""
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     if config.mode == CommMode.BSP or x.shape[axis] % p != 0:
         return lax.psum_scatter(x, axis_name, scatter_dimension=axis,
                                 tiled=True)
@@ -285,7 +287,7 @@ def all_reduce(x: jax.Array, axis_name: str,
     single psum in BSP.  Falls back to psum when the leading dim does not
     divide the axis size."""
     if (config.mode == CommMode.BSP or x.ndim == 0
-            or x.shape[0] % lax.axis_size(axis_name) != 0):
+            or x.shape[0] % axis_size(axis_name) != 0):
         return lax.psum(x, axis_name)
     scattered = reduce_scatter(x, axis_name, config, axis=0)
     return all_gather(scattered, axis_name, config, axis=0)
@@ -324,7 +326,7 @@ def dissemination_barrier(axis_name: str) -> jax.Array:
     """Dissemination barrier: ceil(log2 P) rounds; returns a token that
     data-depends on every rank (so anything consuming it is ordered after
     the barrier).  Token value == P on every rank (checked in tests)."""
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     token = jnp.ones((), jnp.int32)
     dist = 1
     while dist < p:
@@ -337,7 +339,7 @@ def dissemination_barrier(axis_name: str) -> jax.Array:
 def tree_broadcast(x: jax.Array, axis_name: str, *, root: int = 0
                    ) -> jax.Array:
     """Binomial-tree broadcast from ``root`` via masked ppermute rounds."""
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     rel = (idx - root) % p              # root-relative rank
     val = x
@@ -358,7 +360,7 @@ def tree_broadcast(x: jax.Array, axis_name: str, *, root: int = 0
 def tree_reduce(x: jax.Array, axis_name: str, *, root: int = 0) -> jax.Array:
     """Binomial-tree sum-reduce to ``root`` (other ranks return partials;
     callers wanting all-reduce should tree_broadcast afterwards)."""
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     rel = (idx - root) % p
     val = x

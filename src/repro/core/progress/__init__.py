@@ -1,0 +1,26 @@
+"""The progress-engine subsystem: fabric, reactions, rendezvous, endpoints.
+
+Layout (each file one concern; the paper's Figure-1 chain in engine.py):
+
+* :mod:`.fabric` — :class:`Fabric` (the simulated NIC/ICI), wire messages,
+  registered memory, pending-op records.
+* :mod:`.engine` — :class:`ProgressEngine`: posting + the reaction chain
+  (drain backlog -> source completions -> poll incoming -> react).
+* :mod:`.rendezvous` — :class:`RendezvousManager`: RTS/CTS/RDMA handshake
+  and RMA put/get handling.
+* :mod:`.endpoint` — :class:`Endpoint`/:class:`EndpointSpec`: named
+  multi-device bundles with striping + progress policies.
+"""
+from .endpoint import (PROGRESS_POLICIES, STRIPE_POLICIES, Endpoint,
+                       EndpointSpec)
+from .engine import ProgressEngine
+from .fabric import (Fabric, MemoryRegion, PendingOp, WireKind, WireMsg,
+                     as_bytes_view, next_op_id, payload_to_bytes)
+from .rendezvous import RendezvousManager
+
+__all__ = [
+    "Endpoint", "EndpointSpec", "Fabric", "MemoryRegion", "PendingOp",
+    "ProgressEngine", "RendezvousManager", "WireKind", "WireMsg",
+    "PROGRESS_POLICIES", "STRIPE_POLICIES", "as_bytes_view", "next_op_id",
+    "payload_to_bytes",
+]

@@ -1,0 +1,195 @@
+"""Endpoints — named, striped bundles of devices with a progress policy.
+
+The paper's central design point (§3.2.3) is that communication resources
+are *replicable and incrementally tunable*: a workload that is bottlenecked
+on one NIC queue pair allocates more devices and stripes traffic across
+them.  An :class:`Endpoint` makes that a first-class API object (per the
+AMT-interface argument that the resource group should not be an implicit
+global): it owns ``n_devices`` devices on one runtime, a **striping
+policy** deciding which device each posted operation rides, and a
+**progress policy** deciding who drives them:
+
+* stripe ``"round_robin"`` — ops rotate across devices (max throughput for
+  homogeneous traffic);
+* stripe ``"by_peer"`` — device = f(target rank): all traffic to one peer
+  stays ordered on one stream;
+* stripe ``"by_size"`` — size classes get their own devices so small
+  latency-sensitive messages (decode tokens) never queue behind bulk
+  transfers (prefill prompts) — the paper's "new possibilities" scenario;
+
+* progress ``"shared"`` — the runtime's single engine drives all devices
+  (the paper's shared-resource thread mode);
+* progress ``"dedicated"`` — one :class:`~.engine.ProgressEngine` per
+  device (the dedicated mode that scales with threads).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Optional, Sequence
+
+from ..modes import CommMode
+from ..post import (payload_nbytes, post_am_x, post_get_x, post_put_x,
+                    post_recv_x, post_send_x)
+from ..status import FatalError, Status
+from .engine import ProgressEngine
+
+STRIPE_POLICIES = ("round_robin", "by_peer", "by_size")
+PROGRESS_POLICIES = ("shared", "dedicated")
+
+
+@dataclasses.dataclass(frozen=True)
+class EndpointSpec:
+    """Declarative endpoint description — what a layer *asks for*.
+
+    Carried by config objects (e.g. ``distributed.Comm``) that cannot hold
+    live devices; ``Runtime.alloc_endpoint(spec=...)`` materializes it.
+    """
+
+    name: str = "endpoint"
+    n_devices: int = 1
+    stripe: str = "round_robin"
+    progress: str = "shared"
+    # by_size boundaries (bytes): size class i = first boundary >= size;
+    # None derives geometric classes from the runtime's protocol thresholds.
+    size_boundaries: Optional[Sequence[int]] = None
+
+    def __post_init__(self):
+        if self.stripe not in STRIPE_POLICIES:
+            raise FatalError(f"unknown stripe policy {self.stripe!r}; "
+                             f"pick from {STRIPE_POLICIES}")
+        if self.progress not in PROGRESS_POLICIES:
+            raise FatalError(f"unknown progress policy {self.progress!r}; "
+                             f"pick from {PROGRESS_POLICIES}")
+        if self.n_devices < 1:
+            raise FatalError("an endpoint needs at least one device")
+
+    @classmethod
+    def for_mode(cls, mode: CommMode, n_devices: int = 1,
+                 name: str = "endpoint", stripe: str = "round_robin"
+                 ) -> "EndpointSpec":
+        """Map the paper's shared/dedicated mode split onto a spec."""
+        if mode == CommMode.LCI_DEDICATED and n_devices > 1:
+            return cls(name=name, n_devices=n_devices, stripe=stripe,
+                       progress="dedicated")
+        return cls(name=name, n_devices=max(1, n_devices), stripe=stripe,
+                   progress="shared")
+
+
+class Endpoint:
+    """A live bundle of devices on one runtime, posting through a stripe."""
+
+    def __init__(self, runtime, spec: EndpointSpec):
+        self.runtime = runtime
+        self.spec = spec
+        self.devices = [runtime.alloc_device()
+                        for _ in range(spec.n_devices)]
+        if spec.progress == "dedicated":
+            self.engines = [ProgressEngine(runtime, [d],
+                                           name=f"{spec.name}/dev{i}")
+                            for i, d in enumerate(self.devices)]
+        else:
+            self.engines = [runtime.engine]
+        self._rr = 0
+        if spec.size_boundaries is not None:
+            self._boundaries = list(spec.size_boundaries)
+        else:
+            # geometric classes seeded by the protocol thresholds: class 0
+            # holds inject-able messages, each further class 8x larger
+            self._boundaries = [runtime.config.inject_max_bytes * (8 ** i)
+                                for i in range(spec.n_devices - 1)]
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def __repr__(self) -> str:
+        return (f"Endpoint({self.name!r}, n_devices={self.n_devices}, "
+                f"stripe={self.spec.stripe!r}, "
+                f"progress={self.spec.progress!r})")
+
+    # -- striping ------------------------------------------------------------
+    def select_device(self, *, rank: int = 0, size: int = 0):
+        """Pick the device an op rides, per the endpoint's stripe policy."""
+        stripe = self.spec.stripe
+        if stripe == "by_peer":
+            return self.devices[rank % len(self.devices)]
+        if stripe == "by_size":
+            cls = bisect.bisect_left(self._boundaries, size)
+            return self.devices[min(cls, len(self.devices) - 1)]
+        dev = self.devices[self._rr % len(self.devices)]
+        self._rr += 1
+        return dev
+
+    # -- posting sugar (each picks the striped device, then defers to the
+    #    Table-1 operations of repro.core.post) ------------------------------
+    def _sized(self, buf, size) -> int:
+        return payload_nbytes(buf) if size is None else size
+
+    def post_send(self, rank: int, buf, size=None, tag: int = 0,
+                  local_comp=None, *, allow_retry: bool = True) -> Status:
+        dev = self.select_device(rank=rank, size=self._sized(buf, size))
+        return post_send_x(self.runtime, rank, buf, size, tag, local_comp) \
+            .device(dev).allow_retry(allow_retry)()
+
+    def post_recv(self, rank: int, buf, size=None, tag: int = 0,
+                  local_comp=None, *, allow_retry: bool = True) -> Status:
+        dev = self.select_device(rank=rank, size=self._sized(buf, size))
+        return post_recv_x(self.runtime, rank, buf, size, tag, local_comp) \
+            .device(dev).allow_retry(allow_retry)()
+
+    def post_am(self, rank: int, buf, size=None, local_comp=None,
+                remote_comp=None, *, tag: int = 0,
+                allow_retry: bool = True) -> Status:
+        dev = self.select_device(rank=rank, size=self._sized(buf, size))
+        return post_am_x(self.runtime, rank, buf, size, local_comp,
+                         remote_comp).tag(tag).device(dev) \
+            .allow_retry(allow_retry)()
+
+    def post_put(self, rank: int, buf, remote_buf, size=None,
+                 local_comp=None, remote_comp=None, *, tag: int = 0,
+                 allow_retry: bool = True) -> Status:
+        dev = self.select_device(rank=rank, size=self._sized(buf, size))
+        return post_put_x(self.runtime, rank, buf, remote_buf, size,
+                          local_comp, remote_comp).tag(tag).device(dev) \
+            .allow_retry(allow_retry)()
+
+    def post_get(self, rank: int, buf, remote_buf, size=None,
+                 local_comp=None, *, tag: int = 0,
+                 allow_retry: bool = True) -> Status:
+        dev = self.select_device(rank=rank, size=self._sized(buf, size))
+        return post_get_x(self.runtime, rank, buf, remote_buf, size,
+                          local_comp).tag(tag).device(dev) \
+            .allow_retry(allow_retry)()
+
+    # -- progress ------------------------------------------------------------
+    def progress(self, rounds: int = 1, max_msgs: int = 0) -> int:
+        """Drive this endpoint's devices with its engine(s)."""
+        n = 0
+        for _ in range(rounds):
+            if self.spec.progress == "dedicated":
+                for eng, dev in zip(self.engines, self.devices):
+                    n += bool(eng.progress(dev, max_msgs))
+            else:
+                for dev in self.devices:
+                    n += bool(self.engines[0].progress(dev, max_msgs))
+        return n
+
+    # -- telemetry -----------------------------------------------------------
+    def counters(self) -> dict:
+        """Per-device posts/pushes/progress counts (Fig-8-style evidence
+        that traffic really striped across the bundle)."""
+        return {
+            "name": self.name,
+            "stripe": self.spec.stripe,
+            "progress": self.spec.progress,
+            "devices": [
+                {"index": d.index, "lane": d.lane, "posts": d.posts,
+                 "pushes": d.pushes, "progresses": d.progresses}
+                for d in self.devices
+            ],
+        }

@@ -1,0 +1,288 @@
+"""The progress engine — posting plus the paper's Figure-1 reaction chain.
+
+Progress (§3.2.6) is explicit: nothing moves unless someone drives a
+:class:`ProgressEngine` over a device.  One progress pass implements the
+reaction chain:
+
+    drain backlog -> poll source completions -> poll incoming -> react
+    (match, signal, rendezvous, replenish)
+
+Engines are *drivers*, not state: the pending-op table, matching engine,
+packet pool and landing zones all live on the owning ``Runtime``, so a
+single shared engine and a fleet of dedicated per-device engines (the
+paper's shared/dedicated resource split, :class:`~repro.core.modes.CommMode`)
+are interchangeable — an :class:`~.endpoint.Endpoint`'s progress policy
+picks between them per workload.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from ..completion import CompletionObject
+from ..matching import MatchKind, MatchingPolicy, make_key
+from ..post import CommKind
+from ..protocol import Protocol, select_protocol
+from ..status import ErrorCode, FatalError, Status, done, posted, retry
+from .fabric import (PendingOp, WireKind, WireMsg, as_bytes_view,
+                     next_op_id, payload_to_bytes)
+
+
+class ProgressEngine:
+    """Drives posting and progress for a runtime's devices.
+
+    ``devices=None`` means "whatever the runtime currently owns" (the
+    shared-engine mode); a dedicated engine is constructed with the
+    single device it is responsible for.
+    """
+
+    def __init__(self, runtime, devices: Optional[List] = None,
+                 name: str = "engine"):
+        self.rt = runtime
+        self._devices = devices
+        self.name = name
+        # telemetry (paper's do_background_work counters)
+        self.passes = 0
+        self.reactions = 0
+
+    @property
+    def devices(self) -> List:
+        return self.rt.devices if self._devices is None else self._devices
+
+    def __repr__(self) -> str:
+        scope = "shared" if self._devices is None else \
+            f"dedicated[{','.join(str(d.index) for d in self._devices)}]"
+        return f"ProgressEngine({self.name!r}, {scope})"
+
+    # -- posting (called via Runtime._post / post.post_comm) -----------------
+    def post(self, *, kind: CommKind, rank: int, buf, tag: int,
+             size: int, local_comp, remote_buf, remote_comp, device,
+             matching_policy: MatchingPolicy, allow_retry: bool,
+             user_context) -> Status:
+        rt = self.rt
+        dev = device or rt.default_device
+        dev.posts += 1
+        if rank < 0 or rank >= rt.n_ranks:
+            raise FatalError(f"bad target rank {rank}")
+
+        if kind == CommKind.RECV:
+            return self._post_recv(rank, buf, tag, size, local_comp, dev,
+                                   matching_policy)
+        if kind == CommKind.GET:
+            return rt.rdv.post_get(self, rank, buf, tag, size, local_comp,
+                                   remote_buf, dev, allow_retry)
+        if kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
+            return rt.rdv.post_put(self, kind, rank, buf, tag, size,
+                                   local_comp, remote_buf, remote_comp,
+                                   dev, allow_retry)
+
+        # SEND / AM with inject | bufcopy | zerocopy
+        proto = select_protocol(size, rt.config)
+        if proto == Protocol.ZEROCOPY:
+            return rt.rdv.post_rts(self, kind, rank, buf, tag, size,
+                                   local_comp, remote_comp, matching_policy,
+                                   dev, allow_retry, user_context)
+
+        packet = -1
+        if proto == Protocol.BUFCOPY:
+            packet, pst = rt.packet_pool.get(dev.lane)
+            if pst.is_retry():
+                rt.stats.retries += 1
+                if allow_retry:
+                    return pst
+                # user disallowed retry: park in the backlog (paper §4.4)
+                dev.backlog.push(("post", kind, rank, buf, tag, size,
+                                  local_comp, remote_comp, matching_policy,
+                                  user_context))
+                return posted(code=ErrorCode.POSTED_BACKLOG)
+            # stage payload into the packet (buffer-copy)
+            data = payload_to_bytes(buf)
+            if data.nbytes > rt.packet_pool.packet_bytes:
+                rt.packet_pool.put(dev.lane, packet)
+                raise FatalError("bufcopy payload exceeds packet size")
+
+        wire_kind = (WireKind.EAGER_AM if kind == CommKind.AM
+                     else WireKind.EAGER_SEND)
+        op_id = -1
+        if proto == Protocol.BUFCOPY:
+            op_id = next_op_id()
+            rt.pending_ops[op_id] = PendingOp(kind, buf, size, tag, rank,
+                                              local_comp, packet=packet,
+                                              lane=dev.lane,
+                                              user_context=user_context)
+        msg = WireMsg(wire_kind, rt.rank, rank, tag=tag,
+                      payload=payload_to_bytes(buf), size=size,
+                      rcomp=remote_comp, matching_policy=matching_policy,
+                      op_id=op_id, device_index=dev.index)
+        st = self.submit(msg, dev, allow_retry)
+        if st.is_retry():
+            if packet >= 0:
+                rt.packet_pool.put(dev.lane, packet)
+                del rt.pending_ops[op_id]
+            return st
+        rt.stats.record(proto, size)
+        if proto == Protocol.INJECT:
+            if st.code == ErrorCode.POSTED_BACKLOG:
+                # the wire push was deferred; the payload is already copied
+                # so the source buffer is reusable, but the op has not hit
+                # the network — report the backlog, not done.  Inject ops
+                # never signal completion objects (paper §3.2.5).
+                return st
+            # inject completes immediately; comps are NOT signaled (paper)
+            return done(code=ErrorCode.DONE_INLINE, rank=rank, tag=tag)
+        return posted(ctx=op_id)
+
+    def submit(self, msg: WireMsg, dev, allow_retry: bool) -> Status:
+        """Push to the fabric; full queue -> retry or backlog."""
+        rt = self.rt
+        if rt.fabric.try_push(msg):
+            dev.pushes += 1
+            # source completion for bufcopy/zerocopy is deferred to progress
+            if msg.op_id >= 0:
+                dev.pending_tx.append(msg.op_id)
+            return posted()
+        rt.stats.retries += 1
+        if allow_retry:
+            return retry(ErrorCode.RETRY_LOCKED)
+        st = dev.backlog.push(("wire", msg))
+        if st.is_retry():
+            return st
+        if msg.op_id >= 0:
+            dev.pending_tx.append(msg.op_id)
+        return posted(code=ErrorCode.POSTED_BACKLOG)
+
+    def _post_recv(self, rank: int, buf, tag: int, size: int,
+                   local_comp, dev, policy: MatchingPolicy) -> Status:
+        key = make_key(rank, tag, policy)
+        match = self.rt.matching.insert(key, MatchKind.RECV,
+                                        ("recv", buf, local_comp, dev))
+        if match is None:
+            return posted(code=ErrorCode.POSTED_UNMATCHED)
+        mkind, *rest = match
+        if mkind == "eager":
+            payload, src, mtag = rest
+            if buf is not None:               # fill the posted buffer too
+                view = as_bytes_view(buf)
+                n = min(view.nbytes, payload.nbytes)
+                view[:n] = payload[:n]
+            # done => completion objects will NOT be signaled (paper §3.2.5)
+            return done(payload, rank=src, tag=mtag)
+        if mkind == "rts":
+            msg = rest[0]
+            self.rt.rdv.reply_cts(msg, buf, local_comp, dev)
+            return posted()
+        raise FatalError(f"unexpected match kind {mkind}")
+
+    # -- progress (§3.2.6, Figure 1) -----------------------------------------
+    def progress(self, device=None, max_msgs: int = 0) -> bool:
+        """Drive one progress pass on ``device``; returns True if any work
+        was done (paper: do_background_work)."""
+        rt = self.rt
+        dev = device or (self._devices[0] if self._devices
+                         else rt.default_device)
+        dev.progresses += 1
+        self.passes += 1
+        did = False
+
+        # (3) retry backlogged requests first
+        while not dev.backlog.empty_flag:
+            item, st = dev.backlog.pop()
+            if st.is_retry():
+                break
+            tag0 = item[0]
+            if tag0 == "wire":
+                msg = item[1]
+                if not rt.fabric.try_push(msg):
+                    dev.backlog.push(item)      # still full; stop retrying
+                    break
+                dev.pushes += 1
+                if msg.op_id >= 0:
+                    dev.pending_tx.append(msg.op_id)
+                did = True
+            elif tag0 == "post":
+                (_, kind, rank, buf, tag, size, local_comp, remote_comp,
+                 policy, uctx) = item
+                st2 = self.post(kind=kind, rank=rank, buf=buf, tag=tag,
+                                size=size, local_comp=local_comp,
+                                remote_buf=None, remote_comp=remote_comp,
+                                device=dev, matching_policy=policy,
+                                allow_retry=True, user_context=uctx)
+                if st2.is_retry():
+                    dev.backlog.push(item)
+                    break
+                did = True
+
+        # source-side completions (bufcopy send done on the wire)
+        while dev.pending_tx:
+            op_id = dev.pending_tx.popleft()
+            op = rt.pending_ops.get(op_id)
+            if op is None:
+                continue
+            if op.kind in (CommKind.SEND, CommKind.AM):
+                if op.packet >= 0:              # return packet to the pool
+                    rt.packet_pool.put(op.lane, op.packet)
+                    self.signal(op.local_comp,
+                                done(rank=op.peer, tag=op.tag))
+                    del rt.pending_ops[op_id]
+                # zerocopy sends complete on CTS+RDMA, not here
+            elif op.kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
+                self.signal(op.local_comp, done(rank=op.peer, tag=op.tag))
+                del rt.pending_ops[op_id]
+            did = True
+
+        # (4) poll incoming for this device stream and react
+        for msg in rt.fabric.drain(rt.rank, dev.index, max_msgs):
+            self._react(msg, dev)
+            did = True
+        return did
+
+    def progress_all(self, rounds: int = 1, max_msgs: int = 0) -> int:
+        """Drive every device this engine is responsible for."""
+        n = 0
+        for _ in range(rounds):
+            for dev in self.devices:
+                n += bool(self.progress(dev, max_msgs))
+        return n
+
+    def _react(self, msg: WireMsg, dev) -> None:
+        rt = self.rt
+        self.reactions += 1
+        k = msg.kind
+        if k == WireKind.EAGER_AM:
+            comp = rt.rcomp_registry[msg.rcomp]
+            st = done(msg.payload, rank=msg.src, tag=msg.tag)
+            result = comp.signal(st)
+            if isinstance(result, Status) and result.is_retry():
+                dev.backlog.push(("wire", msg))  # CQ full: repost locally
+        elif k == WireKind.EAGER_SEND:
+            key = make_key(msg.src, msg.tag, msg.matching_policy)
+            match = rt.matching.insert(
+                key, MatchKind.SEND, ("eager", msg.payload, msg.src, msg.tag))
+            if match is not None:
+                _, buf, comp, rdev = match
+                self.deliver_recv(buf, msg.payload, comp, msg.src, msg.tag)
+        elif k == WireKind.RTS:
+            rt.rdv.on_rts(self, msg, dev)
+        elif k == WireKind.CTS:
+            rt.rdv.on_cts(self, msg, dev)
+        elif k == WireKind.RDMA_PAYLOAD:
+            rt.rdv.on_rdma_payload(self, msg, dev)
+        elif k == WireKind.PUT:
+            rt.rdv.on_put(self, msg, dev)
+        elif k == WireKind.GET_REQ:
+            rt.rdv.on_get_req(self, msg, dev)
+        elif k == WireKind.GET_RESP:
+            rt.rdv.on_get_resp(self, msg, dev)
+        else:
+            raise FatalError(f"unknown wire kind {k}")
+
+    def deliver_recv(self, buf, payload, comp, src: int, tag: int) -> None:
+        if buf is not None:
+            view = as_bytes_view(buf)
+            n = min(view.nbytes, payload.nbytes)
+            view[:n] = payload[:n]
+        self.signal(comp, done(payload, rank=src, tag=tag))
+
+    @staticmethod
+    def signal(comp: Optional[CompletionObject], st: Status) -> None:
+        if comp is not None:
+            comp.signal(st)

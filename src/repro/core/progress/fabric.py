@@ -1,0 +1,145 @@
+"""The simulated interconnect: wire messages, queues, registered memory.
+
+The :class:`Fabric` stands in for the NIC/ICI: per ``(dst-rank,
+device-stream)`` bounded FIFO queues.  A full queue surfaces ``retry`` —
+the same back-pressure path a full ibv send queue triggers in the paper
+(§4.4) — and the progress engine moves such requests through the backlog
+queue.  Messages are keyed by the *sender's* device index, so each device
+stream is an independent, ordered channel: replicating devices replicates
+streams, which is exactly the paper's resource-replication story (§3.2.3).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..completion import CompletionObject
+from ..matching import MatchingPolicy
+from ..post import CommKind
+from ..status import FatalError
+
+
+class WireKind:
+    EAGER_SEND = "eager_send"      # send-recv eager payload
+    EAGER_AM = "eager_am"          # active-message eager payload
+    RTS = "rts"                    # rendezvous request-to-send
+    CTS = "cts"                    # rendezvous clear-to-send
+    RDMA_PAYLOAD = "rdma_payload"  # rendezvous data movement (zero-copy)
+    PUT = "put"                    # RMA put (optionally with signal)
+    GET_REQ = "get_req"            # RMA get request
+    GET_RESP = "get_resp"          # RMA get response
+
+
+@dataclasses.dataclass
+class WireMsg:
+    kind: str
+    src: int
+    dst: int
+    tag: int = 0
+    payload: Any = None
+    size: int = 0
+    rcomp: Optional[int] = None
+    matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG
+    # rendezvous bookkeeping
+    op_id: int = -1                # source-side pending-op id
+    remote_buf: Any = None         # (region_id, offset) for RMA
+    device_index: int = 0          # which device stream this rides
+
+
+@dataclasses.dataclass
+class PendingOp:
+    """Source-side state for a posted (not yet complete) operation."""
+    kind: CommKind
+    buf: Any
+    size: int
+    tag: int
+    peer: int
+    local_comp: Optional[CompletionObject]
+    packet: int = -1               # bufcopy: packet id to return to the pool
+    lane: int = 0
+    user_context: Any = None
+
+
+_op_ids = itertools.count()
+
+
+def next_op_id() -> int:
+    return next(_op_ids)
+
+
+class Fabric:
+    """Bounded per-(dst, device) FIFO queues; the NIC send-queue stand-in.
+
+    ``depth`` bounds each queue — a full queue is the paper's "underlying
+    network send queue is full" event and surfaces ``retry``.
+    """
+
+    def __init__(self, n_ranks: int, depth: int = 4096):
+        self.n_ranks = n_ranks
+        self.depth = depth
+        self._queues: Dict[Tuple[int, int], collections.deque] = {}
+        self.pushes = 0
+        self.full_events = 0
+
+    def _q(self, dst: int, device_index: int) -> collections.deque:
+        return self._queues.setdefault((dst, device_index),
+                                       collections.deque())
+
+    def try_push(self, msg: WireMsg) -> bool:
+        q = self._q(msg.dst, msg.device_index)
+        if len(q) >= self.depth:
+            self.full_events += 1
+            return False
+        q.append(msg)
+        self.pushes += 1
+        return True
+
+    def drain(self, dst: int, device_index: int, limit: int = 0
+              ) -> List[WireMsg]:
+        q = self._q(dst, device_index)
+        n = len(q) if limit <= 0 else min(limit, len(q))
+        return [q.popleft() for _ in range(n)]
+
+    def pending_to(self, dst: int) -> int:
+        return sum(len(q) for (d, _), q in self._queues.items() if d == dst)
+
+    def pending_streams(self, dst: int) -> List[int]:
+        """Device-stream indices with traffic queued toward ``dst``."""
+        return sorted(i for (d, i), q in self._queues.items()
+                      if d == dst and q)
+
+
+# ---------------------------------------------------------------------------
+# memory registration (paper §3.3.1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MemoryRegion:
+    """Registered memory: mandatory for remote buffers (RMA targets)."""
+    rid: int
+    buf: np.ndarray                # 1-D uint8 view of the registered range
+
+
+def as_bytes_view(buf: Any) -> np.ndarray:
+    if isinstance(buf, np.ndarray):
+        return buf.reshape(-1).view(np.uint8)
+    if isinstance(buf, (bytearray, memoryview)):
+        return np.frombuffer(buf, dtype=np.uint8)
+    raise FatalError(f"cannot register memory of type {type(buf)}")
+
+
+def payload_to_bytes(buf: Any) -> np.ndarray:
+    """Materialize a payload (or buffer list, §3.3.1) as bytes."""
+    if isinstance(buf, (list, tuple)):
+        parts = [payload_to_bytes(b) for b in buf]
+        return (np.concatenate(parts) if parts
+                else np.zeros(0, np.uint8))
+    if isinstance(buf, np.ndarray):
+        return buf.reshape(-1).view(np.uint8).copy()
+    if isinstance(buf, (bytes, bytearray, memoryview)):
+        return np.frombuffer(bytes(buf), dtype=np.uint8)
+    raise FatalError(f"unsupported payload type {type(buf)}")

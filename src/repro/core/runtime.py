@@ -1,4 +1,4 @@
-"""LCI-X runtime — runtime objects, devices, the fabric, and progress.
+"""LCI-X runtime — resource lifecycle: runtimes, devices, endpoints, clusters.
 
 Mirrors the paper's runtime lifecycle (§3.2.2): no global init/fina;
 instead runtime objects are allocated/freed, and multiple runtimes can
@@ -7,167 +7,48 @@ coexist (library composition).  :class:`LocalCluster` simulates the paper's
 threads of one process), each with its own :class:`Runtime` holding
 replicable resources (devices, matching engine, packet pool, CQs).
 
-The :class:`Fabric` stands in for the NIC/ICI: per (src-device, dst-device)
-bounded FIFO queues.  A full queue surfaces ``retry`` — the same
-back-pressure path a full ibv send queue triggers in the paper — and the
-progress engine moves such requests through the backlog queue (paper §4.4
-steps (2)/(3)).
+Everything that *moves data* lives in :mod:`repro.core.progress`:
 
-Progress (§3.2.6) is explicit: nothing moves unless someone calls
-``runtime.progress(device)``; the call implements the paper's Figure-1
-reaction chain: drain backlog -> poll completions (source side) -> poll
-incoming (target side) -> react (match, signal, rendezvous, replenish).
+* the fabric and wire format          -> ``progress/fabric.py``
+* posting + the Figure-1 chain        -> ``progress/engine.py``
+* rendezvous (RTS/CTS/RDMA) and RMA   -> ``progress/rendezvous.py``
+* multi-device striped endpoints      -> ``progress/endpoint.py``
+
+This module only allocates, wires together, and frees those resources —
+plus the thin delegation (``Runtime._post`` / ``Runtime.progress``) that
+keeps the paper's Listing-2 call surface on the runtime object.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import itertools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
-
-from .backlog import BacklogQueue
 from .channels import Device
 from .completion import (CompletionHandler, CompletionObject, CompletionQueue,
                          MPMCArray, Synchronizer)
 from .graph import CompletionGraph
-from .matching import HostMatchingEngine, MatchKind, MatchingPolicy, make_key
-from .modes import CommConfig, CommMode
+from .matching import HostMatchingEngine
+from .modes import CommConfig
 from .off import off
 from .packet_pool import HostPacketPool
-from .post import CommKind, Direction, payload_nbytes
-from .protocol import Protocol, ProtocolStats, select_protocol
-from .status import (ErrorCode, FatalError, Status, done, posted, retry)
+from .protocol import ProtocolStats
+from .status import FatalError, Status
+# Re-exported names that historically lived here (public API compatibility).
+from .progress import (Endpoint, EndpointSpec, Fabric, MemoryRegion,
+                       PendingOp, ProgressEngine, RendezvousManager,
+                       WireKind, WireMsg, as_bytes_view, payload_to_bytes)
 
-
-# ---------------------------------------------------------------------------
-# wire messages
-# ---------------------------------------------------------------------------
-
-class WireKind:
-    EAGER_SEND = "eager_send"      # send-recv eager payload
-    EAGER_AM = "eager_am"          # active-message eager payload
-    RTS = "rts"                    # rendezvous request-to-send
-    CTS = "cts"                    # rendezvous clear-to-send
-    RDMA_PAYLOAD = "rdma_payload"  # rendezvous data movement (zero-copy)
-    PUT = "put"                    # RMA put (optionally with signal)
-    GET_REQ = "get_req"            # RMA get request
-    GET_RESP = "get_resp"          # RMA get response
-
-
-@dataclasses.dataclass
-class WireMsg:
-    kind: str
-    src: int
-    dst: int
-    tag: int = 0
-    payload: Any = None
-    size: int = 0
-    rcomp: Optional[int] = None
-    matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG
-    # rendezvous bookkeeping
-    op_id: int = -1                # source-side pending-op id
-    remote_buf: Any = None         # (region_id, offset) for RMA
-    device_index: int = 0          # which device stream this rides
-
-
-@dataclasses.dataclass
-class PendingOp:
-    """Source-side state for a posted (not yet complete) operation."""
-    kind: CommKind
-    buf: Any
-    size: int
-    tag: int
-    peer: int
-    local_comp: Optional[CompletionObject]
-    packet: int = -1               # bufcopy: packet id to return to the pool
-    lane: int = 0
-    user_context: Any = None
-
-
-# ---------------------------------------------------------------------------
-# fabric — the simulated interconnect
-# ---------------------------------------------------------------------------
-
-class Fabric:
-    """Bounded per-(dst, device) FIFO queues; the NIC send-queue stand-in.
-
-    ``depth`` bounds each queue — a full queue is the paper's "underlying
-    network send queue is full" event and surfaces ``retry``.
-    """
-
-    def __init__(self, n_ranks: int, depth: int = 4096):
-        self.n_ranks = n_ranks
-        self.depth = depth
-        self._queues: Dict[Tuple[int, int], collections.deque] = {}
-        self.pushes = 0
-        self.full_events = 0
-
-    def _q(self, dst: int, device_index: int) -> collections.deque:
-        return self._queues.setdefault((dst, device_index),
-                                       collections.deque())
-
-    def try_push(self, msg: WireMsg) -> bool:
-        q = self._q(msg.dst, msg.device_index)
-        if len(q) >= self.depth:
-            self.full_events += 1
-            return False
-        q.append(msg)
-        self.pushes += 1
-        return True
-
-    def drain(self, dst: int, device_index: int, limit: int = 0
-              ) -> List[WireMsg]:
-        q = self._q(dst, device_index)
-        n = len(q) if limit <= 0 else min(limit, len(q))
-        return [q.popleft() for _ in range(n)]
-
-    def pending_to(self, dst: int) -> int:
-        return sum(len(q) for (d, _), q in self._queues.items() if d == dst)
-
-
-# ---------------------------------------------------------------------------
-# memory registration (paper §3.3.1)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class MemoryRegion:
-    """Registered memory: mandatory for remote buffers (RMA targets)."""
-    rid: int
-    buf: np.ndarray                # 1-D uint8 view of the registered range
-
-
-def _as_bytes_view(buf: Any) -> np.ndarray:
-    if isinstance(buf, np.ndarray):
-        return buf.reshape(-1).view(np.uint8)
-    if isinstance(buf, (bytearray, memoryview)):
-        return np.frombuffer(buf, dtype=np.uint8)
-    raise FatalError(f"cannot register memory of type {type(buf)}")
-
-
-def _payload_to_bytes(buf: Any) -> np.ndarray:
-    """Materialize a payload (or buffer list, §3.3.1) as bytes."""
-    if isinstance(buf, (list, tuple)):
-        parts = [_payload_to_bytes(b) for b in buf]
-        return (np.concatenate(parts) if parts
-                else np.zeros(0, np.uint8))
-    if isinstance(buf, np.ndarray):
-        return buf.reshape(-1).view(np.uint8).copy()
-    if isinstance(buf, (bytes, bytearray, memoryview)):
-        return np.frombuffer(bytes(buf), dtype=np.uint8)
-    raise FatalError(f"unsupported payload type {type(buf)}")
-
-
-# ---------------------------------------------------------------------------
-# runtime
-# ---------------------------------------------------------------------------
-
-_op_ids = itertools.count()
+# back-compat aliases for the old private helpers
+_as_bytes_view = as_bytes_view
+_payload_to_bytes = payload_to_bytes
 
 
 class Runtime:
-    """One rank's LCI runtime: resources + posting + progress."""
+    """One rank's LCI runtime: the replicable resource set.
+
+    Posting and progress are delegated to the default
+    :class:`~repro.core.progress.ProgressEngine`; dedicated engines (and
+    multi-device striping) are allocated through :meth:`alloc_endpoint`.
+    """
 
     def __init__(self, rank: int, cluster: "LocalCluster",
                  config: Optional[CommConfig] = None):
@@ -183,31 +64,84 @@ class Runtime:
         self.rcomp_registry = MPMCArray()      # paper §4.1.1 MPMC array
         self.memory_regions = MPMCArray()
         self.devices: List[Device] = []
-        self.default_device = self.alloc_device(lane=0)
+        self._next_device_index = 0
         self.stats = ProtocolStats()
-        self._pending: Dict[int, PendingOp] = {}
-        self._landing: list = []     # rendezvous landing zones (CTS state)
+        # shared per-rank op state the engines operate on
+        self.pending_ops: Dict[int, PendingOp] = {}
+        self.rdv = RendezvousManager(self)
+        self.engine = ProgressEngine(self, name=f"rank{rank}/shared")
+        self.endpoints: List[Endpoint] = []
+        self.default_device = self.alloc_device(lane=0)
 
-    # -- rank queries -------------------------------------------------------
+    # -- rank / fabric queries ----------------------------------------------
     def get_rank_me(self) -> int:
         return self.rank
 
     def get_rank_n(self) -> int:
         return self.cluster.n_ranks
 
+    @property
+    def n_ranks(self) -> int:
+        return self.cluster.n_ranks
+
+    @property
+    def fabric(self) -> Fabric:
+        return self.cluster.fabric
+
     # -- resource allocation -------------------------------------------------
     def alloc_device(self, lane: Optional[int] = None) -> Device:
         dev = Device(self.config,
                      lane=(lane if lane is not None
                            else len(self.devices) % self.packet_pool.n_lanes))
-        dev.index = len(self.devices)
+        # indices are never reused: a fabric stream keyed by a freed
+        # device's index must not silently alias a later allocation
+        dev.index = self._next_device_index
+        self._next_device_index += 1
         self.devices.append(dev)
         return dev
 
-    def free_device(self, device: Device) -> None:
+    def _check_device_freeable(self, device: Device) -> None:
         if device is self.default_device:
             raise FatalError("cannot free the default device")
+        if not device.backlog.empty_flag or device.pending_tx:
+            raise FatalError("cannot free a device with backlogged or "
+                             "in-flight operations")
+        if device.index in self.fabric.pending_streams(self.rank):
+            raise FatalError("cannot free a device with undrained incoming "
+                             "traffic (progress it first)")
+
+    def free_device(self, device: Device) -> None:
+        self._check_device_freeable(device)
         self.devices.remove(device)
+
+    def alloc_endpoint(self, n_devices: int = 1,
+                       stripe: str = "round_robin",
+                       progress: str = "shared",
+                       name: Optional[str] = None, *,
+                       spec: Optional[EndpointSpec] = None) -> Endpoint:
+        """Allocate a named multi-device endpoint (paper §3.2.3: devices
+        are replicable and incrementally tunable).  Pass either the knobs
+        or a prebuilt :class:`EndpointSpec`."""
+        if spec is None:
+            spec = EndpointSpec(
+                name=name or f"rank{self.rank}/ep{len(self.endpoints)}",
+                n_devices=n_devices, stripe=stripe, progress=progress)
+        ep = Endpoint(self, spec)
+        self.endpoints.append(ep)
+        return ep
+
+    def free_endpoint(self, ep: Endpoint) -> None:
+        # validate every device BEFORE mutating: a busy device must not
+        # leave the endpoint half-freed
+        for dev in ep.devices:
+            self._check_device_freeable(dev)
+        for dev in ep.devices:
+            self.devices.remove(dev)
+        self.endpoints.remove(ep)
+
+    def alloc_engine(self, devices: Optional[List[Device]] = None,
+                     name: str = "engine") -> ProgressEngine:
+        return ProgressEngine(self, devices, name=name)
 
     def alloc_cq(self, capacity: Optional[int] = None) -> CompletionQueue:
         return CompletionQueue(capacity)
@@ -230,330 +164,27 @@ class Runtime:
         return self.rcomp_registry.append(comp)
 
     def register_memory(self, buf: Any) -> MemoryRegion:
-        view = _as_bytes_view(buf)
+        view = as_bytes_view(buf)
         region = MemoryRegion(rid=len(self.memory_regions), buf=view)
         self.memory_regions.append(region)
         return region
 
-    # -- posting (called via post.post_comm) ---------------------------------
-    def _post(self, *, kind: CommKind, rank: int, buf: Any, tag: int,
-              size: int, local_comp, remote_buf, remote_comp, device,
-              matching_policy: MatchingPolicy, allow_retry: bool,
-              user_context: Any) -> Status:
-        dev: Device = device or self.default_device
-        dev.posts += 1
-        if rank < 0 or rank >= self.cluster.n_ranks:
-            raise FatalError(f"bad target rank {rank}")
+    # -- posting / progress: thin delegation to the default engine -----------
+    def _post(self, **kwargs) -> Status:
+        return self.engine.post(**kwargs)
 
-        if kind == CommKind.RECV:
-            return self._post_recv(rank, buf, tag, size, local_comp, dev,
-                                   matching_policy)
-        if kind == CommKind.GET:
-            return self._post_get(rank, buf, tag, size, local_comp,
-                                  remote_buf, dev, allow_retry)
-
-        proto = (Protocol.ZEROCOPY if kind in
-                 (CommKind.PUT, CommKind.PUT_SIGNAL)
-                 else select_protocol(size, self.config))
-        if kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
-            return self._post_put(kind, rank, buf, tag, size, local_comp,
-                                  remote_buf, remote_comp, dev, allow_retry)
-
-        # SEND / AM with inject | bufcopy | zerocopy
-        if proto == Protocol.ZEROCOPY:
-            op_id = next(_op_ids)
-            self._pending[op_id] = PendingOp(kind, buf, size, tag, rank,
-                                             local_comp, lane=dev.lane,
-                                             user_context=user_context)
-            msg = WireMsg(WireKind.RTS, self.rank, rank, tag=tag, size=size,
-                          rcomp=remote_comp, matching_policy=matching_policy,
-                          op_id=op_id, device_index=dev.index)
-            self.stats.handshakes += 1
-            st = self._submit(msg, dev, allow_retry)
-            if st.is_retry():
-                del self._pending[op_id]
-            else:
-                self.stats.record(proto, size)
-            return st
-
-        packet = -1
-        if proto == Protocol.BUFCOPY:
-            packet, pst = self.packet_pool.get(dev.lane)
-            if pst.is_retry():
-                self.stats.retries += 1
-                if allow_retry:
-                    return pst
-                # user disallowed retry: park in the backlog (paper §4.4)
-                dev.backlog.push(("post", kind, rank, buf, tag, size,
-                                  local_comp, remote_comp, matching_policy,
-                                  user_context))
-                return posted(code=ErrorCode.POSTED_BACKLOG)
-            # stage payload into the packet (buffer-copy)
-            data = _payload_to_bytes(buf)
-            if data.nbytes > self.packet_pool.packet_bytes:
-                self.packet_pool.put(dev.lane, packet)
-                raise FatalError("bufcopy payload exceeds packet size")
-
-        wire_kind = (WireKind.EAGER_AM if kind == CommKind.AM
-                     else WireKind.EAGER_SEND)
-        op_id = -1
-        if proto == Protocol.BUFCOPY:
-            op_id = next(_op_ids)
-            self._pending[op_id] = PendingOp(kind, buf, size, tag, rank,
-                                             local_comp, packet=packet,
-                                             lane=dev.lane,
-                                             user_context=user_context)
-        msg = WireMsg(wire_kind, self.rank, rank, tag=tag,
-                      payload=_payload_to_bytes(buf), size=size,
-                      rcomp=remote_comp, matching_policy=matching_policy,
-                      op_id=op_id, device_index=dev.index)
-        st = self._submit(msg, dev, allow_retry)
-        if st.is_retry():
-            if packet >= 0:
-                self.packet_pool.put(dev.lane, packet)
-                del self._pending[op_id]
-            return st
-        self.stats.record(proto, size)
-        if proto == Protocol.INJECT:
-            if st.code == ErrorCode.POSTED_BACKLOG:
-                # the wire push was deferred; the payload is already copied
-                # so the source buffer is reusable, but the op has not hit
-                # the network — report the backlog, not done.  Inject ops
-                # never signal completion objects (paper §3.2.5).
-                return st
-            # inject completes immediately; comps are NOT signaled (paper)
-            return done(code=ErrorCode.DONE_INLINE, rank=rank, tag=tag)
-        return posted(ctx=op_id)
-
-    def _submit(self, msg: WireMsg, dev: Device, allow_retry: bool) -> Status:
-        """Push to the fabric; full queue -> retry or backlog."""
-        if self.cluster.fabric.try_push(msg):
-            # source completion for bufcopy/zerocopy is deferred to progress
-            if msg.op_id >= 0:
-                dev.pending_tx.append(msg.op_id)
-            return posted()
-        self.stats.retries += 1
-        if allow_retry:
-            return retry(ErrorCode.RETRY_LOCKED)
-        st = dev.backlog.push(("wire", msg))
-        if st.is_retry():
-            return st
-        if msg.op_id >= 0:
-            dev.pending_tx.append(msg.op_id)
-        return posted(code=ErrorCode.POSTED_BACKLOG)
-
-    def _post_recv(self, rank: int, buf: Any, tag: int, size: int,
-                   local_comp, dev: Device,
-                   policy: MatchingPolicy) -> Status:
-        key = make_key(rank, tag, policy)
-        match = self.matching.insert(key, MatchKind.RECV,
-                                     ("recv", buf, local_comp, dev))
-        if match is None:
-            return posted(code=ErrorCode.POSTED_UNMATCHED)
-        mkind, *rest = match
-        if mkind == "eager":
-            payload, src, mtag = rest
-            if buf is not None:               # fill the posted buffer too
-                view = _as_bytes_view(buf)
-                n = min(view.nbytes, payload.nbytes)
-                view[:n] = payload[:n]
-            # done => completion objects will NOT be signaled (paper §3.2.5)
-            return done(payload, rank=src, tag=mtag)
-        if mkind == "rts":
-            msg = rest[0]
-            self._reply_cts(msg, buf, local_comp, dev)
-            return posted()
-        raise FatalError(f"unexpected match kind {mkind}")
-
-    def _post_put(self, kind: CommKind, rank: int, buf: Any, tag: int,
-                  size: int, local_comp, remote_buf, remote_comp,
-                  dev: Device, allow_retry: bool) -> Status:
-        op_id = next(_op_ids)
-        self._pending[op_id] = PendingOp(kind, buf, size, tag, rank,
-                                         local_comp, lane=dev.lane)
-        msg = WireMsg(WireKind.PUT, self.rank, rank, tag=tag,
-                      payload=_payload_to_bytes(buf), size=size,
-                      rcomp=remote_comp, remote_buf=remote_buf,
-                      op_id=op_id, device_index=dev.index)
-        st = self._submit(msg, dev, allow_retry)
-        if st.is_retry():
-            del self._pending[op_id]
-            return st
-        self.stats.record(Protocol.ZEROCOPY, size)
-        return posted(ctx=op_id)
-
-    def _post_get(self, rank: int, buf: Any, tag: int, size: int,
-                  local_comp, remote_buf, dev: Device,
-                  allow_retry: bool) -> Status:
-        op_id = next(_op_ids)
-        self._pending[op_id] = PendingOp(CommKind.GET, buf, size, tag, rank,
-                                         local_comp, lane=dev.lane)
-        msg = WireMsg(WireKind.GET_REQ, self.rank, rank, tag=tag, size=size,
-                      remote_buf=remote_buf, op_id=op_id,
-                      device_index=dev.index)
-        st = self._submit(msg, dev, allow_retry)
-        if st.is_retry():
-            del self._pending[op_id]
-            return st
-        self.stats.record(Protocol.ZEROCOPY, size)
-        return posted(ctx=op_id)
-
-    def _reply_cts(self, rts: WireMsg, recv_buf: Any, recv_comp, dev: Device
-                   ) -> None:
-        cts = WireMsg(WireKind.CTS, self.rank, rts.src, tag=rts.tag,
-                      op_id=rts.op_id, device_index=rts.device_index)
-        cts.payload = (len(self._rendezvous_landing),)
-        self._rendezvous_landing.append((recv_buf, recv_comp, dev))
-        self.stats.handshakes += 1
-        if not self.cluster.fabric.try_push(cts):
-            dev.backlog.push(("wire", cts))
-
-    # -- progress (§3.2.6, Figure 1) -----------------------------------------
     def progress(self, device: Optional[Device] = None,
                  max_msgs: int = 0) -> bool:
-        """Drive one progress pass on ``device``; returns True if any work
-        was done (paper: do_background_work)."""
-        dev: Device = device or self.default_device
-        dev.progresses += 1
-        did = False
+        return self.engine.progress(device, max_msgs)
 
-        # (3) retry backlogged requests first
-        while not dev.backlog.empty_flag:
-            item, st = dev.backlog.pop()
-            if st.is_retry():
-                break
-            tag0 = item[0]
-            if tag0 == "wire":
-                msg = item[1]
-                if not self.cluster.fabric.try_push(msg):
-                    dev.backlog.push(item)      # still full; stop retrying
-                    break
-                if msg.op_id >= 0:
-                    dev.pending_tx.append(msg.op_id)
-                did = True
-            elif tag0 == "post":
-                (_, kind, rank, buf, tag, size, local_comp, remote_comp,
-                 policy, uctx) = item
-                st2 = self._post(kind=kind, rank=rank, buf=buf, tag=tag,
-                                 size=size, local_comp=local_comp,
-                                 remote_buf=None, remote_comp=remote_comp,
-                                 device=dev, matching_policy=policy,
-                                 allow_retry=True, user_context=uctx)
-                if st2.is_retry():
-                    dev.backlog.push(item)
-                    break
-                did = True
-
-        # source-side completions (bufcopy send done on the wire)
-        while dev.pending_tx:
-            op_id = dev.pending_tx.popleft()
-            op = self._pending.get(op_id)
-            if op is None:
-                continue
-            if op.kind in (CommKind.SEND, CommKind.AM):
-                if op.packet >= 0:              # return packet to the pool
-                    self.packet_pool.put(op.lane, op.packet)
-                    self._signal(op.local_comp,
-                                 done(rank=op.peer, tag=op.tag))
-                    del self._pending[op_id]
-                # zerocopy sends complete on CTS+RDMA, not here
-            elif op.kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
-                self._signal(op.local_comp, done(rank=op.peer, tag=op.tag))
-                del self._pending[op_id]
-            did = True
-
-        # (4) poll incoming for this device stream and react
-        for msg in self.cluster.fabric.drain(self.rank, dev.index, max_msgs):
-            self._react(msg, dev)
-            did = True
-        return did
-
-    def _react(self, msg: WireMsg, dev: Device) -> None:
-        k = msg.kind
-        if k == WireKind.EAGER_AM:
-            comp = self.rcomp_registry[msg.rcomp]
-            st = done(msg.payload, rank=msg.src, tag=msg.tag)
-            result = comp.signal(st)
-            if isinstance(result, Status) and result.is_retry():
-                dev.backlog.push(("wire", msg))  # CQ full: repost locally
-        elif k == WireKind.EAGER_SEND:
-            key = make_key(msg.src, msg.tag, msg.matching_policy)
-            match = self.matching.insert(
-                key, MatchKind.SEND, ("eager", msg.payload, msg.src, msg.tag))
-            if match is not None:
-                _, buf, comp, rdev = match
-                self._deliver_recv(buf, msg.payload, comp, msg.src, msg.tag)
-        elif k == WireKind.RTS:
-            key = make_key(msg.src, msg.tag, msg.matching_policy)
-            if msg.rcomp is not None:           # zero-copy active message
-                # allocate a landing buffer and CTS straight away
-                landing = np.zeros(msg.size, np.uint8)
-                comp = self.rcomp_registry[msg.rcomp]
-                self._reply_cts(msg, landing, comp, dev)
-                return
-            match = self.matching.insert(key, MatchKind.SEND, ("rts", msg))
-            if match is not None:
-                _, buf, comp, rdev = match
-                self._reply_cts(msg, buf, comp, dev)
-        elif k == WireKind.CTS:
-            op = self._pending.pop(msg.op_id, None)
-            if op is None:
-                raise FatalError("CTS for unknown op")
-            landing_idx = msg.payload[0]
-            data = _payload_to_bytes(op.buf)
-            rdma = WireMsg(WireKind.RDMA_PAYLOAD, self.rank, msg.src,
-                           tag=op.tag, payload=data, size=op.size,
-                           op_id=landing_idx, device_index=msg.device_index)
-            if not self.cluster.fabric.try_push(rdma):
-                dev.backlog.push(("wire", rdma))
-            self._signal(op.local_comp, done(rank=op.peer, tag=op.tag))
-        elif k == WireKind.RDMA_PAYLOAD:
-            buf, comp, rdev = self._rendezvous_landing[msg.op_id]
-            self._deliver_recv(buf, msg.payload, comp, msg.src, msg.tag)
-        elif k == WireKind.PUT:
-            region_id, offset = msg.remote_buf
-            region: MemoryRegion = self.memory_regions[region_id]
-            region.buf[offset:offset + msg.size] = msg.payload[:msg.size]
-            if msg.rcomp is not None:           # put with signal
-                comp = self.rcomp_registry[msg.rcomp]
-                comp.signal(done(msg.payload, rank=msg.src, tag=msg.tag))
-        elif k == WireKind.GET_REQ:
-            region_id, offset = msg.remote_buf
-            region = self.memory_regions[region_id]
-            data = region.buf[offset:offset + msg.size].copy()
-            resp = WireMsg(WireKind.GET_RESP, self.rank, msg.src,
-                           tag=msg.tag, payload=data, size=msg.size,
-                           op_id=msg.op_id, device_index=msg.device_index)
-            if not self.cluster.fabric.try_push(resp):
-                dev.backlog.push(("wire", resp))
-        elif k == WireKind.GET_RESP:
-            op = self._pending.pop(msg.op_id, None)
-            if op is None:
-                raise FatalError("GET_RESP for unknown op")
-            view = _as_bytes_view(op.buf)
-            view[:msg.size] = msg.payload[:msg.size]
-            self._signal(op.local_comp, done(msg.payload, rank=op.peer,
-                                             tag=op.tag))
-        else:
-            raise FatalError(f"unknown wire kind {k}")
-
-    def _deliver_recv(self, buf: Any, payload: np.ndarray, comp,
-                      src: int, tag: int) -> None:
-        if buf is not None:
-            view = _as_bytes_view(buf)
-            n = min(view.nbytes, payload.nbytes)
-            view[:n] = payload[:n]
-        self._signal(comp, done(payload, rank=src, tag=tag))
-
-    @staticmethod
-    def _signal(comp: Optional[CompletionObject], st: Status) -> None:
-        if comp is not None:
-            comp.signal(st)
-
-    # rendezvous landing zones (CTS handshake state)
+    # back-compat: rendezvous landing zones (CTS handshake state)
     @property
     def _rendezvous_landing(self) -> list:
-        return self._landing
+        return self.rdv.landing
+
+    @property
+    def _pending(self) -> Dict[int, PendingOp]:
+        return self.pending_ops
 
 
 # -- module-level progress with the paper's OFF spelling --------------------
@@ -584,6 +215,17 @@ class LocalCluster:
 
     def __getitem__(self, rank: int) -> Runtime:
         return self.runtimes[rank]
+
+    def alloc_endpoint(self, n_devices: int = 1,
+                       stripe: str = "round_robin",
+                       progress: str = "shared",
+                       name: str = "endpoint") -> List[Endpoint]:
+        """Allocate a symmetric endpoint on every rank (device streams are
+        matched by index, so peers must replicate the same bundle shape);
+        returns the per-rank endpoints, indexed by rank."""
+        return [rt.alloc_endpoint(n_devices, stripe, progress,
+                                  name=f"{name}@{rt.rank}")
+                for rt in self.runtimes]
 
     def progress_all(self, rounds: int = 1) -> int:
         """Drive every device of every rank; returns #work events."""

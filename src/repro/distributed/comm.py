@@ -28,8 +28,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 from repro.core import collectives as C
 from repro.core.modes import CommConfig, CommMode
+from repro.core.progress import EndpointSpec
 
 AxisSpec = Union[str, Tuple[str, ...], None]
 
@@ -48,16 +51,40 @@ class Comm:
     model_axis: AxisSpec = None
     data_axis: AxisSpec = None
     fsdp: bool = True          # gather FSDP-dim weights in weight()
+    # Endpoint spec: which resource bundle this Comm's collectives ride.
+    # On the host runtime an EndpointSpec materializes as N devices; in
+    # the in-graph layer the same knob selects the collective channel
+    # count (chunk-streams) and the shared/dedicated schedule mode.
+    endpoint: Optional[EndpointSpec] = None
+
+    @property
+    def cfg(self) -> CommConfig:
+        """The CommConfig collectives actually run with: the endpoint spec
+        overrides channel count and mode (BSP is never overridden — the
+        baseline stays the baseline)."""
+        if self.endpoint is None or self.config.mode == CommMode.BSP:
+            return self.config
+        # the progress policy alone picks the mode: a shared multi-device
+        # spec stays LCI_SHARED (one chunk-stream), exactly as
+        # EndpointSpec.for_mode round-trips it
+        mode = (CommMode.LCI_DEDICATED
+                if self.endpoint.progress == "dedicated"
+                else CommMode.LCI_SHARED)
+        return dataclasses.replace(self.config, mode=mode,
+                                   n_channels=self.endpoint.n_devices)
+
+    def with_endpoint(self, spec: EndpointSpec) -> "Comm":
+        return dataclasses.replace(self, endpoint=spec)
 
     # -- axis sizes (1 when unbound) ----------------------------------------
     @property
     def tp(self) -> int:
-        return math.prod([lax.axis_size(a)
+        return math.prod([axis_size(a)
                           for a in _axes(self.model_axis)] or [1])
 
     @property
     def dp(self) -> int:
-        return math.prod([lax.axis_size(a)
+        return math.prod([axis_size(a)
                           for a in _axes(self.data_axis)] or [1])
 
     def _one_model_axis(self) -> Optional[str]:
@@ -73,7 +100,7 @@ class Comm:
         ax = self._one_model_axis()
         if ax is None:
             return jnp.tensordot(x, w, axes=1).astype(x.dtype)
-        return C.all_gather_matmul(x, w, ax, self.config)
+        return C.all_gather_matmul(x, w, ax, self.cfg)
 
     def matmul_rs(self, x: jax.Array, w: jax.Array) -> jax.Array:
         """``reduce_scatter(x @ w, axis=0 over model)`` — row-parallel exit.
@@ -81,7 +108,7 @@ class Comm:
         ax = self._one_model_axis()
         if ax is None:
             return jnp.tensordot(x, w, axes=1).astype(x.dtype)
-        return C.matmul_reduce_scatter(x, w, ax, self.config)
+        return C.matmul_reduce_scatter(x, w, ax, self.cfg)
 
     def matmul_ar(self, x: jax.Array, w: jax.Array) -> jax.Array:
         """``allreduce(x @ w)`` — row-parallel exit without SP (decode path
@@ -98,13 +125,13 @@ class Comm:
         ax = self._one_model_axis()
         if ax is None:
             return x
-        return C.all_gather(x, ax, self.config, axis=axis)
+        return C.all_gather(x, ax, self.cfg, axis=axis)
 
     def rs_seq(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
         ax = self._one_model_axis()
         if ax is None:
             return x
-        return C.reduce_scatter(x, ax, self.config, axis=axis)
+        return C.reduce_scatter(x, ax, self.cfg, axis=axis)
 
     def psum_model(self, x: jax.Array) -> jax.Array:
         ax = self._one_model_axis()
@@ -147,7 +174,7 @@ class Comm:
         if ax is None:
             return x
         return C.all_to_all(x, ax, split_axis=split_axis,
-                            concat_axis=concat_axis, config=self.config)
+                            concat_axis=concat_axis, config=self.cfg)
 
     def model_index(self) -> jax.Array:
         ax = self._one_model_axis()
@@ -170,7 +197,7 @@ class Comm:
         if not axes:
             return w
         for a in reversed(axes):          # innermost axis gathered first
-            w = C.all_gather(w, a, self.config, axis=fsdp_axis)
+            w = C.all_gather(w, a, self.cfg, axis=fsdp_axis)
         return w
 
     # -- data-parallel reductions (loss/grad sync) ----------------------------
@@ -184,14 +211,14 @@ class Comm:
         """Flat index along the (possibly multi-axis) data dimension."""
         idx = jnp.zeros((), jnp.int32)
         for a in _axes(self.data_axis):
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * axis_size(a) + lax.axis_index(a)
         return idx
 
     def ag_data(self, x: jax.Array, *, axis: int) -> jax.Array:
         """All-gather over the data axes along ``axis`` (tiny tensors —
         the 2D-TP serving column reassembly)."""
         for a in reversed(_axes(self.data_axis)):
-            x = C.all_gather(x, a, self.config, axis=axis)
+            x = C.all_gather(x, a, self.cfg, axis=axis)
         return x
 
     def pmean_data(self, x: jax.Array) -> jax.Array:

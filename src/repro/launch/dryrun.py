@@ -28,6 +28,8 @@ import sys
 import time
 from typing import Any, Dict, Optional, Tuple
 
+from repro.compat import shard_map
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -219,7 +221,7 @@ def build_cell(arch: str, shape_name: str, mesh, mode: CommMode,
         metric_keys = ("loss", "ce", "ntok", "aux_lb", "aux_z",
                        "dropped_frac", "grad_norm")
         mspecs = {k: P() for k in metric_keys}
-        fn = jax.shard_map(step, mesh=mesh,
+        fn = shard_map(step, mesh=mesh,
                            in_specs=(state_specs, bspecs),
                            out_specs=(state_specs, mspecs),
                            check_vma=False)
@@ -232,7 +234,7 @@ def build_cell(arch: str, shape_name: str, mesh, mode: CommMode,
         from repro.serving.engine import make_prefill_step
         prefill = make_prefill_step(cfg, comm)
         out_specs = (P(daxes), P(daxes, None))
-        fn = jax.shard_map(prefill, mesh=mesh,
+        fn = shard_map(prefill, mesh=mesh,
                            in_specs=(param_pspecs, bspecs),
                            out_specs=out_specs, check_vma=False)
         jitted = jax.jit(fn, in_shardings=(shard(mesh, param_pspecs),
@@ -249,7 +251,7 @@ def build_cell(arch: str, shape_name: str, mesh, mode: CommMode,
                            n_memory=n_memory_tokens(cfg)))
     cspecs = cache_pspecs(cfg, batch=b, data_axis=daxes, tp2d=tp2d)
     tok_spec = P() if (joint or tp2d) else P(daxes)
-    fn = jax.shard_map(serve, mesh=mesh,
+    fn = shard_map(serve, mesh=mesh,
                        in_specs=(param_pspecs, cspecs, tok_spec),
                        out_specs=(tok_spec, cspecs), check_vma=False)
     jitted = jax.jit(fn, in_shardings=(shard(mesh, param_pspecs),

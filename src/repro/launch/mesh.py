@@ -21,16 +21,17 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import make_mesh
+
 from repro.core.modes import CommConfig, CommMode
+from repro.core.progress import EndpointSpec
 from repro.distributed.comm import Comm
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -38,9 +39,12 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def make_comm(mesh: Mesh, config: Optional[CommConfig] = None, *,
-              fsdp: bool = True) -> Comm:
+              fsdp: bool = True,
+              endpoint: Optional[EndpointSpec] = None) -> Comm:
+    """Build the step Comm; ``endpoint`` picks the resource bundle the
+    step's collectives ride (its width becomes the channel count)."""
     return Comm(config or CommConfig(), model_axis="model",
-                data_axis=data_axes(mesh), fsdp=fsdp)
+                data_axis=data_axes(mesh), fsdp=fsdp, endpoint=endpoint)
 
 
 def shard(mesh: Mesh, tree_pspecs):

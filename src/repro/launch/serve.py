@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
         --requests 16 --max-new 12
+
+``--transport`` routes requests over the host runtime's endpoints:
+prompts ride a by-size-striped prefill endpoint, generated tokens a
+separate decode endpoint (size-class isolation, DESIGN.md §8).
 """
 import os
 
@@ -18,8 +22,9 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke
 from repro.core.completion import CompletionQueue
+from repro.core.runtime import LocalCluster
 from repro.models.registry import build_model
-from repro.serving import PagedKVAllocator, ServeScheduler
+from repro.serving import PagedKVAllocator, ServeScheduler, ServeTransport
 from repro.serving.engine import DecodeCache, init_cache, make_serve_step
 
 
@@ -31,6 +36,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--transport", action="store_true",
+                    help="route requests over prefill/decode endpoints")
+    ap.add_argument("--prefill-devices", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -53,23 +61,42 @@ def main():
         return np.asarray(nxt)[:len(tokens)]
 
     alloc = PagedKVAllocator(n_pages=256, page_size=16)
+    transport = None
+    if args.transport:
+        transport = ServeTransport(LocalCluster(2),
+                                   n_prefill=args.prefill_devices)
     sched = ServeScheduler(decode_fn, max_batch=args.max_batch,
-                           allocator=alloc)
+                           allocator=alloc, transport=transport)
     cq = CompletionQueue()
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=8)
-        st = sched.submit(prompt, args.max_new, comp=cq, allow_retry=False)
-        assert not st.is_retry()
+        if transport is not None:
+            sched.submit_remote(prompt, args.max_new)
+        else:
+            st = sched.submit(prompt, args.max_new, comp=cq,
+                              allow_retry=False)
+            assert not st.is_retry()
     steps = 0
+    n_tok = 0
     while sched.completed < args.requests:
         sched.step()
+        if transport is not None:
+            transport.pump()
+            for _rid, toks in transport.poll_results():
+                n_tok += len(toks)
         steps += 1
         if steps > args.requests * args.max_new * 4:
             raise SystemExit("scheduler stalled")
     dt = time.time() - t0
-    n_tok = 0
+    if transport is not None:
+        transport.pump()
+        for _rid, toks in transport.poll_results():
+            n_tok += len(toks)
+        per_dev = [d["posts"] for d in
+                   transport.counters()["prefill"][0]["devices"]]
+        print(f"[serve] prefill endpoint posts per device: {per_dev}")
     while True:
         st = cq.pop()
         if st.is_retry():

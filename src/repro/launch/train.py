@@ -26,6 +26,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.compat import make_mesh, shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke
@@ -78,8 +80,7 @@ def main():
 
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((d, m), ("data", "model"))
         comm = Comm(CommConfig(mode=parse_mode(args.mode)),
                     model_axis="model", data_axis="data",
                     fsdp=cfg.fsdp_params)
@@ -95,7 +96,7 @@ def main():
             bspec["frames"] = P("model", "data", None)
         mkeys = ("loss", "ce", "ntok", "aux_lb", "aux_z", "dropped_frac",
                  "grad_norm")
-        step_fn = jax.jit(jax.shard_map(
+        step_fn = jax.jit(shard_map(
             step_inner, mesh=mesh, in_specs=(sspecs, bspec),
             out_specs=(sspecs, {k: P() for k in mkeys}), check_vma=False),
             donate_argnums=(0,))

@@ -29,6 +29,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 from repro.core import collectives as C
 from repro.distributed.comm import Comm, _axes
 from repro.models.common import ParamSpec
@@ -36,8 +38,8 @@ from repro.models.common import ParamSpec
 
 def _psum_data(x: jax.Array, comm: Comm) -> jax.Array:
     for a in _axes(comm.data_axis):
-        if x.ndim >= 1 and x.shape[0] % jax.lax.axis_size(a) == 0:
-            x = C.all_reduce(x, a, comm.config)     # ring rs+ag in LCI modes
+        if x.ndim >= 1 and x.shape[0] % axis_size(a) == 0:
+            x = C.all_reduce(x, a, comm.cfg)        # ring rs+ag in LCI modes
         else:
             x = jax.lax.psum(x, a)
     return x

@@ -42,6 +42,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 from repro.distributed.comm import Comm, _axes, local_comm
 from repro.models.attention import (combine_decode_partials, decode_attention)
 from repro.models.blocks import TPPlan, layer_window, tp_plan
@@ -215,13 +217,13 @@ def _kv_axes(comm: Comm, *, joint: bool):
 def _axes_index(comm: Comm, axes) -> jax.Array:
     idx = jnp.zeros((), jnp.int32)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
 def _axes_size(comm: Comm, axes) -> int:
     import math
-    return math.prod([jax.lax.axis_size(a) for a in axes] or [1])
+    return math.prod([axis_size(a) for a in axes] or [1])
 
 
 def _psum_axes(x, axes):

@@ -7,22 +7,114 @@ ids), ``posted`` (admitted, completion object will be signaled), or
 and is re-admitted as pages free up).  Completion objects are real LCI
 objects: pass a CompletionQueue to poll finished requests, or a handler
 for push delivery.
+
+With a :class:`ServeTransport`, request/response traffic actually rides
+the host runtime: prompts (large, bursty) are posted on a **prefill
+endpoint** striped by size class, generated tokens (tiny,
+latency-sensitive) on a separate narrow **decode endpoint** — so decode
+results never queue behind a bulk prompt on the same device stream (the
+paper's size-class-isolation "new possibilities" scenario, §3.2.3).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.backlog import BacklogQueue
 from repro.core.completion import CompletionObject, CompletionQueue
 from repro.core.matching import HostMatchingEngine, MatchKind
+from repro.core.runtime import LocalCluster
 from repro.core.status import ErrorCode, Status, done, posted, retry
 from .kv_cache import PagedKVAllocator
 
 _req_ids = itertools.count()
+
+
+class ServeTransport:
+    """Client<->server request plumbing over striped endpoints.
+
+    One :class:`~repro.core.runtime.LocalCluster` rank is the client, one
+    the server.  Two symmetric endpoint bundles are allocated cluster-wide
+    (device streams match by index, so every rank replicates the shape):
+
+    * ``prefill`` — ``n_prefill`` devices, ``by_size`` stripe: prompt
+      payloads sort into size classes, so a short prompt is never stuck
+      behind a long one on the same stream.
+    * ``decode``  — ``n_decode`` device(s), round-robin: the token-return
+      path, isolated from all prompt traffic.
+    """
+
+    def __init__(self, cluster: LocalCluster, *, client_rank: int = 0,
+                 server_rank: int = 1, n_prefill: int = 2,
+                 n_decode: int = 1):
+        self.cluster = cluster
+        self.client_rank = client_rank
+        self.server_rank = server_rank
+        self.prefill = cluster.alloc_endpoint(
+            n_devices=n_prefill, stripe="by_size", progress="dedicated",
+            name="prefill")
+        self.decode = cluster.alloc_endpoint(
+            n_devices=n_decode, stripe="round_robin", name="decode")
+        server = cluster[server_rank]
+        client = cluster[client_rank]
+        self.prompt_cq = server.alloc_cq()
+        self._prompt_rc = server.register_rcomp(self.prompt_cq)
+        self.result_cq = client.alloc_cq()
+        self._result_rc = client.register_rcomp(self.result_cq)
+
+    # -- client side ---------------------------------------------------------
+    def send_prompt(self, rid: int, prompt: np.ndarray) -> Status:
+        """Post the prompt to the server over the prefill endpoint."""
+        payload = np.ascontiguousarray(prompt, np.int32).view(np.uint8)
+        return self.prefill[self.client_rank].post_am(
+            self.server_rank, payload, remote_comp=self._prompt_rc, tag=rid,
+            allow_retry=False)
+
+    def poll_results(self) -> List[Tuple[int, np.ndarray]]:
+        """Drain finished (rid, generated tokens) pairs at the client."""
+        out = []
+        while True:
+            st = self.result_cq.pop()
+            if st.is_retry():
+                return out
+            out.append((st.tag, np.asarray(st.get_buffer())
+                        .view(np.int32).copy()))
+
+    # -- server side ---------------------------------------------------------
+    def recv_prompts(self) -> List[Tuple[int, np.ndarray]]:
+        """Drain (rid, prompt) pairs that arrived over the wire."""
+        out = []
+        while True:
+            st = self.prompt_cq.pop()
+            if st.is_retry():
+                return out
+            out.append((st.tag, np.asarray(st.get_buffer())
+                        .view(np.int32).copy()))
+
+    def send_result(self, rid: int, tokens: np.ndarray) -> Status:
+        """Return generated ids over the decode endpoint (small messages —
+        they stripe onto the isolated decode devices)."""
+        payload = np.ascontiguousarray(tokens, np.int32).view(np.uint8)
+        return self.decode[self.server_rank].post_am(
+            self.client_rank, payload, remote_comp=self._result_rc, tag=rid,
+            allow_retry=False)
+
+    def pump(self, rounds: int = 4) -> int:
+        """Drive progress on both sides' endpoint devices."""
+        n = 0
+        for eps in (self.prefill, self.decode):
+            for ep in eps:
+                n += ep.progress(rounds)
+        return n
+
+    def counters(self) -> dict:
+        return {
+            "prefill": [ep.counters() for ep in self.prefill],
+            "decode": [ep.counters() for ep in self.decode],
+        }
 
 
 @dataclasses.dataclass
@@ -33,6 +125,7 @@ class Request:
     comp: Optional[CompletionObject]
     generated: List[int] = dataclasses.field(default_factory=list)
     position: int = 0
+    remote: bool = False                  # arrived over the ServeTransport
 
 
 class ServeScheduler:
@@ -46,11 +139,13 @@ class ServeScheduler:
     """
 
     def __init__(self, decode_fn: Callable, *, max_batch: int,
-                 allocator: PagedKVAllocator, eos_id: int = -1):
+                 allocator: PagedKVAllocator, eos_id: int = -1,
+                 transport: Optional[ServeTransport] = None):
         self.decode_fn = decode_fn
         self.max_batch = max_batch
         self.alloc = allocator
         self.eos_id = eos_id
+        self.transport = transport
         self.active: Dict[int, Request] = {}
         self.backlog = BacklogQueue()
         self.router = HostMatchingEngine()
@@ -82,9 +177,32 @@ class ServeScheduler:
         self.active[req.rid] = req
         return done()
 
+    def submit_remote(self, prompt: np.ndarray, max_new: int) -> int:
+        """Client-side submit: the prompt rides the prefill endpoint to the
+        server; results come back via ``transport.poll_results()``."""
+        if self.transport is None:
+            raise ValueError("submit_remote needs a ServeTransport")
+        rid = next(_req_ids)
+        payload = np.concatenate([np.array([max_new], np.int32),
+                                  np.asarray(prompt, np.int32)])
+        self.transport.send_prompt(rid, payload)
+        return rid
+
+    def _ingest_transport(self) -> None:
+        """Server side: admit prompts that arrived over the wire."""
+        self.transport.pump()
+        for rid, data in self.transport.recv_prompts():
+            req = Request(rid, data[1:], int(data[0]), comp=None,
+                          remote=True)
+            if self._admit(req).is_retry():
+                self.retries += 1
+                self.backlog.push(req)
+
     # -- engine progress -----------------------------------------------------
     def step(self) -> int:
         """One decode round over the active set; returns #finished."""
+        if self.transport is not None:
+            self._ingest_transport()
         # (3) drain the backlog first, exactly like the progress engine
         while not self.backlog.empty_flag and len(self.active) < \
                 self.max_batch:
@@ -115,6 +233,12 @@ class ServeScheduler:
     def _complete(self, req: Request) -> None:
         del self.active[req.rid]
         self.alloc.release(req.rid)
+        if req.remote:
+            self.transport.send_result(
+                req.rid, np.array(req.generated, np.int32))
+            self.transport.pump()
+            self.completed += 1
+            return
         st = done(np.array(req.generated, np.int32), tag=req.rid)
         if req.comp is not None:
             req.comp.signal(st)

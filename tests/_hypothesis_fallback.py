@@ -1,0 +1,72 @@
+"""Minimal stand-in for ``hypothesis`` on bare environments.
+
+Implements just the surface the test-suite uses — ``given``, ``settings``,
+and the ``integers/booleans/tuples/lists`` strategies — by drawing a fixed
+number of seeded-random examples.  Deterministic per test (the seed is the
+test name), no shrinking, no database.  When the real ``hypothesis`` is
+installed the test modules import it instead; this shim only keeps the
+property tests *running* (not just collected) without the dependency.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:  # noqa: N801 — mimics the `strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def tuples(*parts):
+        return _Strategy(lambda r: tuple(p.draw(r) for p in parts))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elem.draw(r) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    """Records ``max_examples`` for the enclosing ``given``."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    """Runs the test once per drawn example (no shrinking)."""
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples", 20)
+
+        # NOT functools.wraps: copying the signature would make pytest
+        # treat the injected arguments as fixtures.
+        def wrapper(*args):            # args = (self,) for methods, () else
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n_examples):
+                vals = tuple(s.draw(rng) for s in strats)
+                try:
+                    fn(*args, *vals)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example for {fn.__qualname__}: "
+                        f"{vals!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -3,14 +3,13 @@ import os
 import sys
 # PYTHONPATH set by conftest
 import jax, jax.numpy as jnp
-shard_map = jax.shard_map
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-shard_map = jax.shard_map
+from repro.compat import make_mesh, shard_map
 from repro.core import collectives as C
 from repro.core.modes import CommConfig, CommMode
 
-mesh = jax.make_mesh((8,), ("x",))
+mesh = make_mesh((8,), ("x",))
 key = jax.random.PRNGKey(0)
 X = jax.random.normal(key, (16, 32), jnp.float32)
 W = jax.random.normal(jax.random.PRNGKey(1), (32, 24), jnp.float32)

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
+
 from repro.core.modes import CommConfig, CommMode
 from repro.data import SyntheticPipeline
 from repro.distributed.comm import Comm
@@ -18,8 +20,7 @@ from repro.optim.adamw import OptState
 CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=4, d_ff=128, vocab=64, tp_target=4,
                   dtype=jnp.float32)
-MESH = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+MESH = make_mesh((2, 4), ("data", "model"))
 
 
 def run(compressed: bool, steps: int = 30):
@@ -47,7 +48,7 @@ def run(compressed: bool, steps: int = 30):
         return params, opt_state, error, comm.pmean_all(loss)
 
     sspec = OptState(P(), pspecs, pspecs, pspecs)
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         step, mesh=MESH,
         in_specs=(pspecs, sspec, err_specs, bspec),
         out_specs=(pspecs, sspec, err_specs, P()), check_vma=False))

@@ -7,14 +7,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
+
 from repro.core.modes import CommConfig, CommMode
 from repro.distributed.comm import Comm, local_comm
 from repro.models.common import ModelConfig
 from repro.models.registry import build_model
 from repro.optim import grad_sync
 
-MESH = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+MESH = make_mesh((2, 4), ("data", "model"))
 F = jnp.float32
 
 
@@ -45,7 +46,7 @@ def check(cfg, extra=None, extra_spec=None, grad_check=False):
             loss, _ = m.loss(p, bt, comm)
             return comm.pmean_data(loss)
 
-        f = jax.jit(jax.shard_map(dist_loss, mesh=MESH,
+        f = jax.jit(shard_map(dist_loss, mesh=MESH,
                                   in_specs=(pspecs, bspec), out_specs=P(),
                                   check_vma=False))
         loss_d = f(params, batch)
@@ -58,7 +59,7 @@ def check(cfg, extra=None, extra_spec=None, grad_check=False):
                 g = jax.grad(lambda pp: m.loss(pp, bt, comm)[0])(p)
                 return grad_sync(g, specs, comm)
 
-            fg = jax.jit(jax.shard_map(dist_grads, mesh=MESH,
+            fg = jax.jit(shard_map(dist_grads, mesh=MESH,
                                        in_specs=(pspecs, bspec),
                                        out_specs=pspecs, check_vma=False))
             grads_d = fg(params, batch)

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
+
 from repro.checkpoint import CheckpointStore
 from repro.core.modes import CommConfig, CommMode
 from repro.data import SyntheticPipeline
@@ -34,7 +36,7 @@ def make_step(mesh, specs, model, opt):
     pspecs = jax.tree_util.tree_map(lambda sp: sp.pspec(), specs)
     sspecs = TrainState(pspecs, OptState(P(), pspecs, pspecs, pspecs))
     bspec = {"tokens": P("model", "data"), "labels": P("model", "data")}
-    fn = jax.shard_map(make_train_step(model, specs, opt, comm), mesh=mesh,
+    fn = shard_map(make_train_step(model, specs, opt, comm), mesh=mesh,
                        in_specs=(sspecs, bspec),
                        out_specs=(sspecs, {k: P() for k in MKEYS}),
                        check_vma=False)
@@ -50,8 +52,7 @@ def main():
     pipe = SyntheticPipeline(vocab=256, seq_len=32, global_batch=8)
     wrap = lambda b: {k: jnp.asarray(v) for k, v in b.items()}
 
-    mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = make_mesh((2, 4), ("data", "model"))
     step_a, sspecs = make_step(mesh_a, specs, model, opt)
     for i in range(3):
         state, m = step_a(state, wrap(pipe.get_batch(i)))
@@ -62,8 +63,7 @@ def main():
         store.save(2, state, meta={"next_step": 3}, blocking=True)
 
         # ---- new mesh (4, 2): elastic restore ----
-        mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh_b = make_mesh((4, 2), ("data", "model"))
         host_state, manifest = store.restore(
             jax.tree_util.tree_map(np.asarray, state))
         step_b, sspecs_b = make_step(mesh_b, specs, model, opt)

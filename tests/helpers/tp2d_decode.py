@@ -3,7 +3,9 @@ FSDP-gather decode AND the local oracle on a (2,4) mesh."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P, NamedSharding
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import make_mesh, shard_map
 
 from repro.core.modes import CommConfig, CommMode
 from repro.distributed.comm import Comm, local_comm
@@ -11,8 +13,7 @@ from repro.models.common import ModelConfig
 from repro.models.registry import build_model
 from repro.serving.engine import cache_pspecs, init_cache, make_serve_step
 
-MESH = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+MESH = make_mesh((2, 4), ("data", "model"))
 F = jnp.float32
 
 
@@ -30,7 +31,7 @@ def check(cfg, batch=4):
         cspecs = cache_pspecs(cfg, batch=batch, tp2d=tp2d)
         tok_spec = P("data") if (batch > 1 and not tp2d) else P()
         serve = make_serve_step(cfg, comm, joint_kv=batch == 1, tp2d=tp2d)
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(shard_map(
             serve, mesh=MESH, in_specs=(pspecs, cspecs, tok_spec),
             out_specs=(tok_spec, cspecs), check_vma=False))
         cache = init_cache(cfg, S, batch)

@@ -1,0 +1,277 @@
+"""Endpoints, striping policies, dedicated engines, and deterministic
+back-pressure through the progress subsystem (paper §3.2.3 / §4.4)."""
+import numpy as np
+import pytest
+
+from repro.core import (CommConfig, Endpoint, EndpointSpec, ErrorCode,
+                        FatalError, LocalCluster, ProgressEngine,
+                        post_recv_x, post_send_x)
+from repro.core.modes import CommMode
+
+CFG = CommConfig(inject_max_bytes=64, bufcopy_max_bytes=512)
+
+
+@pytest.fixture()
+def pair():
+    cl = LocalCluster(2, CFG)
+    return cl, cl[0], cl[1]
+
+
+class TestBackPressure:
+    """Paper §4.4 steps (2)/(3): full fabric -> retry -> backlog -> drain,
+    deterministically and in order."""
+
+    def test_fill_retry_backlog_drain_in_order(self):
+        cl = LocalCluster(2, CFG, fabric_depth=2)
+        r0 = cl[0]
+        dev = r0.default_device
+        # fill the 2-deep wire queue
+        for tag in (0, 1):
+            assert post_send_x(r0, 1, np.full(8, tag, np.uint8), 8,
+                               tag)().is_done()
+        # (2) full queue surfaces retry as a *value*
+        st = post_send_x(r0, 1, np.full(8, 2, np.uint8), 8, 2)()
+        assert st.is_retry()
+        assert cl.fabric.full_events >= 1
+        assert dev.backlog.empty_flag            # retry did NOT enqueue
+        # (3) allow_retry=False parks ops in the backlog queue, in order
+        for tag in (2, 3):
+            st = post_send_x(r0, 1, np.full(8, tag, np.uint8), 8,
+                             tag).allow_retry(False)()
+            assert st.is_posted()
+            assert st.code == ErrorCode.POSTED_BACKLOG
+        assert not dev.backlog.empty_flag
+        # progress drains backlog FIFO behind the wire queue: delivery
+        # order at the receiver is exactly tag 0,1,2,3
+        cl.quiesce()
+        assert dev.backlog.empty_flag
+        assert cl.fabric.pending_to(1) == 0
+        order = []
+        for tag in range(4):
+            buf = np.zeros(8, np.uint8)
+            st = post_recv_x(cl[1], 0, buf, 8, tag)()
+            assert st.is_done()
+            order.append(int(buf[0]))
+        assert order == [0, 1, 2, 3]
+
+    def test_backlogged_op_survives_multiple_full_rounds(self):
+        cl = LocalCluster(2, CFG, fabric_depth=1)
+        r0 = cl[0]
+        post_send_x(r0, 1, np.zeros(8, np.uint8), 8, 0)()
+        st = post_send_x(r0, 1, np.zeros(8, np.uint8), 8,
+                         1).allow_retry(False)()
+        assert st.code == ErrorCode.POSTED_BACKLOG
+        # progressing only the sender can't free the depth-1 queue, the
+        # backlog op stays parked (no loss); receiver progress unblocks it
+        r0.progress()
+        assert cl.fabric.pending_to(1) == 1
+        cl.quiesce()
+        assert cl.fabric.pending_to(1) == 0
+
+
+class TestStriping:
+    def test_round_robin_lands_evenly(self, pair):
+        cl, r0, r1 = pair
+        eps = cl.alloc_endpoint(n_devices=3, stripe="round_robin",
+                                name="rr")
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        for i in range(9):
+            assert eps[0].post_am(1, np.full(8, i, np.uint8),
+                                  remote_comp=rc).is_done()
+        cl.quiesce()
+        assert [d.posts for d in eps[0].devices] == [3, 3, 3]
+        assert [d.pushes for d in eps[0].devices] == [3, 3, 3]
+        got = sorted(int(cq.pop().get_buffer()[0]) for _ in range(9))
+        assert got == list(range(9))
+
+    def test_by_peer_pins_each_peer_to_one_device(self):
+        cl = LocalCluster(4, CFG)
+        eps = cl.alloc_endpoint(n_devices=2, stripe="by_peer", name="bp")
+        cqs = [cl[r].alloc_cq() for r in range(4)]
+        rcs = [cl[r].register_rcomp(cqs[r]) for r in range(4)]
+        for peer in (1, 2, 3, 1, 3):
+            eps[0].post_am(peer, np.zeros(8, np.uint8), remote_comp=rcs[peer])
+        cl.quiesce()
+        # peers 1,3 (odd) -> device 1; peer 2 -> device 0
+        assert [d.posts for d in eps[0].devices] == [1, 4]
+        # device choice is a pure function of the peer
+        assert (eps[0].select_device(rank=2) is eps[0].devices[0]
+                and eps[0].select_device(rank=3) is eps[0].devices[1])
+
+    def test_by_size_isolates_size_classes(self, pair):
+        cl, r0, r1 = pair
+        eps = cl.alloc_endpoint(n_devices=2, stripe="by_size", name="bs")
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        for _ in range(3):
+            eps[0].post_am(1, np.zeros(8, np.uint8), remote_comp=rc)
+        eps[0].post_am(1, np.zeros(4096, np.uint8), remote_comp=rc)
+        cl.quiesce()
+        # small (<= inject threshold) -> device 0, bulk -> device 1
+        assert [d.posts for d in eps[0].devices] == [3, 1]
+
+    def test_explicit_size_boundaries(self, pair):
+        cl, r0, r1 = pair
+        spec = EndpointSpec(name="custom", n_devices=3, stripe="by_size",
+                            size_boundaries=(100, 1000))
+        ep = r0.alloc_endpoint(spec=spec)
+        assert ep.select_device(size=50) is ep.devices[0]
+        assert ep.select_device(size=500) is ep.devices[1]
+        assert ep.select_device(size=5000) is ep.devices[2]
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(FatalError):
+            EndpointSpec(stripe="hash")
+        with pytest.raises(FatalError):
+            EndpointSpec(progress="thread")
+        with pytest.raises(FatalError):
+            EndpointSpec(n_devices=0)
+
+
+class TestProgressPolicy:
+    def test_dedicated_allocates_engine_per_device(self, pair):
+        cl, r0, r1 = pair
+        ep = r0.alloc_endpoint(n_devices=3, progress="dedicated")
+        assert len(ep.engines) == 3
+        assert all(e is not r0.engine for e in ep.engines)
+        assert [e.devices for e in ep.engines] == \
+            [[d] for d in ep.devices]
+
+    def test_shared_uses_runtime_engine(self, pair):
+        cl, r0, r1 = pair
+        ep = r0.alloc_endpoint(n_devices=2, progress="shared")
+        assert ep.engines == [r0.engine]
+
+    def test_dedicated_engines_deliver(self, pair):
+        cl, r0, r1 = pair
+        eps = cl.alloc_endpoint(n_devices=2, progress="dedicated",
+                                name="ded")
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        for i in range(4):
+            eps[0].post_am(1, np.full(8, i, np.uint8), remote_comp=rc)
+        # drive ONLY the endpoint's own engines (no cluster-wide quiesce)
+        for _ in range(8):
+            eps[0].progress()
+            eps[1].progress()
+        got = sorted(int(cq.pop().get_buffer()[0]) for _ in range(4))
+        assert got == [0, 1, 2, 3]
+        assert all(e.passes > 0 for e in eps[1].engines)
+
+    def test_for_mode_maps_comm_modes(self):
+        spec = EndpointSpec.for_mode(CommMode.LCI_DEDICATED, 4)
+        assert spec.progress == "dedicated" and spec.n_devices == 4
+        spec = EndpointSpec.for_mode(CommMode.LCI_SHARED, 4)
+        assert spec.progress == "shared"
+
+
+class TestEndpointLifecycle:
+    def test_alloc_free_roundtrip(self, pair):
+        cl, r0, r1 = pair
+        n0 = len(r0.devices)
+        ep = r0.alloc_endpoint(n_devices=2)
+        assert len(r0.devices) == n0 + 2
+        r0.free_endpoint(ep)
+        assert len(r0.devices) == n0 and not r0.endpoints
+
+    def test_device_indices_never_reused(self, pair):
+        cl, r0, r1 = pair
+        ep_a = r0.alloc_endpoint(n_devices=2)
+        ep_b = r0.alloc_endpoint(n_devices=1)
+        live = ep_b.devices[0].index
+        r0.free_endpoint(ep_a)
+        ep_c = r0.alloc_endpoint(n_devices=2)
+        # a freed device's fabric stream must never alias a later bundle
+        assert live not in [d.index for d in ep_c.devices]
+
+    def test_free_with_undrained_traffic_rejected(self):
+        cl = LocalCluster(2, CFG)
+        eps = cl.alloc_endpoint(n_devices=1, name="busy")
+        cq = cl[1].alloc_cq()
+        rc = cl[1].register_rcomp(cq)
+        eps[0].post_am(1, np.zeros(8, np.uint8), remote_comp=rc)
+        # the message sits undrained in rank 1's incoming stream
+        with pytest.raises(FatalError):
+            cl[1].free_endpoint(eps[1])
+        cl.quiesce()
+        cl[1].free_endpoint(eps[1])          # drained: free succeeds
+
+    def test_free_endpoint_is_atomic(self):
+        cl = LocalCluster(2, CFG)
+        eps = cl.alloc_endpoint(n_devices=2, stripe="round_robin",
+                                name="atomic")
+        cq = cl[1].alloc_cq()
+        rc = cl[1].register_rcomp(cq)
+        eps[0].post_am(1, np.zeros(8, np.uint8), remote_comp=rc)
+        eps[0].post_am(1, np.zeros(8, np.uint8), remote_comp=rc)
+        # drain only the FIRST stream: the second device stays busy
+        cl[1].progress(eps[1].devices[0])
+        n_before = len(cl[1].devices)
+        with pytest.raises(FatalError):
+            cl[1].free_endpoint(eps[1])
+        # the failed free must not have removed ANY device
+        assert len(cl[1].devices) == n_before
+        assert eps[1] in cl[1].endpoints
+        cl.quiesce()
+        cl[1].free_endpoint(eps[1])          # retry after drain succeeds
+        assert len(cl[1].devices) == n_before - 2
+
+    def test_comm_cfg_round_trips_progress_policy(self):
+        from repro.distributed.comm import Comm
+        base = Comm(CommConfig(mode=CommMode.LCI_SHARED))
+        shared = base.with_endpoint(
+            EndpointSpec.for_mode(CommMode.LCI_SHARED, 4))
+        assert shared.cfg.mode == CommMode.LCI_SHARED
+        assert shared.cfg.n_channels == 4
+        ded = base.with_endpoint(
+            EndpointSpec.for_mode(CommMode.LCI_DEDICATED, 4))
+        assert ded.cfg.mode == CommMode.LCI_DEDICATED
+        bsp = Comm(CommConfig(mode=CommMode.BSP)).with_endpoint(
+            EndpointSpec(n_devices=4, progress="dedicated"))
+        assert bsp.cfg.mode == CommMode.BSP   # baseline never overridden
+
+    def test_cluster_alloc_is_symmetric(self, pair):
+        cl, r0, r1 = pair
+        eps = cl.alloc_endpoint(n_devices=2, name="sym")
+        assert len(eps) == 2
+        assert [d.index for d in eps[0].devices] == \
+            [d.index for d in eps[1].devices]
+
+    def test_counters_shape(self, pair):
+        cl, r0, r1 = pair
+        ep = r0.alloc_endpoint(n_devices=2, name="c")
+        c = ep.counters()
+        assert c["name"] == "c" and len(c["devices"]) == 2
+        assert {"index", "lane", "posts", "pushes", "progresses"} <= \
+            set(c["devices"][0])
+
+
+class TestServeTransport:
+    def test_prefill_decode_isolation_roundtrip(self):
+        from repro.serving import (PagedKVAllocator, ServeScheduler,
+                                   ServeTransport)
+        cl = LocalCluster(2, CFG)
+        tr = ServeTransport(cl, n_prefill=2, n_decode=1)
+        sched = ServeScheduler(lambda t, p: t + 1, max_batch=4,
+                               allocator=PagedKVAllocator(n_pages=64,
+                                                          page_size=4),
+                               transport=tr)
+        rids = [sched.submit_remote(np.array([i]), max_new=3)
+                for i in range(6)]
+        results = {}
+        for _ in range(100):
+            sched.step()
+            tr.pump()
+            for rid, toks in tr.poll_results():
+                results[rid] = toks
+            if len(results) == 6:
+                break
+        assert set(results) == set(rids)
+        assert all(len(v) == 3 for v in results.values())
+        c = tr.counters()
+        # prompts rode the prefill endpoint, tokens the decode endpoint —
+        # never the other way around
+        assert sum(d["posts"] for d in c["prefill"][0]["devices"]) == 6
+        assert sum(d["posts"] for d in c["decode"][1]["devices"]) == 6
+        assert sum(d["posts"] for d in c["decode"][0]["devices"]) == 0

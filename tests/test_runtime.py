@@ -3,7 +3,11 @@ test, plus protocol, RMA, back-pressure, and a hypothesis delivery
 property."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # bare env: seeded-random fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (CommConfig, LocalCluster, MatchingPolicy, Protocol,
                         post_am_x, post_get_x, post_put_x, post_recv_x,
