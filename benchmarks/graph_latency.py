@@ -1,0 +1,149 @@
+"""Async completion-graph overhead vs the Figure-1 reaction chain.
+
+Three cells, all moving the same N-hop ping-pong between two ranks
+(odd hops r0→r1, even hops r1→r0, each hop an 8-byte inject-class
+message unless ``--size`` says otherwise):
+
+* ``reaction_chain`` — the Figure-1 baseline: each hop is posted by hand
+  the moment the previous hop's completion handler fires, with explicit
+  progress in between.  This is the floor: pure posting+progress cost.
+* ``async_graph``   — the same chain expressed once as a
+  :class:`~repro.core.graph.CompletionGraph` of send/recv *comm nodes*
+  (``post_send_x``/``post_recv_x`` OFF builders, endpoint-routed):
+  ``graph.start()`` posts the ready ops and the progress engine signals
+  node completions.  The delta to ``reaction_chain`` is the per-node
+  price of the graph machinery.
+* ``host_graph``    — an N-node host-function chain through the same
+  executor: graph dispatch overhead with zero communication.
+
+Emits ``BENCH_graph_latency.json`` (same row schema as the other
+benchmarks) so later PRs can track the graph tax over time.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List
+
+if __package__ in (None, ""):                 # `python benchmarks/...py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (CommConfig, LocalCluster, post_recv_x, post_send_x)
+
+
+def _cluster(depth: int = 1 << 14) -> LocalCluster:
+    return LocalCluster(2, CommConfig(inject_max_bytes=64,
+                                      packets_per_lane=64),
+                        fabric_depth=depth)
+
+
+def run_reaction_chain(n_hops: int, size: int) -> float:
+    """Figure-1 baseline: hop i+1 posted from hop i's completion."""
+    cl = _cluster()
+    payload = np.zeros(size, np.uint8)
+    bufs = [np.zeros(size, np.uint8) for _ in range(n_hops)]
+    t0 = time.perf_counter()
+    for i in range(n_hops):
+        src, dst = (0, 1) if i % 2 == 0 else (1, 0)
+        landed = []
+        h = cl[dst].alloc_handler(landed.append)
+        post_recv_x(cl[dst], src, bufs[i], size, i).local_comp(h)()
+        post_send_x(cl[src], dst, payload, size, i)()
+        while not landed:                     # explicit progress (§3.2.6)
+            cl.progress_all()
+    return (time.perf_counter() - t0) / n_hops * 1e6
+
+
+def run_async_graph(n_hops: int, size: int, use_endpoint: bool = True
+                    ) -> tuple[float, "object"]:
+    """The same chain as ONE completion graph of comm nodes."""
+    cl = _cluster()
+    eps = cl.alloc_endpoint(n_devices=1, name="graph") if use_endpoint \
+        else None
+    payload = np.zeros(size, np.uint8)
+    bufs = [np.zeros(size, np.uint8) for _ in range(n_hops)]
+    g = cl[0].alloc_graph("ping-chain")
+
+    def _ep(b, rank):
+        return b.endpoint(eps[rank]) if eps is not None else b
+
+    prev_recv = None
+    for i in range(n_hops):
+        src, dst = (0, 1) if i % 2 == 0 else (1, 0)
+        recv = g.add_comm(_ep(post_recv_x(cl[dst], src, bufs[i], size, i),
+                              dst), name=f"recv{i}")
+        send_deps = [prev_recv] if prev_recv is not None else []
+        g.add_comm(_ep(post_send_x(cl[src], dst, payload, size, i), src),
+                   deps=send_deps, name=f"send{i}")
+        prev_recv = recv
+
+    t0 = time.perf_counter()
+    g.start()
+    g.wait()                                  # drives the cluster's progress
+    us = (time.perf_counter() - t0) / n_hops * 1e6
+    g.assert_partial_order()
+    return us, g
+
+
+def run_host_graph(n_nodes: int) -> float:
+    """Pure graph-executor dispatch cost: an N-node host-fn chain."""
+    cl = _cluster()
+    g = cl[0].alloc_graph("host-chain")
+    prev = ()
+    for i in range(n_nodes):
+        prev = (g.add_node(lambda *a: i, deps=list(prev), name=f"n{i}"),)
+    t0 = time.perf_counter()
+    g.execute()
+    return (time.perf_counter() - t0) / n_nodes * 1e6
+
+
+def run(quick: bool = True, n_hops: int = 0, size: int = 8) -> List[dict]:
+    n_hops = n_hops or (64 if quick else 256)
+    rows = []
+    host_us = run_host_graph(n_hops)
+    rows.append({"bench": "graph_latency", "case": f"host_graph/{n_hops}n",
+                 "us_per_call": host_us,
+                 "derived": f"{host_us:.2f} us/node dispatch"})
+    chain_us = run_reaction_chain(n_hops, size)
+    rows.append({"bench": "graph_latency",
+                 "case": f"reaction_chain/{n_hops}hop/{size}B",
+                 "us_per_call": chain_us,
+                 "derived": f"{chain_us:.2f} us/hop (Figure-1 baseline)"})
+    graph_us, g = run_async_graph(n_hops, size)
+    rows.append({"bench": "graph_latency",
+                 "case": f"async_graph/{n_hops}hop/{size}B",
+                 "us_per_call": graph_us,
+                 "derived": f"{graph_us:.2f} us/hop "
+                            f"({graph_us / max(chain_us, 1e-9):.2f}x chain); "
+                            f"{g.counters()['comm_nodes']} comm nodes",
+                 "overhead_vs_chain": graph_us - chain_us})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--nodes", type=int, default=64,
+                    help="hops in the chain (= comm node pairs)")
+    ap.add_argument("--size", type=int, default=8,
+                    help="payload bytes per hop")
+    ap.add_argument("--json", default="BENCH_graph_latency.json",
+                    help="output JSON path ('' disables)")
+    args = ap.parse_args()
+
+    rows = run(n_hops=args.nodes, size=args.size)
+    for r in rows:
+        print(f"{r['case']:34s} {r['us_per_call']:9.3f} us  {r['derived']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "graph_latency", "nodes": args.nodes,
+                       "size": args.size, "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Prints ``name,case,us_per_call,derived`` CSV rows:
     resources     -> paper Fig 5  (CQ / matching / packet pool Mops)
     kmer          -> paper Fig 6  (HipMer k-mer stage, strong scaling)
     amt_pipeline  -> paper Fig 7  (AMT DAG: BSP barrier vs LCI async)
+    graph_latency -> §3.2.5 async graph tax vs the Figure-1 chain
     roofline      -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -27,14 +28,15 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (amt_pipeline, bandwidth, kmer, message_rate, resources,
-                   roofline)
+    from . import (amt_pipeline, bandwidth, graph_latency, kmer,
+                   message_rate, resources, roofline)
     suites = {
         "message_rate": message_rate.run,
         "bandwidth": bandwidth.run,
         "resources": resources.run,
         "kmer": kmer.run,
         "amt_pipeline": amt_pipeline.run,
+        "graph_latency": graph_latency.run,
         "roofline": roofline.run,
     }
     if args.only:

@@ -3,18 +3,25 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the paper's core concepts end to end on CPU:
-  1. runtime + resources (devices, completion queues, handlers)
-  2. post_comm / Table-1 (send-recv, active messages, RMA put)
+  1. runtime + resources (endpoints, the unified completion objects)
+  2. endpoint-centric posting / Table-1 (send-recv, AM, RMA put)
   3. the ternary done/posted/retry status protocol + OFF idiom
-  4. completion graphs (DAG-scheduled comm + compute)
-  5. endpoints and progress (striped multi-device bundles, DESIGN.md §8)
+  4. ASYNC completion graphs (comm ops as nodes, progress-completed)
+  5. striping and progress policies (DESIGN.md §8)
   6. an in-graph ring collective under shard_map (the TPU adaptation)
+
+Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
+Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
+After:   ep0.post_send(1, buf, 16, tag)          # stripe picks the device
+         post_send_x(r0, 1, buf, 16, tag).endpoint(ep0)()   # deferred form
+The raw post_*_x(...).device(...) spelling still works — endpoints are the
+porcelain over it, and the `.endpoint(...)` OFF option is what completion
+graphs use for their comm nodes.
 """
 import numpy as np
 
-from repro.core import (CommConfig, CompletionGraph, LocalCluster,
-                        MatchingPolicy, post_am_x, post_put_x, post_recv_x,
-                        post_send_x)
+from repro.core import (CommConfig, LocalCluster, MatchingPolicy, post_am_x,
+                        post_put_x, post_recv_x, post_send_x)
 
 
 def main():
@@ -23,30 +30,35 @@ def main():
     cluster = LocalCluster(n_ranks=2, config=cfg)
     r0, r1 = cluster[0], cluster[1]
     print(f"ranks: {r0.get_rank_me()}/{r0.get_rank_n()}")
+    # a symmetric 2-device endpoint bundle on every rank: all posting
+    # below rides these (stripe policy picks the device per op)
+    eps = cluster.alloc_endpoint(n_devices=2, stripe="round_robin",
+                                 name="quickstart")
+    ep0, ep1 = eps
 
     # -- 2a. active messages with a remote completion queue ------------
-    rcq = r1.alloc_cq()
+    rcq = r1.alloc_cq()               # unified comp: signal/test/wait
     rcomp = r1.register_rcomp(rcq)
-    status = post_am_x(r0, 1, np.arange(8, dtype=np.uint8), None,
-                       None, rcomp).tag(42)()       # OFF: options any order
+    status = ep0.post_am(1, np.arange(8, dtype=np.uint8), remote_comp=rcomp,
+                         tag=42)
     print(f"inject AM -> {status.kind.name} (done = completed immediately)")
-    cluster.quiesce()
-    msg = rcq.pop()
+    msg = rcq.wait(cluster)           # progress-driven wait pops one status
     print(f"delivered: tag={msg.tag} payload={msg.get_buffer()[:4]}...")
 
-    # -- 2b. send/recv with wildcard matching ---------------------------
+    # -- 2b. send/recv with wildcard matching (OFF form: the wildcard
+    #        matching policy is an option, endpoint= routes the device) --
     buf = np.zeros(16, np.uint8)
     post_recv_x(r1, 0, buf, 16, 0).matching_policy(
-        MatchingPolicy.RANK_ONLY)()
+        MatchingPolicy.RANK_ONLY).endpoint(ep1)()
     post_send_x(r0, 1, np.full(16, 7, np.uint8), 16, 999).matching_policy(
-        MatchingPolicy.RANK_ONLY)()
+        MatchingPolicy.RANK_ONLY).endpoint(ep0)()
     cluster.quiesce()
     print(f"wildcard recv got: {buf[:4]}...")
 
     # -- 2c. RMA put into registered memory -----------------------------
     target = np.zeros(32, np.uint8)
     region = r1.register_memory(target)
-    post_put_x(r0, 1, np.arange(32, dtype=np.uint8), (region.rid, 0), 32)()
+    ep0.post_put(1, np.arange(32, dtype=np.uint8), (region.rid, 0), 32)
     cluster.quiesce()
     print(f"RMA put landed: {target[:4]}...")
 
@@ -57,22 +69,27 @@ def main():
     st = post_send_x(tiny[0], 1, np.zeros(8, np.uint8), 8, 0)()
     print(f"full fabric -> {st.kind.name} ({st.code.name}): caller decides")
 
-    # -- 4. completion graph: partial-order comm + compute ---------------
-    g = CompletionGraph("demo")
-    a = g.add_node(lambda: np.arange(4.0))
-    b = g.add_node(lambda: np.ones(4))
-    c = g.add_node(lambda x, y: x @ y, deps=[a, b])     # fires when ready
-    vals = g.execute()
-    print(f"graph result: {vals[c]} (fire order {g.fire_order})")
+    # -- 4. ASYNC completion graph: comm ops as graph nodes --------------
+    #       An unfired OFF builder is a node; graph.start() posts ready
+    #       nodes, the progress engine signals completions, descendants
+    #       fire as signals arrive.  No host-side synchronous fire.
+    g = r0.alloc_graph("demo")
+    inbox = np.zeros(16, np.uint8)
+    recv = g.add_comm(post_recv_x(r1, 0, inbox, 16, 7).endpoint(ep1),
+                      name="recv")
+    send = g.add_comm(post_send_x(r0, 1, np.full(16, 3, np.uint8), 16,
+                                  7).endpoint(ep0), name="send")
+    summed = g.add_node(lambda r, s: int(inbox.sum()), deps=[recv, send])
+    g.start()                         # posts the comm nodes
+    ready, _ = g.test()               # non-blocking probe
+    vals = g.wait()                   # drives the cluster's progress
+    g.assert_partial_order()
+    print(f"async graph: started ready={ready}, sum={vals[summed]} "
+          f"(fire order {g.fire_order}); execute() is now a shim over "
+          f"start+wait")
 
-    # -- 5. endpoints and progress: devices are replicable resources; an
-    #       Endpoint is a named bundle of N of them with a striping policy
-    #       (which device each op rides) and a progress policy (who drives
-    #       them).  Progress stays explicit: nothing moves until someone
-    #       drives the endpoint's devices. -------------------------------
-    eps = cluster.alloc_endpoint(n_devices=2, stripe="by_peer",
-                                 progress="dedicated", name="demo")
-    ep0 = eps[0]                      # rank 0's side of the bundle
+    # -- 5. striping: by_peer/by_size isolate traffic classes; progress
+    #       stays explicit: nothing moves until someone drives devices ---
     for i in range(4):
         ep0.post_am(1, np.full(8, i, np.uint8), remote_comp=rcomp)
     while eps[0].progress() + eps[1].progress():

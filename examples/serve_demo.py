@@ -14,7 +14,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_smoke
-from repro.core.completion import CompletionQueue
 from repro.models.registry import build_model
 from repro.serving import PagedKVAllocator, ServeScheduler
 from repro.serving.engine import init_cache, make_serve_step
@@ -51,7 +50,7 @@ def main():
     alloc = PagedKVAllocator(n_pages=48, page_size=16)   # page pressure!
     sched = ServeScheduler(decode_fn, max_batch=args.max_batch,
                            allocator=alloc)
-    cq = CompletionQueue()
+    cq = sched.alloc_cq()      # unified comp API (routes via transport when present)
     rng = np.random.default_rng(0)
     t0 = time.time()
     backlogged = 0

@@ -15,7 +15,12 @@ Fault-tolerance properties (DESIGN.md §7):
 * **async** — ``save_async`` snapshots device arrays to host, then writes
   on a background thread; the returned LCI :class:`Synchronizer` is
   signaled on commit (the paper's completion-object protocol applied to
-  I/O).  Training continues during the write.
+  I/O); ``sync.wait()`` blocks on it, ``sync.test()`` polls.  Training
+  continues during the write.
+* **the commit pipeline is a completion graph** — prepare → one write
+  node per leaf → manifest → atomic rename → signal.  The partial order
+  *is* the crash-safety argument (nothing renames before every leaf and
+  the manifest are fsync'd), and it is asserted after every commit.
 * **elastic restore** — the manifest stores *global* shapes; restore
   re-shards onto whatever mesh the new job runs (``restore_resharded``),
   so a checkpoint from a 256-chip run restores onto 512 chips and vice
@@ -38,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.core.completion import Synchronizer
+from repro.core.graph import CompletionGraph
 from repro.core.status import FatalError, done
 
 _EXECUTOR = cf.ThreadPoolExecutor(max_workers=2,
@@ -58,38 +64,74 @@ def _sha(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
 
 
+def _write_leaf(tmp: str, name: str, arr: np.ndarray) -> tuple:
+    path = os.path.join(tmp, name + ".npy")
+    np.save(path, arr)
+    with open(path, "rb") as f:
+        os.fsync(f.fileno())
+    return name, {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                  "sha256": _sha(arr)}
+
+
+def build_commit_graph(ckpt_dir: str, step: int, host_tree: Any,
+                       meta: Optional[Dict], sync: Synchronizer
+                       ) -> CompletionGraph:
+    """The commit pipeline as an LCI completion graph.
+
+    prepare → write(leaf)* → manifest → rename-commit → signal(sync).
+    The graph's partial order is the crash-safety invariant: the atomic
+    rename fires only after every leaf write *and* the fsync'd manifest
+    completed, and ``sync`` is signaled only after LATEST moved.
+    """
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+
+    def prepare():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        return tmp
+
+    def write_manifest(*leaf_infos):
+        manifest = {"step": step, "meta": meta or {},
+                    "leaves": {name: info for name, info in leaf_infos}}
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        return mpath
+
+    def commit(_manifest_path):
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                   # atomic commit
+        _update_latest(ckpt_dir, step)
+        return final
+
+    g = CompletionGraph(f"ckpt-commit-{step}")
+    prep = g.add_node(prepare, name="prepare")
+    writes = [g.add_node(lambda _tmp, n=name, a=arr: _write_leaf(_tmp, n, a),
+                         deps=[prep], name=f"write:{name}")
+              for name, arr in _leaf_files(host_tree).items()]
+    man = g.add_node(write_manifest, deps=writes, name="manifest")
+    com = g.add_node(commit, deps=[man], name="commit")
+    g.add_node(lambda path: sync.signal(done(path)), deps=[com],
+               name="signal")
+    return g
+
+
 def save_sync(ckpt_dir: str, step: int, tree: Any,
               meta: Optional[Dict] = None) -> str:
     """Blocking save with atomic rename commit. Returns final path."""
-    os.makedirs(ckpt_dir, exist_ok=True)
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-
-    leaves = _leaf_files(tree)
-    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
-    for name, arr in leaves.items():
-        path = os.path.join(tmp, name + ".npy")
-        np.save(path, arr)
-        with open(path, "rb") as f:
-            os.fsync(f.fileno())
-        manifest["leaves"][name] = {
-            "shape": list(arr.shape), "dtype": str(arr.dtype),
-            "sha256": _sha(arr),
-        }
-    mpath = os.path.join(tmp, "manifest.json")
-    with open(mpath, "w") as f:
-        json.dump(manifest, f, indent=1)
-        f.flush()
-        os.fsync(f.fileno())
-
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)                       # atomic commit
-    _update_latest(ckpt_dir, step)
-    return final
+    host_tree = jax.tree_util.tree_map(np.asarray, tree)
+    sync = Synchronizer(expected=1)
+    g = build_commit_graph(ckpt_dir, step, host_tree, meta, sync)
+    g.execute()                                 # host-only graph: synchronous
+    g.assert_partial_order()
+    (status,) = sync.wait()
+    return status.get_buffer()
 
 
 def _update_latest(ckpt_dir: str, step: int) -> None:
@@ -105,14 +147,24 @@ def save_async(ckpt_dir: str, step: int, tree: Any,
                meta: Optional[Dict] = None) -> Synchronizer:
     """Snapshot to host now; write + commit on a background thread.
 
-    Returns an LCI Synchronizer signaled (once) when the commit lands.
+    Returns an LCI Synchronizer signaled (once) when the commit lands;
+    ``sync.wait()`` blocks until then (no progress driver needed — the
+    writer thread delivers the signal), ``sync.test()`` polls.
     """
     host_tree = jax.tree_util.tree_map(np.asarray, tree)   # device->host now
     sync = Synchronizer(expected=1)
+    g = build_commit_graph(ckpt_dir, step, host_tree, meta, sync)
 
     def work():
-        path = save_sync(ckpt_dir, step, host_tree, meta)
-        sync.signal(done(path))
+        try:
+            g.execute()
+            g.assert_partial_order()
+        except BaseException as e:                       # noqa: BLE001
+            # never leave waiters blocked OR fooled: ready/test()/wait()
+            # re-raise this as a FatalError — a failed commit can never
+            # look like a landed checkpoint
+            sync.fail(e)
+            raise
 
     _EXECUTOR.submit(work)
     return sync

@@ -14,7 +14,7 @@ from .matching import (HostMatchingEngine, MatchKind, MatchTable,
                        MatchingPolicy, encode_key, init_table, insert,
                        insert_batch, make_key, pending_count)
 from .modes import CommConfig, CommMode, parse_mode
-from .off import off
+from .off import OffBuilder, off
 from .packet_pool import (HostPacketPool, SlotPool, free_count, init_pool,
                           pool_get, pool_put)
 from .post import (CommKind, Direction, classify, post_am, post_am_x,
@@ -55,7 +55,7 @@ __all__ = [
     "RendezvousManager",
     # modes & protocol
     "CommConfig", "CommMode", "parse_mode", "Protocol", "ProtocolStats",
-    "select_protocol", "off",
+    "select_protocol", "off", "OffBuilder",
     # in-graph collectives
     "collectives",
 ]

@@ -48,6 +48,15 @@ class BacklogQueue:
         self.max_depth = max(self.max_depth, len(self._q))
         return done()
 
+    def push_front(self, item: Any) -> Status:
+        """Requeue at the head: a popped item that could not be processed
+        goes back to its original position, preserving FIFO delivery."""
+        if self.capacity is not None and len(self._q) >= self.capacity:
+            return retry(ErrorCode.RETRY_BACKLOG_FULL)
+        self._q.appendleft(item)
+        self.max_depth = max(self.max_depth, len(self._q))
+        return done()
+
     def pop(self) -> tuple[Any, Status]:
         if not self._q:
             return None, retry(ErrorCode.RETRY_LOCKED)

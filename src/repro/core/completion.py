@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Callable, List, Optional
 
 import jax
@@ -34,27 +35,93 @@ import jax.numpy as jnp
 from .status import ErrorCode, FatalError, Status, done, retry
 
 
-class CompletionObject:
-    """Base functor: ``signal(status)`` delivers one completion."""
+def _as_progress_fn(source) -> Optional[Callable[[], Any]]:
+    """Normalize anything that can drive progress into a 0-arg callable.
 
-    def signal(self, status: Status) -> None:  # pragma: no cover - interface
+    Accepts a ``LocalCluster``/``ProgressEngine`` (``progress_all``), a
+    ``Runtime``/``Endpoint`` (``progress``), a plain callable, or ``None``
+    (no driver — the completion must arrive from another thread, e.g. the
+    checkpoint writer).
+    """
+    if source is None:
+        return None
+    if callable(source) and not hasattr(source, "progress"):
+        return source
+    if hasattr(source, "progress_all"):
+        return source.progress_all
+    if hasattr(source, "progress"):
+        return source.progress
+    raise FatalError(f"cannot drive progress with {source!r}: expected a "
+                     "cluster/runtime/engine/endpoint or a callable")
+
+
+class CompletionObject:
+    """Base functor — the unified ``comp`` protocol (paper §3.2.5).
+
+    Every completion object allocated from a runtime (``alloc_handler`` /
+    ``alloc_cq`` / ``alloc_sync`` / ``alloc_graph``) satisfies one
+    contract:
+
+    * ``signal(status) -> Status`` — deliver one completion.  Returns
+      ``done()`` when accepted, ``retry(RETRY_QUEUE_FULL)`` when the
+      object cannot take the signal *right now* (the progress engine
+      parks rejected signals in the device backlog and redelivers).
+    * ``test() -> (ready, payload)`` — non-blocking readiness probe.
+    * ``wait(progress=None)`` — drive ``progress`` (a cluster, runtime,
+      engine, endpoint, or callable) until ``test()`` reports ready, then
+      return the payload.  Progress stays explicit: the *caller* names
+      who moves data (paper §3.2.6).
+    """
+
+    def signal(self, status: Status) -> Status:  # pragma: no cover
         raise NotImplementedError
+
+    def test(self) -> tuple[bool, Any]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def wait(self, progress=None, max_rounds: int = 100_000) -> Any:
+        drive = _as_progress_fn(progress)
+        if drive is None:
+            # completion owed by another thread (e.g. the checkpoint
+            # writer): block until signaled — there is no progress to
+            # drive, so rounds would measure nothing but sleep time
+            delay = 1e-5
+            while True:
+                ok, payload = self.test()
+                if ok:
+                    return payload
+                time.sleep(delay)
+                delay = min(delay * 2, 1e-2)
+        for _ in range(max_rounds):
+            ok, payload = self.test()
+            if ok:
+                return payload
+            drive()
+        raise FatalError(f"{type(self).__name__}.wait: not ready after "
+                         f"{max_rounds} progress rounds")
 
 
 class CompletionHandler(CompletionObject):
     """Handler: a function invoked inline at completion time.
 
     Paper: "Completion handler is essentially a function and does not need
-    any special treatment."
+    any special treatment."  ``test()`` reports ready once at least one
+    signal has been delivered; the payload is the most recent status.
     """
 
     def __init__(self, fn: Callable[[Status], None]):
         self.fn = fn
         self.signals = 0
+        self.last: Optional[Status] = None
 
-    def signal(self, status: Status) -> None:
+    def signal(self, status: Status) -> Status:
         self.signals += 1
+        self.last = status
         self.fn(status)
+        return done()
+
+    def test(self) -> tuple[bool, Optional[Status]]:
+        return self.signals > 0, self.last
 
 
 class CompletionQueue(CompletionObject):
@@ -85,6 +152,15 @@ class CompletionQueue(CompletionObject):
         self.pops += 1
         return self._q.popleft()
 
+    def test(self) -> tuple[bool, Optional[Status]]:
+        """Non-destructive probe: (non-empty, front status or None)."""
+        return bool(self._q), (self._q[0] if self._q else None)
+
+    def wait(self, progress=None, max_rounds: int = 100_000) -> Status:
+        """``cq_wait``: progress until non-empty, then pop one status."""
+        super().wait(progress, max_rounds)
+        return self.pop()
+
     def __len__(self) -> int:
         return len(self._q)
 
@@ -101,14 +177,28 @@ class Synchronizer(CompletionObject):
             raise FatalError("synchronizer needs expected >= 1")
         self.expected = expected
         self._received: List[Status] = []
+        self._error: Optional[BaseException] = None
 
-    def signal(self, status: Status) -> None:
+    def signal(self, status: Status) -> Status:
         if len(self._received) >= self.expected:
             raise FatalError("synchronizer signaled past ready")
         self._received.append(status)
+        return done()
+
+    def fail(self, exc: BaseException) -> None:
+        """Deliver a failure instead of a signal (e.g. the async
+        checkpoint writer crashed): ready/test()/wait() re-raise it as a
+        FatalError so a failed operation can never look complete."""
+        self._error = exc
+
+    def _check_failed(self) -> None:
+        if self._error is not None:
+            raise FatalError(f"synchronizer failed: "
+                             f"{self._error!r}") from self._error
 
     @property
     def ready(self) -> bool:
+        self._check_failed()
         return len(self._received) >= self.expected
 
     def test(self) -> tuple[bool, List[Status]]:
@@ -117,6 +207,7 @@ class Synchronizer(CompletionObject):
 
     def reset(self) -> None:
         self._received.clear()
+        self._error = None
 
 
 # ---------------------------------------------------------------------------

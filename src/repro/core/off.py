@@ -26,11 +26,12 @@ from typing import Any, Callable
 class OffBuilder:
     """Callable builder: ``off(positional...).opt(v).opt2(v)()``."""
 
-    __slots__ = ("_fn", "_args", "_opts", "_allowed")
+    __slots__ = ("_fn", "_sig", "_args", "_opts", "_allowed")
 
-    def __init__(self, fn: Callable, allowed: dict[str, inspect.Parameter],
-                 args: tuple):
+    def __init__(self, fn: Callable, sig: inspect.Signature,
+                 allowed: dict[str, inspect.Parameter], args: tuple):
         self._fn = fn
+        self._sig = sig                # computed once, at decoration time
         self._args = args
         self._opts: dict[str, Any] = {}
         self._allowed = allowed
@@ -53,6 +54,43 @@ class OffBuilder:
         """Introspection: currently-set optional arguments."""
         return dict(self._opts)
 
+    def is_set(self, name: str) -> bool:
+        """True if ``name`` is already bound — via ``.name(v)`` or
+        positionally.  Lets a holder of a deferred op (e.g. a completion
+        graph owning a comm node) check an option is still free to set."""
+        if name in self._opts:
+            return True
+        try:
+            bound = self._sig.bind_partial(*self._args)
+        except TypeError:
+            return False
+        return name in bound.arguments
+
+    def get(self, name: str, default: Any = None) -> Any:
+        """Current bound value of an argument (positional or option)."""
+        if name in self._opts:
+            return self._opts[name]
+        try:
+            bound = self._sig.bind_partial(*self._args)
+        except TypeError:
+            return default
+        return bound.arguments.get(name, default)
+
+    def set(self, name: str, value: Any) -> "OffBuilder":
+        """Bind ``name`` even if it was already given positionally (the
+        attribute sugar would collide with the positional slot)."""
+        if name not in self._allowed:
+            raise TypeError(
+                f"{self._fn.__name__}_x has no optional argument {name!r}; "
+                f"valid options: {sorted(self._allowed)}")
+        params = list(self._sig.parameters)
+        idx = params.index(name)
+        if idx < len(self._args):
+            self._args = self._args[:idx] + (value,) + self._args[idx + 1:]
+        else:
+            self._opts[name] = value
+        return self
+
     def __call__(self):
         return self._fn(*self._args, **self._opts)
 
@@ -71,7 +109,7 @@ def off(fn: Callable) -> Callable:
     }
 
     def make_builder(*args) -> OffBuilder:
-        return OffBuilder(fn, optional, args)
+        return OffBuilder(fn, sig, optional, args)
 
     make_builder.__name__ = fn.__name__ + "_x"
     make_builder.__doc__ = (f"OFF variant of {fn.__name__}: set optional "

@@ -25,6 +25,14 @@ Table 1 of the paper, implemented verbatim by :func:`post_comm`:
 The five derived operations (``post_send/recv/am/put/get``) are "just
 syntactic sugar for post_comm with the optional arguments set to the
 corresponding values", each with an OFF ``_x`` variant.
+
+Posting is endpoint-centric: every operation accepts ``endpoint=`` (an
+:class:`~repro.core.progress.endpoint.Endpoint`), which routes the op onto
+the endpoint's striped device bundle via its stripe policy — equivalent to
+the :meth:`Endpoint.post_send`-style sugar, but available on the generic
+``post_comm`` and on deferred OFF builders
+(``post_send_x(...).endpoint(ep)``), which is how completion-graph comm
+nodes ride endpoints.
 """
 from __future__ import annotations
 
@@ -89,17 +97,34 @@ def payload_nbytes(buf: Any) -> int:
     return len(bytes(buf))
 
 
+def _route_endpoint(runtime, endpoint, device, rank: int, size: int):
+    """Resolve the device an op rides when posted through an endpoint."""
+    if endpoint is None:
+        return device
+    if device is not None:
+        raise FatalError("post_comm: pass endpoint= or device=, not both "
+                         "(the endpoint's stripe policy picks the device)")
+    if endpoint.runtime is not runtime:
+        raise FatalError(f"post_comm: endpoint {endpoint.name!r} belongs to "
+                         f"rank {endpoint.runtime.rank}, not rank "
+                         f"{runtime.rank}")
+    return endpoint.select_device(rank=rank, size=size)
+
+
 @off
 def post_comm(runtime, direction: Direction, rank: int, buf: Any,
               local_comp=None, *, tag: int = 0, size: Optional[int] = None,
-              remote_buf=None, remote_comp=None, device=None,
+              remote_buf=None, remote_comp=None, device=None, endpoint=None,
               matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
               allow_retry: bool = True, user_context: Any = None) -> Status:
     """Generic posting operation; dispatches on Table 1 and hands the
-    descriptor to the runtime's device path."""
+    descriptor to the runtime's device path.  ``endpoint=`` routes the op
+    through a striped device bundle instead of a raw device."""
     kind = classify(direction, remote_buf, remote_comp)
+    nbytes = size if size is not None else payload_nbytes(buf)
+    device = _route_endpoint(runtime, endpoint, device, rank, nbytes)
     return runtime._post(kind=kind, rank=rank, buf=buf, tag=tag,
-                         size=size if size is not None else payload_nbytes(buf),
+                         size=nbytes,
                          local_comp=local_comp, remote_buf=remote_buf,
                          remote_comp=remote_comp, device=device,
                          matching_policy=matching_policy,
@@ -110,22 +135,22 @@ def post_comm(runtime, direction: Direction, rank: int, buf: Any,
 
 @off
 def post_send(runtime, rank: int, buf: Any, size: Optional[int] = None,
-              tag: int = 0, local_comp=None, *, device=None,
+              tag: int = 0, local_comp=None, *, device=None, endpoint=None,
               matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
               allow_retry: bool = True) -> Status:
     return post_comm(runtime, Direction.OUT, rank, buf, local_comp,
-                     tag=tag, size=size, device=device,
+                     tag=tag, size=size, device=device, endpoint=endpoint,
                      matching_policy=matching_policy,
                      allow_retry=allow_retry)
 
 
 @off
 def post_recv(runtime, rank: int, buf: Any, size: Optional[int] = None,
-              tag: int = 0, local_comp=None, *, device=None,
+              tag: int = 0, local_comp=None, *, device=None, endpoint=None,
               matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
               allow_retry: bool = True) -> Status:
     return post_comm(runtime, Direction.IN, rank, buf, local_comp,
-                     tag=tag, size=size, device=device,
+                     tag=tag, size=size, device=device, endpoint=endpoint,
                      matching_policy=matching_policy,
                      allow_retry=allow_retry)
 
@@ -133,38 +158,39 @@ def post_recv(runtime, rank: int, buf: Any, size: Optional[int] = None,
 @off
 def post_am(runtime, rank: int, buf: Any, size: Optional[int] = None,
             local_comp=None, remote_comp=None, *, tag: int = 0, device=None,
-            allow_retry: bool = True) -> Status:
+            endpoint=None, allow_retry: bool = True) -> Status:
     if remote_comp is None:
         raise FatalError("post_am requires a remote completion handle")
     return post_comm(runtime, Direction.OUT, rank, buf, local_comp,
                      tag=tag, size=size, remote_comp=remote_comp,
-                     device=device, allow_retry=allow_retry)
+                     device=device, endpoint=endpoint,
+                     allow_retry=allow_retry)
 
 
 @off
 def post_put(runtime, rank: int, buf: Any, remote_buf=None,
              size: Optional[int] = None, local_comp=None, remote_comp=None,
-             *, tag: int = 0, device=None, allow_retry: bool = True
-             ) -> Status:
+             *, tag: int = 0, device=None, endpoint=None,
+             allow_retry: bool = True) -> Status:
     if remote_buf is None:
         raise FatalError("post_put requires a remote buffer")
     return post_comm(runtime, Direction.OUT, rank, buf, local_comp,
                      tag=tag, size=size, remote_buf=remote_buf,
                      remote_comp=remote_comp, device=device,
-                     allow_retry=allow_retry)
+                     endpoint=endpoint, allow_retry=allow_retry)
 
 
 @off
 def post_get(runtime, rank: int, buf: Any, remote_buf=None,
              size: Optional[int] = None, local_comp=None, remote_comp=None,
-             *, tag: int = 0, device=None, allow_retry: bool = True
-             ) -> Status:
+             *, tag: int = 0, device=None, endpoint=None,
+             allow_retry: bool = True) -> Status:
     if remote_buf is None:
         raise FatalError("post_get requires a remote buffer")
     return post_comm(runtime, Direction.IN, rank, buf, local_comp,
                      tag=tag, size=size, remote_buf=remote_buf,
                      remote_comp=remote_comp, device=device,
-                     allow_retry=allow_retry)
+                     endpoint=endpoint, allow_retry=allow_retry)
 
 
 # OFF variants under the paper's names

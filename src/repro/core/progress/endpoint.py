@@ -28,9 +28,11 @@ import bisect
 import dataclasses
 from typing import Optional, Sequence
 
+from ..matching import MatchingPolicy
 from ..modes import CommMode
-from ..post import (payload_nbytes, post_am_x, post_get_x, post_put_x,
-                    post_recv_x, post_send_x)
+from ..post import (post_am_x, post_get_x, post_put_x, post_recv_x,
+                    post_send_x)
+from ..post import post_comm as _post_comm
 from ..status import FatalError, Status
 from .engine import ProgressEngine
 
@@ -125,45 +127,49 @@ class Endpoint:
         self._rr += 1
         return dev
 
-    # -- posting sugar (each picks the striped device, then defers to the
-    #    Table-1 operations of repro.core.post) ------------------------------
-    def _sized(self, buf, size) -> int:
-        return payload_nbytes(buf) if size is None else size
+    # -- posting sugar: every op routes through the single endpoint= path
+    #    of repro.core.post (the stripe policy picks the device inside
+    #    _route_endpoint, which also validates endpoint ownership) --------
+    def post_comm(self, direction, rank: int, buf, local_comp=None, *,
+                  tag: int = 0, size=None, remote_buf=None, remote_comp=None,
+                  matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG,
+                  allow_retry: bool = True, user_context=None) -> Status:
+        """The generic Table-1 posting operation, endpoint-routed."""
+        return _post_comm(self.runtime, direction, rank, buf, local_comp,
+                          tag=tag, size=size, remote_buf=remote_buf,
+                          remote_comp=remote_comp, endpoint=self,
+                          matching_policy=matching_policy,
+                          allow_retry=allow_retry, user_context=user_context)
 
     def post_send(self, rank: int, buf, size=None, tag: int = 0,
                   local_comp=None, *, allow_retry: bool = True) -> Status:
-        dev = self.select_device(rank=rank, size=self._sized(buf, size))
         return post_send_x(self.runtime, rank, buf, size, tag, local_comp) \
-            .device(dev).allow_retry(allow_retry)()
+            .endpoint(self).allow_retry(allow_retry)()
 
     def post_recv(self, rank: int, buf, size=None, tag: int = 0,
                   local_comp=None, *, allow_retry: bool = True) -> Status:
-        dev = self.select_device(rank=rank, size=self._sized(buf, size))
         return post_recv_x(self.runtime, rank, buf, size, tag, local_comp) \
-            .device(dev).allow_retry(allow_retry)()
+            .endpoint(self).allow_retry(allow_retry)()
 
     def post_am(self, rank: int, buf, size=None, local_comp=None,
                 remote_comp=None, *, tag: int = 0,
                 allow_retry: bool = True) -> Status:
-        dev = self.select_device(rank=rank, size=self._sized(buf, size))
         return post_am_x(self.runtime, rank, buf, size, local_comp,
-                         remote_comp).tag(tag).device(dev) \
+                         remote_comp).tag(tag).endpoint(self) \
             .allow_retry(allow_retry)()
 
     def post_put(self, rank: int, buf, remote_buf, size=None,
                  local_comp=None, remote_comp=None, *, tag: int = 0,
                  allow_retry: bool = True) -> Status:
-        dev = self.select_device(rank=rank, size=self._sized(buf, size))
         return post_put_x(self.runtime, rank, buf, remote_buf, size,
-                          local_comp, remote_comp).tag(tag).device(dev) \
+                          local_comp, remote_comp).tag(tag).endpoint(self) \
             .allow_retry(allow_retry)()
 
     def post_get(self, rank: int, buf, remote_buf, size=None,
                  local_comp=None, *, tag: int = 0,
                  allow_retry: bool = True) -> Status:
-        dev = self.select_device(rank=rank, size=self._sized(buf, size))
         return post_get_x(self.runtime, rank, buf, remote_buf, size,
-                          local_comp).tag(tag).device(dev) \
+                          local_comp).tag(tag).endpoint(self) \
             .allow_retry(allow_retry)()
 
     # -- progress ------------------------------------------------------------

@@ -210,6 +210,17 @@ class ProgressEngine:
                     dev.backlog.push(item)
                     break
                 did = True
+            elif tag0 == "signal":
+                # a completion object rejected this signal earlier
+                # (retry(RETRY_QUEUE_FULL)); redeliver until accepted.
+                # Requeue at the HEAD on rejection: pushing to the tail
+                # would rotate parked signals and deliver later
+                # completions to the same queue out of order.
+                _, comp, st2 = item
+                if comp.signal(st2).is_retry():
+                    dev.backlog.push_front(item)
+                    break
+                did = True
 
         # source-side completions (bufcopy send done on the wire)
         while dev.pending_tx:
@@ -221,11 +232,12 @@ class ProgressEngine:
                 if op.packet >= 0:              # return packet to the pool
                     rt.packet_pool.put(op.lane, op.packet)
                     self.signal(op.local_comp,
-                                done(rank=op.peer, tag=op.tag))
+                                done(rank=op.peer, tag=op.tag), dev)
                     del rt.pending_ops[op_id]
                 # zerocopy sends complete on CTS+RDMA, not here
             elif op.kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
-                self.signal(op.local_comp, done(rank=op.peer, tag=op.tag))
+                self.signal(op.local_comp, done(rank=op.peer, tag=op.tag),
+                            dev)
                 del rt.pending_ops[op_id]
             did = True
 
@@ -249,17 +261,16 @@ class ProgressEngine:
         k = msg.kind
         if k == WireKind.EAGER_AM:
             comp = rt.rcomp_registry[msg.rcomp]
-            st = done(msg.payload, rank=msg.src, tag=msg.tag)
-            result = comp.signal(st)
-            if isinstance(result, Status) and result.is_retry():
-                dev.backlog.push(("wire", msg))  # CQ full: repost locally
+            self.signal(comp, done(msg.payload, rank=msg.src, tag=msg.tag),
+                        dev)
         elif k == WireKind.EAGER_SEND:
             key = make_key(msg.src, msg.tag, msg.matching_policy)
             match = rt.matching.insert(
                 key, MatchKind.SEND, ("eager", msg.payload, msg.src, msg.tag))
             if match is not None:
                 _, buf, comp, rdev = match
-                self.deliver_recv(buf, msg.payload, comp, msg.src, msg.tag)
+                self.deliver_recv(buf, msg.payload, comp, msg.src, msg.tag,
+                                  dev)
         elif k == WireKind.RTS:
             rt.rdv.on_rts(self, msg, dev)
         elif k == WireKind.CTS:
@@ -275,14 +286,23 @@ class ProgressEngine:
         else:
             raise FatalError(f"unknown wire kind {k}")
 
-    def deliver_recv(self, buf, payload, comp, src: int, tag: int) -> None:
+    def deliver_recv(self, buf, payload, comp, src: int, tag: int,
+                     dev=None) -> None:
         if buf is not None:
             view = as_bytes_view(buf)
             n = min(view.nbytes, payload.nbytes)
             view[:n] = payload[:n]
-        self.signal(comp, done(payload, rank=src, tag=tag))
+        self.signal(comp, done(payload, rank=src, tag=tag), dev)
 
-    @staticmethod
-    def signal(comp: Optional[CompletionObject], st: Status) -> None:
-        if comp is not None:
-            comp.signal(st)
+    def signal(self, comp: Optional[CompletionObject], st: Status,
+               dev=None) -> None:
+        """Deliver a completion through the unified comp protocol: every
+        completion object returns a Status from ``signal``; a ``retry``
+        (e.g. RETRY_QUEUE_FULL) parks the delivery in the device backlog,
+        and the next progress pass redelivers (paper §4.4)."""
+        if comp is None:
+            return
+        result = comp.signal(st)
+        if isinstance(result, Status) and result.is_retry():
+            dev = dev or self.rt.default_device
+            dev.backlog.push(("signal", comp, st))

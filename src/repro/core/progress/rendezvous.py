@@ -127,11 +127,11 @@ class RendezvousManager:
             dev.backlog.push(("wire", rdma))
         else:
             dev.pushes += 1
-        engine.signal(op.local_comp, done(rank=op.peer, tag=op.tag))
+        engine.signal(op.local_comp, done(rank=op.peer, tag=op.tag), dev)
 
     def on_rdma_payload(self, engine, msg: WireMsg, dev) -> None:
         buf, comp, rdev = self.landing[msg.op_id]
-        engine.deliver_recv(buf, msg.payload, comp, msg.src, msg.tag)
+        engine.deliver_recv(buf, msg.payload, comp, msg.src, msg.tag, dev)
 
     def on_put(self, engine, msg: WireMsg, dev) -> None:
         region_id, offset = msg.remote_buf
@@ -139,7 +139,8 @@ class RendezvousManager:
         region.buf[offset:offset + msg.size] = msg.payload[:msg.size]
         if msg.rcomp is not None:           # put with signal
             comp = self.rt.rcomp_registry[msg.rcomp]
-            comp.signal(done(msg.payload, rank=msg.src, tag=msg.tag))
+            engine.signal(comp, done(msg.payload, rank=msg.src, tag=msg.tag),
+                          dev)
 
     def on_get_req(self, engine, msg: WireMsg, dev) -> None:
         region_id, offset = msg.remote_buf
@@ -160,4 +161,4 @@ class RendezvousManager:
         view = as_bytes_view(op.buf)
         view[:msg.size] = msg.payload[:msg.size]
         engine.signal(op.local_comp, done(msg.payload, rank=op.peer,
-                                          tag=op.tag))
+                                          tag=op.tag), dev)

@@ -143,6 +143,9 @@ class Runtime:
                      name: str = "engine") -> ProgressEngine:
         return ProgressEngine(self, devices, name=name)
 
+    # Completion-object allocation (paper §3.2.5): every alloc_* handle
+    # satisfies the unified comp protocol — signal(Status) -> Status,
+    # non-blocking test(), progress-driven wait().
     def alloc_cq(self, capacity: Optional[int] = None) -> CompletionQueue:
         return CompletionQueue(capacity)
 
@@ -153,7 +156,9 @@ class Runtime:
         return Synchronizer(expected)
 
     def alloc_graph(self, name: str = "graph") -> CompletionGraph:
-        return CompletionGraph(name)
+        g = CompletionGraph(name)
+        g.add_progress(self.cluster)   # default driver for wait()/execute()
+        return g
 
     def free_comp(self, comp: CompletionObject) -> None:
         pass                                    # GC does the freeing

@@ -9,15 +9,21 @@ direction fwd/bwd, edges = (a) stage order within a microbatch, (b) the
 (fire order = completion order) plus its introspection: the critical path
 length of the graph IS the pipeline's bubble-inclusive step count.
 
-Two deployments:
+Three deployments:
 
 * :func:`schedule_1f1b` — build + validate the schedule (tested against
   the analytic bubble formula);
-* :class:`PipelinedModel` — run a stage-split model on it, stages mapped
-  to mesh slices, activations moved stage→stage with ppermute (the comm
-  edges of the graph).  Here stages run sequentially on one host (the
-  dry-run proves the mesh variant; PP is an optional extra axis for
-  deeper-than-ICI models).
+* :func:`build_1f1b_comm_graph` — the *async* deployment: one cluster
+  rank per stage, activation hand-offs as real send/recv **comm nodes**
+  riding per-stage endpoints.  ``graph.start()`` posts the ready ops, the
+  progress engine signals completions, and downstream stages fire as
+  signals arrive — the paper's graph-completed-by-progress-engine
+  semantics end to end (no host-side synchronous fire).
+* :class:`PipelinedModel` — run a stage-split model on the host schedule,
+  stages mapped to mesh slices, activations moved stage→stage with
+  ppermute (the comm edges of the graph).  Here stages run sequentially
+  on one host (the dry-run proves the mesh variant; PP is an optional
+  extra axis for deeper-than-ICI models).
 """
 from __future__ import annotations
 
@@ -26,8 +32,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import CompletionGraph
+from repro.core.post import post_recv_x, post_send_x
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +99,175 @@ def schedule_1f1b(n_stages: int, n_micro: int
 def bubble_fraction(n_stages: int, n_micro: int) -> float:
     """Analytic 1F1B bubble: (S-1) / (S-1+M) of the step is idle."""
     return (n_stages - 1) / (n_stages - 1 + n_micro)
+
+
+@dataclasses.dataclass
+class PipelineCommGraph:
+    """The async 1F1B deployment: graph + node maps + landing buffers."""
+
+    graph: CompletionGraph
+    compute_ids: Dict[PPNode, int]          # (stage, micro, dir) -> node id
+    comm_ids: Dict[Tuple[str, int, int], int]   # ("SF"/"RF"/"SB"/"RB", s, m)
+    act_in: Dict[Tuple[int, int], np.ndarray]   # fwd landing at stage s+1
+    grad_in: Dict[Tuple[int, int], np.ndarray]  # bwd landing at stage s
+
+
+def build_1f1b_comm_graph(cluster, n_micro: int, payload_bytes: int = 32,
+                          endpoints: Optional[List] = None,
+                          fwd_fn: Optional[Callable] = None,
+                          bwd_fn: Optional[Callable] = None
+                          ) -> PipelineCommGraph:
+    """1F1B with activation hand-offs as *real comm nodes* — one cluster
+    rank per stage; fwd activations and bwd grads ride the fabric.
+
+    Node kinds per (stage s, micro m):
+
+    * ``CF``/``CB`` — host compute (fn nodes); ``fwd_fn(x, s, m) -> bytes``
+      maps the incoming activation, ``bwd_fn(g, s, m) -> bytes`` the
+      incoming gradient (defaults: mod-251 marker arithmetic so tests can
+      assert end-to-end content).
+    * ``SF``/``RF`` — send/recv of the fwd activation s → s+1 (comm nodes,
+      tag ``2m``); ``SB``/``RB`` — the bwd gradient s → s-1 (tag ``2m+1``).
+
+    Dependencies keep the paper schedule: ``CF`` needs its ``RF`` plus the
+    1F1B lookback edge to ``CB(s, m-(S-s))``; ``CB`` needs ``CF`` and its
+    ``RB``.  Receives are pre-posted at ``start()`` (no deps): the matching
+    engine pairs them with sends whenever they arrive; *completion* still
+    follows the wire, which is what the partial order asserts.
+
+    ``endpoints`` (optional, one per rank) routes every comm node through
+    that rank's striped endpoint via ``.endpoint(...)``.
+    """
+    n_stages = cluster.n_ranks
+    if n_stages < 2:
+        raise ValueError("async 1F1B needs >= 2 stages (cluster ranks)")
+    fwd_fn = fwd_fn or (lambda x, s, m: (x + s + 1) % 251)
+    bwd_fn = bwd_fn or (lambda g, s, m: (g * 2 + s) % 251)
+
+    g = CompletionGraph("1f1b-comm")
+    act_in = {(s, m): np.zeros(payload_bytes, np.uint8)
+              for s in range(n_stages - 1) for m in range(n_micro)}
+    act_out = {(s, m): np.zeros(payload_bytes, np.uint8)
+               for s in range(n_stages - 1) for m in range(n_micro)}
+    grad_in = {(s, m): np.zeros(payload_bytes, np.uint8)
+               for s in range(n_stages - 1) for m in range(n_micro)}
+    grad_out = {(s, m): np.zeros(payload_bytes, np.uint8)
+                for s in range(1, n_stages) for m in range(n_micro)}
+
+    def _ep(rank):
+        return endpoints[rank] if endpoints is not None else None
+
+    def _comm(builder, rank):
+        ep = _ep(rank)
+        return builder.endpoint(ep) if ep is not None else builder
+
+    def make_cf(s, m):
+        def cf(*_deps):
+            x = act_in[(s - 1, m)] if s > 0 else \
+                np.full(payload_bytes, m % 251, np.uint8)
+            y = fwd_fn(x.astype(np.int64), s, m).astype(np.uint8)
+            if s < n_stages - 1:
+                act_out[(s, m)][:] = y
+            return y
+        return cf
+
+    def make_cb(s, m):
+        def cb(*_deps):
+            gsrc = grad_in[(s, m)] if s < n_stages - 1 else \
+                compute_vals[PPNode(s, m, True)]
+            gy = bwd_fn(gsrc.astype(np.int64), s, m).astype(np.uint8)
+            if s > 0:
+                grad_out[(s, m)][:] = gy
+            return gy
+        return cb
+
+    compute_vals: Dict[PPNode, np.ndarray] = {}
+
+    def make_record(node, fn):
+        def wrapped(*deps):
+            out = fn(*deps)
+            compute_vals[node] = out
+            return out
+        return wrapped
+
+    # descriptor -> (dep descriptors); inserted via the same worklist
+    # approach as schedule_1f1b (1F1B interleaving is not insertion-ordered)
+    def deps_of(kind, s, m):
+        if kind in ("RF", "RB"):
+            return []
+        if kind == "CF":
+            # RF/SF are keyed by the *sender* stage: stage s consumes the
+            # landing of the s-1 -> s activation
+            deps = [("RF", s - 1, m)] if s > 0 else []
+            lb = m - (n_stages - s)
+            if lb >= 0:
+                deps.append(("CB", s, lb))
+            return deps
+        if kind == "SF":
+            return [("CF", s, m)]
+        if kind == "CB":
+            deps = [("CF", s, m)]
+            if s < n_stages - 1:
+                deps.append(("RB", s, m))
+            return deps
+        return [("CB", s, m)]                           # SB
+
+    def builder_of(kind, s, m):
+        if kind == "SF":   # fwd activation s -> s+1, tag 2m
+            return _comm(post_send_x(cluster[s], s + 1, act_out[(s, m)],
+                                     payload_bytes, 2 * m), s)
+        if kind == "RF":   # landing at s+1 for the s -> s+1 activation
+            return _comm(post_recv_x(cluster[s + 1], s, act_in[(s, m)],
+                                     payload_bytes, 2 * m), s + 1)
+        if kind == "SB":   # bwd grad s -> s-1, tag 2m+1
+            return _comm(post_send_x(cluster[s], s - 1, grad_out[(s, m)],
+                                     payload_bytes, 2 * m + 1), s)
+        # RB: landing at s for the s+1 -> s gradient
+        return _comm(post_recv_x(cluster[s], s + 1, grad_in[(s, m)],
+                                 payload_bytes, 2 * m + 1), s)
+
+    todo = []
+    for m in range(n_micro):
+        for s in range(n_stages):
+            todo.append(("CF", s, m))
+            todo.append(("CB", s, m))
+            if s < n_stages - 1:
+                todo.append(("SF", s, m))
+                todo.append(("RF", s, m))       # lands at s+1
+                todo.append(("RB", s, m))       # lands at s
+            if s > 0:
+                todo.append(("SB", s, m))
+
+    ids: Dict[Tuple[str, int, int], int] = {}
+    while todo:
+        progressed, rest = False, []
+        for key in todo:
+            kind, s, m = key
+            dep_keys = deps_of(kind, s, m)
+            if not all(d in ids for d in dep_keys):
+                rest.append(key)
+                continue
+            dep_ids = [ids[d] for d in dep_keys]
+            name = f"{kind}{s}.{m}"
+            if kind in ("CF", "CB"):
+                node = PPNode(s, m, kind == "CF")
+                fn = make_record(node, make_cf(s, m) if kind == "CF"
+                                 else make_cb(s, m))
+                ids[key] = g.add_node(fn, deps=dep_ids, name=name)
+            else:
+                ids[key] = g.add_comm(builder_of(kind, s, m),
+                                      deps=dep_ids, name=name)
+            progressed = True
+        if not progressed:
+            raise RuntimeError("1F1B comm schedule has a dependency cycle")
+        todo = rest
+
+    compute_ids = {PPNode(s, m, f): ids[("CF" if f else "CB", s, m)]
+                   for s in range(n_stages) for m in range(n_micro)
+                   for f in (True, False)}
+    comm_ids = {k: v for k, v in ids.items() if k[0] not in ("CF", "CB")}
+    g.add_progress(cluster)
+    return PipelineCommGraph(g, compute_ids, comm_ids, act_in, grad_in)
 
 
 class PipelinedModel:

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke
-from repro.core.completion import CompletionQueue
 from repro.core.runtime import LocalCluster
 from repro.models.registry import build_model
 from repro.serving import PagedKVAllocator, ServeScheduler, ServeTransport
@@ -67,7 +66,7 @@ def main():
                                    n_prefill=args.prefill_devices)
     sched = ServeScheduler(decode_fn, max_batch=args.max_batch,
                            allocator=alloc, transport=transport)
-    cq = CompletionQueue()
+    cq = sched.alloc_cq()      # unified comp API (routes via transport when present)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):

@@ -17,6 +17,7 @@ paper's size-class-isolation "new possibilities" scenario, §3.2.3).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import Callable, Dict, List, Optional, Tuple
@@ -149,8 +150,20 @@ class ServeScheduler:
         self.active: Dict[int, Request] = {}
         self.backlog = BacklogQueue()
         self.router = HostMatchingEngine()
+        # completions rejected with retry (bounded client CQ full) —
+        # redelivered each step, mirroring the progress-engine backlog
+        self._pending_signals: collections.deque = collections.deque()
         self.completed = 0
         self.retries = 0
+
+    def alloc_cq(self, capacity: Optional[int] = None) -> CompletionQueue:
+        """Allocate a result queue through the unified comp API: routed to
+        the transport's client runtime when one exists (so remote results
+        and local completions share one allocation surface)."""
+        if self.transport is not None:
+            client = self.transport.cluster[self.transport.client_rank]
+            return client.alloc_cq(capacity)
+        return CompletionQueue(capacity)
 
     # -- client API ----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
@@ -203,6 +216,17 @@ class ServeScheduler:
         """One decode round over the active set; returns #finished."""
         if self.transport is not None:
             self._ingest_transport()
+        # redeliver completions a full client CQ rejected earlier — one
+        # full CQ must not block other clients' results, and a client's
+        # own results must stay in order (once one of its signals is
+        # rejected, its later ones wait behind it)
+        rejected, blocked = [], set()
+        for _ in range(len(self._pending_signals)):
+            comp, st = self._pending_signals.popleft()
+            if id(comp) in blocked or self._signal_rejected(comp, st):
+                rejected.append((comp, st))
+                blocked.add(id(comp))
+        self._pending_signals.extendleft(reversed(rejected))
         # (3) drain the backlog first, exactly like the progress engine
         while not self.backlog.empty_flag and len(self.active) < \
                 self.max_batch:
@@ -241,10 +265,20 @@ class ServeScheduler:
             return
         st = done(np.array(req.generated, np.int32), tag=req.rid)
         if req.comp is not None:
-            req.comp.signal(st)
+            # park behind any already-parked result for the same comp (a
+            # direct delivery would overtake it and break per-client
+            # ordering), or when the comp rejects the signal (CQ full)
+            queued = any(c is req.comp for c, _ in self._pending_signals)
+            if queued or self._signal_rejected(req.comp, st):
+                self._pending_signals.append((req.comp, st))  # never drop
         else:
             self.router.insert(req.rid, MatchKind.SEND, st)
         self.completed += 1
+
+    @staticmethod
+    def _signal_rejected(comp, st: Status) -> bool:
+        result = comp.signal(st)
+        return isinstance(result, Status) and result.is_retry()
 
     def poll(self, rid: int) -> Status:
         """Pull-style completion for clients without a completion object."""

@@ -61,6 +61,49 @@ def test_async_save_signals_synchronizer(tmp_path):
     assert latest_step(str(tmp_path)) == 2
 
 
+def test_async_save_unified_wait(tmp_path):
+    """The returned Synchronizer follows the unified comp protocol:
+    wait() blocks on the writer thread's signal, no progress driver."""
+    t = _tree()
+    sync = save_async(str(tmp_path), 7, t)
+    (status,) = sync.wait()
+    assert status.is_done()
+    assert status.get_buffer().endswith("step_00000007")
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_async_save_failure_is_loud(tmp_path):
+    """A crashed writer can never look like a committed checkpoint:
+    ready/test/wait re-raise the failure as a FatalError."""
+    target = tmp_path / "not-a-dir"
+    target.write_text("file where the ckpt dir should go")
+    sync = save_async(str(target / "sub"), 3, _tree())
+    with pytest.raises(FatalError, match="synchronizer failed"):
+        sync.wait()
+    with pytest.raises(FatalError):
+        _ = sync.ready
+
+
+def test_commit_graph_partial_order(tmp_path):
+    """The commit pipeline is a completion graph: rename fires only after
+    every leaf write and the manifest completed."""
+    from repro.checkpoint.store import build_commit_graph
+    from repro.core.completion import Synchronizer
+    t = _tree()
+    sync = Synchronizer(1)
+    g = build_commit_graph(str(tmp_path), 5, t, None, sync)
+    g.execute()
+    g.assert_partial_order()
+    names = {n.name: n.nid for n in g._nodes}
+    pos = {nid: i for i, nid in enumerate(g.fire_order)}
+    writes = [nid for name, nid in names.items() if name.startswith("write:")]
+    assert len(writes) == 2                      # leaves a, b_c
+    assert all(pos[w] < pos[names["manifest"]] for w in writes)
+    assert pos[names["manifest"]] < pos[names["commit"]] \
+        < pos[names["signal"]]
+    assert sync.ready and latest_step(str(tmp_path)) == 5
+
+
 def test_atomic_commit_no_partial(tmp_path):
     """A tmp dir from a 'crashed' save never becomes LATEST."""
     t = _tree()

@@ -1,0 +1,353 @@
+"""The unified `comp` surface (paper §3.2.5/§4.1.4) and the async graph.
+
+Covers the redesign's contracts:
+
+* every completion object allocated from a runtime satisfies one
+  protocol — ``signal(Status) -> Status``, non-blocking ``test()``,
+  progress-driven ``wait()``;
+* the progress engine handles ``retry(RETRY_QUEUE_FULL)`` uniformly via
+  the device backlog (redelivery, no drops);
+* ``CompletionGraph`` is a true completion object: comm nodes (unfired
+  OFF builders) are posted by ``graph.start()`` and completed by the
+  progress engine — the acceptance scenario asserts a send/recv pair
+  completes with no host-side synchronous fire and that the
+  ``execute()`` shim matches the async path;
+* Table-1 classify edge rows and OFF builder introspection/reuse;
+* endpoint-centric posting (``endpoint=`` routing + Endpoint.post_comm).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CommConfig, Direction, FatalError, LocalCluster,
+                        OffBuilder, Status, classify, done, off, post_am_x,
+                        post_recv_x, post_send_x)
+from repro.core.post import CommKind, post_comm_x
+
+CFG = CommConfig(inject_max_bytes=64, bufcopy_max_bytes=512)
+
+
+@pytest.fixture()
+def pair():
+    cl = LocalCluster(2, CFG)
+    return cl, cl[0], cl[1]
+
+
+# ---------------------------------------------------------------------------
+# unified protocol: signal returns Status; test/wait everywhere
+# ---------------------------------------------------------------------------
+
+class TestUnifiedProtocol:
+    def test_all_alloc_objects_share_the_protocol(self, pair):
+        cl, r0, r1 = pair
+        comps = [r0.alloc_handler(lambda s: None), r0.alloc_cq(),
+                 r0.alloc_sync(1), r0.alloc_graph()]
+        for comp in comps:
+            assert callable(comp.signal) and callable(comp.test) \
+                and callable(comp.wait), comp
+
+    def test_signal_returns_status(self, pair):
+        cl, r0, r1 = pair
+        st = done(b"x", rank=0, tag=1)
+        assert r0.alloc_handler(lambda s: None).signal(st).is_done()
+        assert r0.alloc_cq().signal(st).is_done()
+        assert r0.alloc_sync(2).signal(st).is_done()
+        cq = r0.alloc_cq(capacity=1)
+        assert cq.signal(st).is_done()
+        assert cq.signal(st).is_retry()          # full -> retry, not raise
+
+    def test_handler_test_and_wait(self, pair):
+        cl, r0, r1 = pair
+        seen = []
+        h = r0.alloc_handler(seen.append)
+        assert h.test() == (False, None)
+        h.signal(done(7))
+        ok, last = h.test()
+        assert ok and last.get_buffer() == 7 and seen
+        assert h.wait().get_buffer() == 7        # already ready: no driver
+
+    def test_cq_wait_drives_progress_and_pops(self, pair):
+        cl, r0, r1 = pair
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        post_am_x(r0, 1, np.arange(8, dtype=np.uint8), None, None,
+                  rc).tag(3)()
+        assert cq.test() == (False, None)        # nothing moved yet
+        msg = cq.wait(cl)                        # caller names the driver
+        assert msg.is_done() and msg.tag == 3 and len(cq) == 0
+
+    def test_sync_wait_returns_payload_list(self, pair):
+        cl, r0, r1 = pair
+        sy = r1.alloc_sync(2)
+        post_am_x(r0, 1, np.zeros(256, np.uint8), None, None,
+                  r1.register_rcomp(sy))()
+        post_am_x(r0, 1, np.zeros(256, np.uint8), None, None,
+                  r1.register_rcomp(sy))()
+        got = sy.wait(cl)
+        assert len(got) == 2 and all(s.is_done() for s in got)
+
+    def test_wait_times_out_fatally(self, pair):
+        cl, r0, r1 = pair
+        sy = r0.alloc_sync(1)
+        with pytest.raises(FatalError, match="not ready"):
+            sy.wait(cl, max_rounds=10)
+
+
+class TestUniformRetryHandling:
+    def test_full_cq_signal_parked_and_redelivered(self, pair):
+        """retry(RETRY_QUEUE_FULL) goes to the backlog, uniformly, and the
+        next progress pass redelivers — no message is dropped."""
+        cl, r0, r1 = pair
+        cq = r1.alloc_cq(capacity=1)
+        rc = r1.register_rcomp(cq)
+        for i in range(3):
+            post_am_x(r0, 1, np.full(8, i, np.uint8), None, None,
+                      rc).tag(i)()
+        cl.quiesce()                             # delivers 1, parks 2
+        seen = []
+        for _ in range(3):
+            seen.append(int(cq.wait(cl).get_buffer()[0]))
+        assert sorted(seen) == [0, 1, 2]
+        assert cq.pop().is_retry()               # nothing duplicated
+
+
+# ---------------------------------------------------------------------------
+# the async graph: comm nodes completed by the progress engine
+# ---------------------------------------------------------------------------
+
+class TestAsyncGraph:
+    def test_send_recv_comm_nodes_async_acceptance(self, pair):
+        """Acceptance: a graph holding a send/recv pair as comm nodes
+        completes via start() + progress-engine signaling, and the
+        execute() shim matches the async path."""
+        cl, r0, r1 = pair
+        buf = np.zeros(256, np.uint8)            # bufcopy: must be *posted*
+        data = np.arange(256, dtype=np.uint8)
+        g = r0.alloc_graph("pair")
+        recv = g.add_comm(post_recv_x(r1, 0, buf, 256, 5), name="recv")
+        send = g.add_comm(post_send_x(r0, 1, data, 256, 5), name="send")
+        joined = []
+        join = g.add_node(lambda r, s: joined.append((r, s)) or "joined",
+                          deps=[recv, send], name="join")
+
+        g.start()
+        ready, _ = g.test()
+        assert not ready                         # no host-side synchronous fire
+        assert not joined
+        while not g.test()[0]:                   # progress engine completes it
+            cl.progress_all()
+        async_vals = g.test()[1]
+        g.assert_partial_order()
+        assert np.array_equal(buf, data)
+        assert async_vals[join] == "joined"
+        # comm node values are the completion statuses
+        assert isinstance(async_vals[recv], Status)
+        assert async_vals[recv].is_done()
+
+        # the execute() shim (start + drain) reproduces the async result
+        buf[:] = 0
+        shim_vals = g.execute()
+        g.assert_partial_order()
+        assert np.array_equal(buf, data)
+        assert shim_vals[join] == async_vals[join]
+        assert shim_vals.keys() == async_vals.keys()
+
+    def test_comm_chain_partial_order(self, pair):
+        """send_i fires only after recv_{i-1} completed — the wire carries
+        the dependency."""
+        cl, r0, r1 = pair
+        n = 4
+        bufs = [np.zeros(8, np.uint8) for _ in range(n)]
+        g = r0.alloc_graph("chain")
+        prev = None
+        ids = []
+        for i in range(n):
+            src, dst = (0, 1) if i % 2 == 0 else (1, 0)
+            r = g.add_comm(post_recv_x(cl[dst], src, bufs[i], 8, i),
+                           name=f"recv{i}")
+            s = g.add_comm(post_send_x(cl[src], dst,
+                                       np.full(8, i, np.uint8), 8, i),
+                           deps=[prev] if prev is not None else [],
+                           name=f"send{i}")
+            ids.append((r, s))
+            prev = r
+        g.start()
+        vals = g.wait()                          # auto-drives the cluster
+        g.assert_partial_order()
+        for i, buf in enumerate(bufs):
+            assert np.all(buf == i)
+        pos = {nid: k for k, nid in enumerate(g.fire_order)}
+        for (r_prev, _), (_, s_next) in zip(ids, ids[1:]):
+            assert pos[r_prev] < pos[s_next]
+
+    def test_graph_as_completion_object_signal_nodes(self, pair):
+        """graph.signal() (the comp protocol) completes signal nodes —
+        the graph can be the completion object of outside operations."""
+        cl, r0, r1 = pair
+        g = r1.alloc_graph("sig")
+        trigger = g.add_signal_node(name="external")
+        fired = []
+        g.add_node(lambda s: fired.append(s), deps=[trigger])
+        g.start()
+        assert not g.test()[0]
+        # the graph IS the remote completion object of an active message
+        rc = r1.register_rcomp(g)
+        post_am_x(r0, 1, np.full(8, 5, np.uint8), None, None, rc)()
+        g.wait(cl)
+        assert g.test()[0] and fired
+        assert int(fired[0].get_buffer()[0]) == 5
+        g.assert_partial_order()
+
+    def test_signal_without_signal_nodes_is_fatal(self, pair):
+        cl, r0, r1 = pair
+        g = r0.alloc_graph("sig2")
+        with pytest.raises(FatalError, match="no signal nodes"):
+            g.signal(done())
+
+    def test_comm_node_rejects_bound_local_comp(self, pair):
+        cl, r0, r1 = pair
+        g = r0.alloc_graph()
+        h = r0.alloc_handler(lambda s: None)
+        with pytest.raises(FatalError, match="local_comp"):
+            g.add_comm(post_send_x(r0, 1, np.zeros(8, np.uint8), 8,
+                                   0).local_comp(h))
+        with pytest.raises(FatalError, match="OFF builder"):
+            g.add_comm(lambda: None)
+
+    def test_restart_inflight_rejected(self, pair):
+        cl, r0, r1 = pair
+        g = r0.alloc_graph()
+        g.add_comm(post_send_x(r0, 1, np.zeros(256, np.uint8), 256, 1))
+        g.start()
+        with pytest.raises(FatalError, match="in flight"):
+            g.start()
+        cl.quiesce()
+
+
+# ---------------------------------------------------------------------------
+# Table-1 classify edge rows + OFF introspection/reuse (satellites)
+# ---------------------------------------------------------------------------
+
+class TestTable1EdgeRows:
+    def test_in_with_remote_comp_without_remote_buf_is_fatal(self):
+        with pytest.raises(FatalError, match="Table 1"):
+            classify(Direction.IN, None, remote_comp=7)
+
+    def test_in_with_remote_comp_without_remote_buf_via_post(self, pair):
+        cl, r0, r1 = pair
+        with pytest.raises(FatalError, match="Table 1"):
+            post_comm_x(r0, Direction.IN, 1, np.zeros(8, np.uint8)) \
+                .remote_comp(3)()
+
+    def test_get_with_signal_not_implemented(self, pair):
+        cl, r0, r1 = pair
+        assert classify(Direction.IN, "buf", None) == CommKind.GET
+        with pytest.raises(NotImplementedError, match="RDMA read"):
+            classify(Direction.IN, "buf", 1)
+        region = r1.register_memory(np.zeros(8, np.uint8))
+        with pytest.raises(NotImplementedError):
+            post_comm_x(r0, Direction.IN, 1, np.zeros(8, np.uint8)) \
+                .remote_buf((region.rid, 0)).remote_comp(1)()
+
+
+class TestOffIntrospection:
+    def test_options_enumerates_set_values(self, pair):
+        cl, r0, r1 = pair
+        b = post_send_x(r0, 1, np.zeros(8, np.uint8)).tag(9) \
+            .allow_retry(False)
+        assert b.options() == {"tag": 9, "allow_retry": False}
+
+    def test_unknown_option_typeerror_names_valid_set(self):
+        @off
+        def op(a, *, known=0):
+            return a
+
+        with pytest.raises(TypeError, match="known"):
+            op.x(1).bogus(2)
+
+    def test_is_set_and_get_see_positional_bindings(self, pair):
+        cl, r0, r1 = pair
+        b = post_send_x(r0, 1, np.zeros(8, np.uint8), 8, 4)
+        assert b.is_set("tag") and b.get("tag") == 4
+        assert not b.is_set("local_comp") and b.get("local_comp") is None
+        b.set("tag", 11)                         # rebinds the positional
+        assert b.get("tag") == 11
+
+    def test_builder_reuse_posts_twice(self, pair):
+        cl, r0, r1 = pair
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        b = post_am_x(r0, 1, np.arange(8, dtype=np.uint8), None, None, rc)
+        assert isinstance(b, OffBuilder)
+        assert b().is_done() and b().is_done()   # a builder is a reusable value
+        cl.quiesce()
+        assert len(cq) == 2
+
+
+class TestSchedulerUnifiedComp:
+    def test_bounded_result_cq_never_drops_completions(self):
+        """A full client CQ rejects the result signal with retry; the
+        scheduler parks and redelivers it instead of dropping tokens."""
+        from repro.serving.kv_cache import PagedKVAllocator
+        from repro.serving.scheduler import ServeScheduler
+        sched = ServeScheduler(lambda toks, pos: toks, max_batch=8,
+                               allocator=PagedKVAllocator(n_pages=64,
+                                                          page_size=16))
+        cq = sched.alloc_cq(capacity=2)          # unified comp API
+        for _ in range(5):
+            st = sched.submit(np.array([1, 2], np.int32), 1, comp=cq)
+            assert st.is_posted()
+        while sched.completed < 5:
+            sched.step()
+        got = 0
+        for _ in range(50):
+            st = cq.pop()
+            if st.is_retry():
+                if got == 5:
+                    break
+                sched.step()                     # redelivers parked signals
+                continue
+            got += 1
+        assert got == 5
+
+
+# ---------------------------------------------------------------------------
+# endpoint-centric posting
+# ---------------------------------------------------------------------------
+
+class TestEndpointPosting:
+    def test_endpoint_kwarg_routes_onto_the_bundle(self):
+        cl = LocalCluster(2, CFG)
+        eps = cl.alloc_endpoint(n_devices=2, stripe="round_robin",
+                                name="kw")
+        for i in range(4):
+            post_send_x(cl[0], 1, np.zeros(8, np.uint8), 8,
+                        i).endpoint(eps[0])()
+            post_recv_x(cl[1], 0, np.zeros(8, np.uint8), 8,
+                        i).endpoint(eps[1])()
+        cl.quiesce()
+        posts = [d["posts"] for d in eps[0].counters()["devices"]]
+        assert all(p > 0 for p in posts), posts
+
+    def test_endpoint_and_device_are_exclusive(self):
+        cl = LocalCluster(2, CFG)
+        eps = cl.alloc_endpoint(name="x")
+        with pytest.raises(FatalError, match="not both"):
+            post_send_x(cl[0], 1, np.zeros(8, np.uint8), 8, 0) \
+                .endpoint(eps[0]).device(cl[0].default_device)()
+
+    def test_foreign_endpoint_rejected(self):
+        cl = LocalCluster(2, CFG)
+        eps = cl.alloc_endpoint(name="f")
+        with pytest.raises(FatalError, match="belongs to"):
+            post_send_x(cl[0], 1, np.zeros(8, np.uint8), 8, 0) \
+                .endpoint(eps[1])()
+
+    def test_endpoint_post_comm_generic(self):
+        cl = LocalCluster(2, CFG)
+        eps = cl.alloc_endpoint(n_devices=2, name="g")
+        cq = cl[1].alloc_cq()
+        rc = cl[1].register_rcomp(cq)
+        st = eps[0].post_comm(Direction.OUT, 1, np.arange(8, dtype=np.uint8),
+                              remote_comp=rc, tag=2)
+        assert st.is_done()                      # inject AM
+        assert cq.wait(cl).tag == 2

@@ -299,13 +299,19 @@ class TestCompletionGraph:
         assert sorted(fired) == ["a", "b", "c", "d"]
         assert fired[0] == "a" and fired[-1] == "d"
 
-    def test_cycle_detected(self):
+    def test_bad_edges_rejected_at_insertion(self):
         g = CompletionGraph()
         a = g.add_node(lambda: 1)
         b = g.add_node(lambda x: x, deps=[a])
-        g.add_edge(b, a)                                 # cycle
-        with pytest.raises(FatalError):
-            g.execute()
+        with pytest.raises(FatalError):                  # backward => cycle
+            g.add_edge(b, a)
+        with pytest.raises(FatalError):                  # self-edge
+            g.add_edge(a, a)
+        with pytest.raises(FatalError):                  # duplicate of a dep
+            g.add_edge(a, b)
+        with pytest.raises(FatalError):                  # unknown node
+            g.add_edge(a, 99)
+        g.execute()                                      # graph still valid
 
 
 # ---------------------------------------------------------------------------
