@@ -5,6 +5,7 @@
 Prints ``name,case,us_per_call,derived`` CSV rows:
 
     message_rate  -> paper Fig 2/3 (lanes x shared/dedicated)
+    mt_message_rate -> paper Fig 2/3 multithreaded mode (real threads)
     bandwidth     -> paper Fig 4  (size sweep, protocol crossovers)
     resources     -> paper Fig 5  (CQ / matching / packet pool Mops)
     kmer          -> paper Fig 6  (HipMer k-mer stage, strong scaling)
@@ -29,9 +30,10 @@ def main() -> None:
     quick = not args.full
 
     from . import (amt_pipeline, bandwidth, graph_latency, kmer,
-                   message_rate, resources, roofline)
+                   message_rate, mt_message_rate, resources, roofline)
     suites = {
         "message_rate": message_rate.run,
+        "mt_message_rate": mt_message_rate.run,
         "bandwidth": bandwidth.run,
         "resources": resources.run,
         "kmer": kmer.run,

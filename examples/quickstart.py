@@ -8,7 +8,8 @@ Walks the paper's core concepts end to end on CPU:
   3. the ternary done/posted/retry status protocol + OFF idiom
   4. ASYNC completion graphs (comm ops as nodes, progress-completed)
   5. striping and progress policies (DESIGN.md §8)
-  6. an in-graph ring collective under shard_map (the TPU adaptation)
+  6. multithreaded progress workers + thread-safe CQs (DESIGN.md §10)
+  7. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -99,7 +100,33 @@ def main():
     while not rcq.pop().is_retry():
         pass                          # drain the demo deliveries
 
-    # -- 6. the in-graph layer: ring collectives (run under shard_map on
+    # -- 6. multithreaded progress (paper §4.2.3): progress="workers"
+    #       spawns N real threads that drive the endpoint's devices
+    #       through per-device try-locks — a thread that fails a lock
+    #       moves on.  Worker-signaled queues must be thread-safe:
+    #       alloc_cq(threadsafe=True) is the paper's §4.1.4 FAA queue. --
+    import dataclasses
+    import time
+
+    from repro.core import EndpointSpec
+    wspec = EndpointSpec(name="workers-demo", n_devices=2,
+                         progress="workers", n_workers=2)
+    # symmetric bundles (streams match by device index), each with its
+    # own worker threads: rank0's push the wire, rank1's deliver
+    wep0 = r0.alloc_endpoint(spec=wspec)
+    wep1 = r1.alloc_endpoint(spec=dataclasses.replace(wspec,
+                                                      name="workers-demo@1"))
+    wcq = r1.alloc_cq(threadsafe=True)
+    wrc = r1.register_rcomp(wcq)
+    with wep0, wep1:                  # starts/stops the worker threads
+        for i in range(8):
+            wep0.post_am(1, np.full(8, i, np.uint8), remote_comp=wrc)
+        while wcq.pushes < 8:         # the workers deliver; we just wait
+            time.sleep(1e-4)
+    print(f"worker threads delivered {wcq.pushes} AMs (lock skips: "
+          f"{wep1.counters()['workers']['lock_skips']})")
+
+    # -- 7. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

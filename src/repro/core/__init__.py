@@ -6,6 +6,9 @@ adaptation of the zero-copy protocol.
 """
 from .backlog import BacklogQueue, Ring, init_ring, ring_pop, ring_push, ring_size
 from .channels import Channel, Device, make_channels
+from .concurrency import (LCQ, AtomicCounter, AtomicCredit, AtomicFlag,
+                          ProgressWorkerPool, ThreadSafeCompletionQueue,
+                          TryLock, aggregate_lock_stats)
 from .completion import (CompletionHandler, CompletionObject, CompletionQueue,
                          MPMCArray, Synchronizer, SyncState, init_sync,
                          sync_ready, sync_signal)
@@ -56,6 +59,10 @@ __all__ = [
     # modes & protocol
     "CommConfig", "CommMode", "parse_mode", "Protocol", "ProtocolStats",
     "select_protocol", "off", "OffBuilder",
+    # concurrency subsystem (paper §4.1)
+    "AtomicCounter", "AtomicCredit", "AtomicFlag", "LCQ",
+    "ProgressWorkerPool", "ThreadSafeCompletionQueue", "TryLock",
+    "aggregate_lock_stats",
     # in-graph collectives
     "collectives",
 ]

@@ -6,9 +6,15 @@ cannot be immediately submitted and cannot be back-propagated to the user
 C++ queue with a spinlock. An atomic flag prevents the progress engine from
 unnecessarily polling an empty backlog queue."
 
-Host-side :class:`BacklogQueue` keeps that shape: a plain deque + an
-``empty_flag`` fast-path check (the atomic-flag analogue), with an optional
-capacity bound that surfaces ``retry(RETRY_BACKLOG_FULL)``.
+Host-side :class:`BacklogQueue` keeps that shape — and, since the
+concurrency subsystem landed, the paper's exact locking: a deque guarded
+by a spinlock-style :class:`~repro.core.concurrency.TryLock`, with a real
+:class:`~repro.core.concurrency.AtomicFlag` empty-flag fast path so the
+progress engine never takes the lock just to learn the queue is empty.
+An optional capacity bound surfaces ``retry(RETRY_BACKLOG_FULL)`` on
+``push`` — but never on ``push_front``: a requeue of an already-popped
+item (a rejected signal redelivery, a still-full fabric) must not fail,
+so the head push bypasses the capacity check.
 
 The functional ring (:func:`init_ring` / :func:`ring_push` /
 :func:`ring_pop`) is the in-graph variant used by the serving scheduler's
@@ -25,42 +31,65 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from .concurrency.atomics import AtomicFlag
+from .concurrency.locks import TryLock
 from .status import ErrorCode, Status, done, retry
 
 
 class BacklogQueue:
-    """Host-side backlog: FIFO of postponed communication descriptors."""
+    """Host-side backlog: thread-safe FIFO of postponed descriptors.
+
+    Lock granularity (DESIGN.md §10): one spinlock per queue — the paper
+    expects the backlog to be nearly always empty, so a finer structure
+    would buy nothing.  The :attr:`empty_flag` read is lock-free.
+    """
 
     def __init__(self, capacity: Optional[int] = None):
         self._q: collections.deque = collections.deque()
         self.capacity = capacity
         self.max_depth = 0          # telemetry: paper expects this to stay ~0
+        self.lock = TryLock(name="backlog")
+        self._empty = AtomicFlag(init=True)
 
     @property
     def empty_flag(self) -> bool:
-        """The atomic-flag fast path: progress() checks this before polling."""
-        return not self._q
+        """The atomic-flag fast path: progress() checks this before polling
+        (and before taking the lock)."""
+        return self._empty.is_set()
 
     def push(self, item: Any) -> Status:
-        if self.capacity is not None and len(self._q) >= self.capacity:
-            return retry(ErrorCode.RETRY_BACKLOG_FULL)
-        self._q.append(item)
-        self.max_depth = max(self.max_depth, len(self._q))
+        with self.lock:
+            if self.capacity is not None and len(self._q) >= self.capacity:
+                return retry(ErrorCode.RETRY_BACKLOG_FULL)
+            self._q.append(item)
+            self.max_depth = max(self.max_depth, len(self._q))
+            self._empty.clear()
         return done()
 
     def push_front(self, item: Any) -> Status:
         """Requeue at the head: a popped item that could not be processed
-        goes back to its original position, preserving FIFO delivery."""
-        if self.capacity is not None and len(self._q) >= self.capacity:
-            return retry(ErrorCode.RETRY_BACKLOG_FULL)
-        self._q.appendleft(item)
-        self.max_depth = max(self.max_depth, len(self._q))
+        goes back to its original position, preserving FIFO delivery.
+
+        Never fails: the item was already accounted for when it was first
+        pushed (or is owed a redelivery, e.g. a signal a full CQ rejected),
+        so the capacity bound does not apply — rejecting a requeue would
+        drop a completion the runtime has promised to deliver."""
+        with self.lock:
+            self._q.appendleft(item)
+            self.max_depth = max(self.max_depth, len(self._q))
+            self._empty.clear()
         return done()
 
     def pop(self) -> tuple[Any, Status]:
-        if not self._q:
+        if self._empty.is_set():                 # lock-free fast path
             return None, retry(ErrorCode.RETRY_LOCKED)
-        return self._q.popleft(), done()
+        with self.lock:
+            if not self._q:
+                return None, retry(ErrorCode.RETRY_LOCKED)
+            item = self._q.popleft()
+            if not self._q:
+                self._empty.test_and_set()
+            return item, done()
 
     def __len__(self) -> int:
         return len(self._q)

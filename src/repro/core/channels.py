@@ -33,6 +33,8 @@ from typing import Optional
 
 from .backlog import BacklogQueue
 from .completion import CompletionQueue
+from .concurrency.atomics import AtomicCounter
+from .concurrency.locks import TryLock
 from .modes import CommConfig, CommMode
 
 _device_ids = itertools.count()
@@ -74,10 +76,40 @@ class Device:
         self.backlog = BacklogQueue()
         self.index = 0                         # position in the owner's device list
         self.pending_tx = collections.deque()  # ops awaiting source completion
-        # telemetry (paper's "progress" counters)
-        self.posts = 0         # operations posted on this device
-        self.pushes = 0        # wire messages that hit the fabric
-        self.progresses = 0    # progress passes driven over it
+        # per-device progress try-lock (paper §4.2.3): any number of
+        # threads may call progress; the holder runs the reaction chain,
+        # a loser "moves on".  Reentrant: a completion callback fired
+        # inside a pass may legally drive progress on its own device.
+        self.progress_lock = TryLock(name=f"device{self.did}/progress",
+                                     reentrant=True)
+        # telemetry (paper's "progress" counters) — atomic: posts/pushes
+        # are bumped by arbitrary poster threads, progresses by whichever
+        # thread holds the progress lock
+        self._posts = AtomicCounter()
+        self._pushes = AtomicCounter()
+        self._progresses = AtomicCounter()
+
+    # counters read as plain ints; writers use count_*()
+    @property
+    def posts(self) -> int:
+        return self._posts.load()
+
+    @property
+    def pushes(self) -> int:
+        return self._pushes.load()
+
+    @property
+    def progresses(self) -> int:
+        return self._progresses.load()
+
+    def count_post(self) -> None:
+        self._posts.fetch_add(1)
+
+    def count_push(self) -> None:
+        self._pushes.fetch_add(1)
+
+    def count_progress(self) -> None:
+        self._progresses.fetch_add(1)
 
     @property
     def n_channels(self) -> int:

@@ -1,0 +1,182 @@
+"""LCQ (paper §4.1.4) — a fixed-size FAA-ticket MPMC queue.
+
+The paper ships two completion-queue backends: "one based on the
+state-of-the-art LCRQ and the other on a hand-written Fetch-And-Add-based
+fix-sized array".  :class:`LCQ` is the second one: a fixed-size slot array
+with monotone head/tail ticket counters.  Each slot carries a sequence
+number; a producer claims a ticket from ``tail`` (CAS-guarded FAA — the
+CPython stand-in for the x86 ``lock xadd``/CAS pair, see
+:mod:`.atomics`), writes its payload, and publishes by bumping the slot
+sequence.  A consumer symmetrically claims from ``head``.  The sequence
+numbers are what make the design safe for *multiple* producers and
+consumers: a ticket holder can always tell whether its slot is still
+occupied by a straggling peer from the previous lap.
+
+Both operations are non-blocking, per the paper's discipline: a full
+queue surfaces ``retry(RETRY_QUEUE_FULL)`` to the producer (the progress
+engine parks the completion in the backlog) and an empty queue surfaces
+``retry`` to the consumer — nothing ever blocks or is dropped.
+
+:class:`ThreadSafeCompletionQueue` wraps an LCQ in the unified ``comp``
+protocol so it is a drop-in, thread-safe replacement for the host
+:class:`~repro.core.completion.CompletionQueue` — allocate one with
+``Runtime.alloc_cq(threadsafe=True)`` when worker threads will signal or
+drain it concurrently.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+from ..completion import CompletionObject
+from ..status import ErrorCode, Status, done, retry
+from .atomics import AtomicCounter
+
+_EMPTY = object()          # slot sentinel distinct from any user payload
+
+
+class _Slot:
+    __slots__ = ("seq", "data")
+
+    def __init__(self, seq: int):
+        self.seq = seq
+        self.data = _EMPTY
+
+
+class LCQ:
+    """Fixed-size FAA-ticket MPMC queue of arbitrary Python objects.
+
+    ``push``/``pop`` return in-graph-style int statuses alongside their
+    results so hot loops can branch cheaply; the completion-queue wrapper
+    translates them into the ternary Status protocol.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError("LCQ capacity must be >= 1")
+        self.capacity = capacity
+        self._slots = [_Slot(i) for i in range(capacity)]
+        self._head = AtomicCounter()
+        self._tail = AtomicCounter()
+        # telemetry: ticket races lost (the "contention" of a lock-free
+        # structure — a CAS that failed and had to re-read)
+        self.push_races = AtomicCounter()
+        self.pop_races = AtomicCounter()
+
+    def push(self, item: Any) -> bool:
+        """Non-blocking enqueue; False when the queue is full."""
+        cap = self.capacity
+        while True:
+            pos = self._tail.load()
+            slot = self._slots[pos % cap]
+            dif = slot.seq - pos
+            if dif == 0:
+                # slot free for this lap: claim the ticket
+                if self._tail.compare_exchange(pos, pos + 1):
+                    slot.data = item
+                    slot.seq = pos + 1        # publish
+                    return True
+                self.push_races.fetch_add(1)  # lost the ticket race
+            elif dif < 0:
+                return False                  # a full lap behind: full
+            # dif > 0: a racing producer claimed pos but the counter
+            # already moved on — re-read the tail
+
+    def pop(self) -> tuple[Any, bool]:
+        """Non-blocking dequeue; (None, False) when empty."""
+        cap = self.capacity
+        while True:
+            pos = self._head.load()
+            slot = self._slots[pos % cap]
+            dif = slot.seq - (pos + 1)
+            if dif == 0:
+                if self._head.compare_exchange(pos, pos + 1):
+                    item = slot.data
+                    slot.data = _EMPTY
+                    slot.seq = pos + cap      # free the slot for next lap
+                    return item, True
+                self.pop_races.fetch_add(1)
+            elif dif < 0:
+                return None, False            # nothing published yet: empty
+            # dif > 0: re-read the head
+
+    def __len__(self) -> int:
+        return max(0, self._tail.load() - self._head.load())
+
+    @property
+    def pushes(self) -> int:
+        """Total accepted pushes (the tail ticket counter)."""
+        return self._tail.load()
+
+    @property
+    def pops(self) -> int:
+        return self._head.load()
+
+    def __repr__(self) -> str:
+        return f"LCQ(cap={self.capacity}, live={len(self)})"
+
+
+class ThreadSafeCompletionQueue(CompletionObject):
+    """The LCQ as a completion object — a thread-safe ``alloc_cq`` result.
+
+    Same surface as the host :class:`~repro.core.completion.CompletionQueue`
+    (``signal``/``pop``/``test``/``wait``/``len``), but every method is
+    safe under concurrent signalers *and* concurrent poppers: the serving
+    scheduler drains client CQs from worker threads through exactly this
+    object.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        self._q = LCQ(capacity or 4096)
+        self.capacity = capacity
+
+    def signal(self, status: Status) -> Status:
+        if self._q.push(status):
+            return done()
+        return retry(ErrorCode.RETRY_QUEUE_FULL)
+
+    def pop(self) -> Status:
+        item, ok = self._q.pop()
+        if not ok:
+            return retry(ErrorCode.RETRY_LOCKED)
+        return item
+
+    def test(self) -> tuple[bool, Optional[Status]]:
+        """Non-destructive probe: under concurrency the front item may be
+        popped by a peer between test() and pop() — ready=True only means
+        the queue *was* non-empty."""
+        return len(self._q) > 0, None
+
+    def wait(self, progress=None, max_rounds: int = 100_000) -> Status:
+        while True:
+            super().wait(progress, max_rounds)
+            st = self.pop()
+            if not st.is_retry():
+                return st
+            # a concurrent popper won the race for the item wait() saw;
+            # the caller contract is "one status", so keep driving
+
+    @property
+    def pushes(self) -> int:
+        return self._q.pushes
+
+    @property
+    def pops(self) -> int:
+        return self._q.pops
+
+    def races(self) -> dict:
+        return {"push_races": self._q.push_races.load(),
+                "pop_races": self._q.pop_races.load()}
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+def drain(cq, limit: int = 0) -> List[Status]:
+    """Pop done-statuses until empty (or ``limit``); never blocks."""
+    out: List[Status] = []
+    while not limit or len(out) < limit:
+        st = cq.pop()
+        if st.is_retry():
+            break
+        out.append(st)
+    return out

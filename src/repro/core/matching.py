@@ -10,10 +10,15 @@ The engine exposes two methods, exactly as in the paper:
 
 Two implementations live here:
 
-1. :class:`HostMatchingEngine` — a plain Python dict-of-deques used at trace
-   time (matching program-builder sends with recvs before emitting ppermute)
-   and by the serving router.  The paper's per-bucket spinlock concern does
-   not arise: trace time is single-threaded by construction.
+1. :class:`HostMatchingEngine` — a Python dict-of-deques used at trace
+   time (matching program-builder sends with recvs before emitting ppermute),
+   by the serving router, and — since the concurrency subsystem landed —
+   by concurrent progress workers.  The paper's per-bucket spinlock is
+   real here: insertions take a fine-grained bucket lock (keys hash onto a
+   fixed stripe of :class:`~repro.core.concurrency.TryLock`\\ s, so two
+   inserts on different buckets never contend) and the whole
+   check-complement/append step is atomic per bucket, which is what makes
+   insert linearizable.
 2. Functional jnp engine (:func:`init_table`, :func:`insert_batch`) — a
    fixed-capacity hash table living inside jitted programs; used by the MoE
    dispatch path (token -> expert matching with capacity) and exercised
@@ -33,6 +38,9 @@ from typing import Any, Callable, Hashable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .concurrency.atomics import AtomicCounter
+from .concurrency.locks import TryLock
 
 
 class MatchKind(enum.IntEnum):
@@ -67,34 +75,62 @@ def make_key(rank: int, tag: int,
 
 
 class HostMatchingEngine:
-    """Trace-time / host-side matching engine.
+    """Trace-time / host-side matching engine, insert-linearizable.
 
     Buckets are materialized lazily (a Python dict is already a hash table);
     each bucket holds FIFO queues per kind, mirroring the paper's
     list-of-queues buckets.  ``insert`` returns the matched value or None.
+
+    Lock granularity (DESIGN.md §10): keys hash onto ``n_locks`` bucket
+    stripes; an insert spin-acquires its stripe's :class:`TryLock` (insert
+    cannot fail, so the blocking fallback applies) and performs the
+    check-complement / pop-or-append step atomically.  Two inserts whose
+    keys land on different stripes proceed in parallel; two on the same
+    key serialize, which is exactly the linearizability a send/recv match
+    needs — one of them matches the other, never both or neither.
     """
 
-    def __init__(self, n_buckets: int = 65536):
+    def __init__(self, n_buckets: int = 65536, n_locks: int = 64):
         self.n_buckets = n_buckets
         self._buckets: dict[Hashable, dict[MatchKind, collections.deque]] = {}
-        self.inserts = 0
-        self.matches = 0
+        self.locks = [TryLock(name=f"match/bucket{i}")
+                      for i in range(n_locks)]
+        self._inserts = AtomicCounter()
+        self._matches = AtomicCounter()
+
+    @property
+    def inserts(self) -> int:
+        return self._inserts.load()
+
+    @property
+    def matches(self) -> int:
+        return self._matches.load()
+
+    def _lock_of(self, key: Hashable) -> TryLock:
+        return self.locks[hash(key) % len(self.locks)]
 
     def insert(self, key: Hashable, kind: MatchKind, value: Any):
-        self.inserts += 1
-        bucket = self._buckets.setdefault(
-            key, {MatchKind.SEND: collections.deque(),
-                  MatchKind.RECV: collections.deque()})
-        other = bucket[kind.complement]
-        if other:
-            self.matches += 1
-            return other.popleft()
-        bucket[kind].append(value)
-        return None
+        self._inserts.fetch_add(1)
+        with self._lock_of(key):
+            bucket = self._buckets.setdefault(
+                key, {MatchKind.SEND: collections.deque(),
+                      MatchKind.RECV: collections.deque()})
+            other = bucket[kind.complement]
+            if other:
+                self._matches.fetch_add(1)
+                return other.popleft()
+            bucket[kind].append(value)
+            return None
 
     def pending(self) -> int:
-        return sum(len(q) for b in self._buckets.values()
+        # snapshot the bucket list in one C-level call (GIL-atomic) so a
+        # concurrent insert growing the dict cannot break the iteration
+        return sum(len(q) for b in list(self._buckets.values())
                    for q in b.values())
+
+    def lock_stats(self) -> list[dict]:
+        """Per-bucket-stripe lock telemetry."""
+        return [lk.stats() for lk in self.locks]
 
 
 # ---------------------------------------------------------------------------

@@ -13,10 +13,16 @@ Two implementations, mirroring :mod:`repro.core.matching`:
 
 1. :class:`HostPacketPool` — Python deques, used by the host-side runtime
    (message staging for the buffer-copy protocol, serving KV page allocator,
-   aggregation buffers).  Thread safety concerns from the paper (per-deque
-   spinlock) do not arise: the host runtime is single-threaded per rank by
-   construction, and the *contention-free* property the paper buys with
-   try-locks is preserved structurally — each lane owns its deque.
+   aggregation buffers).  Since the concurrency subsystem landed this is
+   the paper's §4.1.2 design verbatim: each lane's deque is guarded by a
+   spinlock-style :class:`~repro.core.concurrency.TryLock`; local get/put
+   take their own lane's lock (blocking spin — a lane is rarely contended
+   by design), while a steal attempt *try-locks* the victim and, on
+   failure, gives up immediately so the nonblocking ``get`` surfaces
+   ``retry(RETRY_NOPACKET)`` rather than waiting (paper: "``get`` can be
+   nonblocking and will return a nullptr when it fails the first packet
+   stealing attempts").  Holding one's own lane lock while try-locking a
+   victim cannot deadlock: the second acquisition never blocks.
 2. Functional jnp pool (:func:`init_pool` / :func:`pool_get` /
    :func:`pool_put`) — a fixed-geometry slot pool living inside jitted
    programs.  Used for MoE expert-capacity slots and paged-KV page
@@ -36,16 +42,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .concurrency.atomics import AtomicCounter
+from .concurrency.locks import TryLock
 from .status import ErrorCode, Status, done, retry
 
 
 class HostPacketPool:
-    """Host-side packet pool: per-lane deques + steal-half.
+    """Host-side packet pool: per-lane locked deques + try-lock steal-half.
 
     ``n_lanes`` plays the role of the paper's thread count; each lane owns a
     deque seeded with ``packets_per_lane`` packet ids.  Packets are plain
     integer ids into a backing buffer table (``buffer_of``), so "allocation"
-    never copies.
+    never copies.  Every deque (and its victim-selection RNG) is protected
+    by that lane's :class:`TryLock`; counters are atomic so telemetry stays
+    exact under concurrent get/put/steal.
     """
 
     def __init__(self, n_lanes: int, packets_per_lane: int,
@@ -58,43 +68,81 @@ class HostPacketPool:
                                     (i + 1) * packets_per_lane))
             for i in range(n_lanes)
         ]
-        self._rng = np.random.default_rng(seed)
+        self.locks = [TryLock(name=f"pool/lane{i}") for i in range(n_lanes)]
+        # per-lane RNGs: victim selection happens under the lane lock, so
+        # a per-lane generator is race-free without further locking
+        self._rngs = [np.random.default_rng(seed + i) for i in range(n_lanes)]
         # pre-registered fixed-size buffers (the paper registers them with
         # the NIC; here registration == preallocation)
         self.buffer_of = [bytearray(packet_bytes) for _ in range(self.n_packets)]
-        self.steals = 0
-        self.gets = 0
-        self.puts = 0
+        self._steals = AtomicCounter()
+        self._gets = AtomicCounter()
+        self._puts = AtomicCounter()
+        self._steal_lock_failures = AtomicCounter()
+
+    # counters stay plain ints to callers (tests compare with ==)
+    @property
+    def steals(self) -> int:
+        return self._steals.load()
+
+    @property
+    def gets(self) -> int:
+        return self._gets.load()
+
+    @property
+    def puts(self) -> int:
+        return self._puts.load()
+
+    @property
+    def steal_lock_failures(self) -> int:
+        """Steal attempts abandoned because the victim's lock was held."""
+        return self._steal_lock_failures.load()
 
     def get(self, lane: int) -> tuple[int, Status]:
-        """Pop a packet id; one steal attempt on local exhaustion."""
-        self.gets += 1
+        """Pop a packet id; one try-lock-guarded steal attempt on local
+        exhaustion, failing to ``retry(RETRY_NOPACKET)`` (never blocking)."""
+        self._gets.fetch_add(1)
         dq = self._deques[lane]
-        if dq:
-            return dq.pop(), done()          # tail end: cache locality
-        # steal half from a random victim (head end); never pick self —
-        # that would waste the single nonblocking attempt
-        if self.n_lanes == 1:
-            return -1, retry(ErrorCode.RETRY_NOPACKET)
-        victim = (lane + 1 + int(self._rng.integers(self.n_lanes - 1))) \
-            % self.n_lanes
-        vdq = self._deques[victim]
-        n_steal = len(vdq) // 2
-        if n_steal == 0:
-            # a single failed attempt -> retry (nonblocking semantics)
-            return -1, retry(ErrorCode.RETRY_NOPACKET)
-        self.steals += 1
-        for _ in range(n_steal):
-            dq.appendleft(vdq.popleft())     # head end on both sides
-        return dq.pop(), done()
+        with self.locks[lane]:
+            if dq:
+                return dq.pop(), done()      # tail end: cache locality
+            # steal half from a random victim (head end); never pick self —
+            # that would waste the single nonblocking attempt
+            if self.n_lanes == 1:
+                return -1, retry(ErrorCode.RETRY_NOPACKET)
+            victim = (lane + 1
+                      + int(self._rngs[lane].integers(self.n_lanes - 1))) \
+                % self.n_lanes
+            vlock = self.locks[victim]
+            if not vlock.try_acquire():
+                # the paper's nonblocking get: a contended victim is a
+                # failed attempt, not a wait
+                self._steal_lock_failures.fetch_add(1)
+                return -1, retry(ErrorCode.RETRY_NOPACKET)
+            try:
+                vdq = self._deques[victim]
+                n_steal = len(vdq) // 2
+                if n_steal == 0:
+                    return -1, retry(ErrorCode.RETRY_NOPACKET)
+                self._steals.fetch_add(1)
+                for _ in range(n_steal):
+                    dq.appendleft(vdq.popleft())   # head end on both sides
+            finally:
+                vlock.release()
+            return dq.pop(), done()
 
     def put(self, lane: int, packet: int) -> Status:
-        self.puts += 1
-        self._deques[lane].append(packet)    # tail end
+        self._puts.fetch_add(1)
+        with self.locks[lane]:
+            self._deques[lane].append(packet)    # tail end
         return done()
 
     def free_packets(self) -> int:
         return sum(len(d) for d in self._deques)
+
+    def lock_stats(self) -> list[dict]:
+        """Per-lane lock telemetry (contention evidence for benchmarks)."""
+        return [lk.stats() for lk in self.locks]
 
 
 # ---------------------------------------------------------------------------
@@ -154,8 +202,15 @@ def pool_get(pool: SlotPool, lane, steal_seed) -> tuple[SlotPool, jax.Array,
 
     # --- slow path: steal half from a pseudo-random victim ----------------
     def steal(p: SlotPool):
-        victim = (lane + 1 + jnp.asarray(steal_seed, jnp.int32)
-                  % jnp.maximum(n_lanes - 1, 1)) % n_lanes
+        # victim selection matches the host pool:
+        #   (lane + 1 + (seed % max(n_lanes-1, 1))) % n_lanes
+        # parenthesized so the offset is lane+1 plus a value in
+        # [0, n_lanes-2] — never lane itself; jnp.remainder guards
+        # negative seeds (result carries the divisor's sign, so the
+        # offset stays non-negative)
+        offset = jnp.remainder(jnp.asarray(steal_seed, jnp.int32),
+                               jnp.maximum(n_lanes - 1, 1))
+        victim = (lane + 1 + offset) % n_lanes
         vcnt = p.count[victim]
         n_steal = vcnt // 2
         ok = (n_steal > 0) & (victim != lane)

@@ -20,7 +20,13 @@ policy** deciding which device each posted operation rides, and a
 * progress ``"shared"`` — the runtime's single engine drives all devices
   (the paper's shared-resource thread mode);
 * progress ``"dedicated"`` — one :class:`~.engine.ProgressEngine` per
-  device (the dedicated mode that scales with threads).
+  device (the dedicated mode that scales with threads);
+* progress ``"workers"`` — ``n_workers`` real threads drive the
+  endpoint's engines concurrently through per-device try-locks (the
+  paper's §4.2.3 multithreaded progress discipline: a thread that fails
+  a device's try-lock moves on to the next device).  Start them with
+  ``ep.start_workers()`` (or use the endpoint as a context manager) and
+  stop with ``ep.stop_workers()``.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ import bisect
 import dataclasses
 from typing import Optional, Sequence
 
+from ..concurrency.workers import ProgressWorkerPool
 from ..matching import MatchingPolicy
 from ..modes import CommMode
 from ..post import (post_am_x, post_get_x, post_put_x, post_recv_x,
@@ -37,7 +44,7 @@ from ..status import FatalError, Status
 from .engine import ProgressEngine
 
 STRIPE_POLICIES = ("round_robin", "by_peer", "by_size")
-PROGRESS_POLICIES = ("shared", "dedicated")
+PROGRESS_POLICIES = ("shared", "dedicated", "workers")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +59,9 @@ class EndpointSpec:
     n_devices: int = 1
     stripe: str = "round_robin"
     progress: str = "shared"
+    # workers mode: thread count driving the endpoint's devices
+    # (0 = auto: one worker per device)
+    n_workers: int = 0
     # by_size boundaries (bytes): size class i = first boundary >= size;
     # None derives geometric classes from the runtime's protocol thresholds.
     size_boundaries: Optional[Sequence[int]] = None
@@ -65,6 +75,10 @@ class EndpointSpec:
                              f"pick from {PROGRESS_POLICIES}")
         if self.n_devices < 1:
             raise FatalError("an endpoint needs at least one device")
+        if self.n_workers < 0:
+            raise FatalError("n_workers must be >= 0 (0 = one per device)")
+        if self.n_workers and self.progress != "workers":
+            raise FatalError("n_workers only applies to progress='workers'")
 
     @classmethod
     def for_mode(cls, mode: CommMode, n_devices: int = 1,
@@ -86,12 +100,18 @@ class Endpoint:
         self.spec = spec
         self.devices = [runtime.alloc_device()
                         for _ in range(spec.n_devices)]
-        if spec.progress == "dedicated":
+        self.workers: Optional[ProgressWorkerPool] = None
+        if spec.progress in ("dedicated", "workers"):
             self.engines = [ProgressEngine(runtime, [d],
                                            name=f"{spec.name}/dev{i}")
                             for i, d in enumerate(self.devices)]
         else:
             self.engines = [runtime.engine]
+        if spec.progress == "workers":
+            self.workers = ProgressWorkerPool(
+                list(zip(self.engines, self.devices)),
+                n_workers=spec.n_workers or spec.n_devices,
+                name=f"{spec.name}/workers")
         self._rr = 0
         if spec.size_boundaries is not None:
             self._boundaries = list(spec.size_boundaries)
@@ -174,10 +194,16 @@ class Endpoint:
 
     # -- progress ------------------------------------------------------------
     def progress(self, rounds: int = 1, max_msgs: int = 0) -> int:
-        """Drive this endpoint's devices with its engine(s)."""
+        """Drive this endpoint's devices with its engine(s).
+
+        Safe to call while the worker pool runs: the inline pass uses the
+        same per-device try-locks, skipping any device a worker holds."""
         n = 0
         for _ in range(rounds):
-            if self.spec.progress == "dedicated":
+            if self.spec.progress == "workers":
+                for eng, dev in zip(self.engines, self.devices):
+                    n += bool(eng.try_progress(dev, max_msgs))
+            elif self.spec.progress == "dedicated":
                 for eng, dev in zip(self.engines, self.devices):
                     n += bool(eng.progress(dev, max_msgs))
             else:
@@ -185,11 +211,33 @@ class Endpoint:
                     n += bool(self.engines[0].progress(dev, max_msgs))
         return n
 
+    # -- worker lifecycle (progress == "workers") ----------------------------
+    def start_workers(self) -> "Endpoint":
+        """Spawn the endpoint's progress worker threads."""
+        if self.workers is None:
+            raise FatalError(f"endpoint {self.name!r} has progress="
+                             f"{self.spec.progress!r}; workers need "
+                             "EndpointSpec(progress='workers')")
+        self.workers.start()
+        return self
+
+    def stop_workers(self, timeout: float = 10.0) -> None:
+        if self.workers is not None and self.workers.running:
+            self.workers.stop(timeout)
+
+    def __enter__(self) -> "Endpoint":
+        if self.workers is not None:
+            self.start_workers()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop_workers()
+
     # -- telemetry -----------------------------------------------------------
     def counters(self) -> dict:
         """Per-device posts/pushes/progress counts (Fig-8-style evidence
         that traffic really striped across the bundle)."""
-        return {
+        out = {
             "name": self.name,
             "stripe": self.spec.stripe,
             "progress": self.spec.progress,
@@ -199,3 +247,6 @@ class Endpoint:
                 for d in self.devices
             ],
         }
+        if self.workers is not None:
+            out["workers"] = self.workers.counters()
+        return out

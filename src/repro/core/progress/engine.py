@@ -19,6 +19,7 @@ from __future__ import annotations
 from typing import List, Optional
 
 from ..completion import CompletionObject
+from ..concurrency.atomics import AtomicCounter
 from ..matching import MatchKind, MatchingPolicy, make_key
 from ..post import CommKind
 from ..protocol import Protocol, select_protocol
@@ -40,9 +41,18 @@ class ProgressEngine:
         self.rt = runtime
         self._devices = devices
         self.name = name
-        # telemetry (paper's do_background_work counters)
-        self.passes = 0
-        self.reactions = 0
+        # telemetry (paper's do_background_work counters) — atomic: a
+        # shared engine is driven from many threads at once
+        self._passes = AtomicCounter()
+        self._reactions = AtomicCounter()
+
+    @property
+    def passes(self) -> int:
+        return self._passes.load()
+
+    @property
+    def reactions(self) -> int:
+        return self._reactions.load()
 
     @property
     def devices(self) -> List:
@@ -60,7 +70,7 @@ class ProgressEngine:
              user_context) -> Status:
         rt = self.rt
         dev = device or rt.default_device
-        dev.posts += 1
+        dev.count_post()
         if rank < 0 or rank >= rt.n_ranks:
             raise FatalError(f"bad target rank {rank}")
 
@@ -135,7 +145,7 @@ class ProgressEngine:
         """Push to the fabric; full queue -> retry or backlog."""
         rt = self.rt
         if rt.fabric.try_push(msg):
-            dev.pushes += 1
+            dev.count_push()
             # source completion for bufcopy/zerocopy is deferred to progress
             if msg.op_id >= 0:
                 dev.pending_tx.append(msg.op_id)
@@ -175,12 +185,36 @@ class ProgressEngine:
     # -- progress (§3.2.6, Figure 1) -----------------------------------------
     def progress(self, device=None, max_msgs: int = 0) -> bool:
         """Drive one progress pass on ``device``; returns True if any work
-        was done (paper: do_background_work)."""
-        rt = self.rt
+        was done (paper: do_background_work).
+
+        The pass runs under the device's progress try-lock (blocking spin
+        here — single-threaded callers never contend), so the reaction
+        chain is single-writer per device even when worker threads drive
+        the same engine; use :meth:`try_progress` for the paper's
+        fail-and-move-on discipline."""
         dev = device or (self._devices[0] if self._devices
-                         else rt.default_device)
-        dev.progresses += 1
-        self.passes += 1
+                         else self.rt.default_device)
+        with dev.progress_lock:
+            return self._progress_locked(dev, max_msgs)
+
+    def try_progress(self, device=None, max_msgs: int = 0):
+        """Non-blocking progress (paper §4.2.3: "multiple threads call
+        progress; a thread that fails the try-lock moves on").  Returns
+        ``None`` when the device is being progressed by another thread,
+        else the pass's did-work bool."""
+        dev = device or (self._devices[0] if self._devices
+                         else self.rt.default_device)
+        if not dev.progress_lock.try_acquire():
+            return None
+        try:
+            return self._progress_locked(dev, max_msgs)
+        finally:
+            dev.progress_lock.release()
+
+    def _progress_locked(self, dev, max_msgs: int = 0) -> bool:
+        rt = self.rt
+        dev.count_progress()
+        self._passes.fetch_add(1)
         did = False
 
         # (3) retry backlogged requests first
@@ -192,9 +226,12 @@ class ProgressEngine:
             if tag0 == "wire":
                 msg = item[1]
                 if not rt.fabric.try_push(msg):
-                    dev.backlog.push(item)      # still full; stop retrying
+                    # requeue at the HEAD: a tail push would let a later
+                    # same-stream message overtake this one once the
+                    # fabric frees up (push_front never fails)
+                    dev.backlog.push_front(item)
                     break
-                dev.pushes += 1
+                dev.count_push()
                 if msg.op_id >= 0:
                     dev.pending_tx.append(msg.op_id)
                 did = True
@@ -207,7 +244,7 @@ class ProgressEngine:
                                 device=dev, matching_policy=policy,
                                 allow_retry=True, user_context=uctx)
                 if st2.is_retry():
-                    dev.backlog.push(item)
+                    dev.backlog.push_front(item)   # keep FIFO redelivery
                     break
                 did = True
             elif tag0 == "signal":
@@ -257,7 +294,7 @@ class ProgressEngine:
 
     def _react(self, msg: WireMsg, dev) -> None:
         rt = self.rt
-        self.reactions += 1
+        self._reactions.fetch_add(1)
         k = msg.kind
         if k == WireKind.EAGER_AM:
             comp = rt.rcomp_registry[msg.rcomp]

@@ -13,11 +13,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..completion import CompletionObject
+from ..concurrency.atomics import AtomicCounter
 from ..matching import MatchingPolicy
 from ..post import CommKind
 from ..status import FatalError
@@ -48,6 +50,7 @@ class WireMsg:
     op_id: int = -1                # source-side pending-op id
     remote_buf: Any = None         # (region_id, offset) for RMA
     device_index: int = 0          # which device stream this rides
+    ready_at: float = 0.0          # wire-latency model: drainable after this
 
 
 @dataclasses.dataclass
@@ -76,14 +79,36 @@ class Fabric:
 
     ``depth`` bounds each queue — a full queue is the paper's "underlying
     network send queue is full" event and surfaces ``retry``.
+
+    ``latency`` (seconds) models the wire: a pushed message only becomes
+    drainable ``latency`` after its push.  The default (0) keeps the
+    historical instantly-visible behaviour; the multithreaded message-rate
+    benchmark uses a nonzero latency so that completion-window waits are
+    real and threads can overlap them — the paper's core asynchrony
+    argument.  Thread-safety note (DESIGN.md §10): streams are
+    single-consumer (the consumer device's progress try-lock serializes
+    ``drain``); concurrent producers ride the GIL-atomic deque append, so
+    the depth bound is approximate by at most the number of racing
+    posters — back-pressure, not an invariant.
     """
 
-    def __init__(self, n_ranks: int, depth: int = 4096):
+    def __init__(self, n_ranks: int, depth: int = 4096,
+                 latency: float = 0.0):
         self.n_ranks = n_ranks
         self.depth = depth
+        self.latency = latency
         self._queues: Dict[Tuple[int, int], collections.deque] = {}
-        self.pushes = 0
-        self.full_events = 0
+        # atomic: producers on any thread bump these concurrently
+        self._pushes = AtomicCounter()
+        self._full_events = AtomicCounter()
+
+    @property
+    def pushes(self) -> int:
+        return self._pushes.load()
+
+    @property
+    def full_events(self) -> int:
+        return self._full_events.load()
 
     def _q(self, dst: int, device_index: int) -> collections.deque:
         return self._queues.setdefault((dst, device_index),
@@ -92,17 +117,31 @@ class Fabric:
     def try_push(self, msg: WireMsg) -> bool:
         q = self._q(msg.dst, msg.device_index)
         if len(q) >= self.depth:
-            self.full_events += 1
+            self._full_events.fetch_add(1)
             return False
+        if self.latency:
+            msg.ready_at = time.perf_counter() + self.latency
         q.append(msg)
-        self.pushes += 1
+        self._pushes.fetch_add(1)
         return True
 
     def drain(self, dst: int, device_index: int, limit: int = 0
               ) -> List[WireMsg]:
         q = self._q(dst, device_index)
         n = len(q) if limit <= 0 else min(limit, len(q))
-        return [q.popleft() for _ in range(n)]
+        if not self.latency:
+            return [q.popleft() for _ in range(n)]
+        # latency model: streams are FIFO, so stop at the first message
+        # still "on the wire"
+        now = time.perf_counter()
+        out: List[WireMsg] = []
+        while len(out) < n and q and q[0].ready_at <= now:
+            out.append(q.popleft())
+        return out
+
+    def in_flight(self) -> int:
+        """Total queued messages (including not-yet-drainable ones)."""
+        return sum(len(q) for q in self._queues.values())
 
     def pending_to(self, dst: int) -> int:
         return sum(len(q) for (d, _), q in self._queues.items() if d == dst)

@@ -97,7 +97,7 @@ class RendezvousManager:
         if not self.rt.fabric.try_push(cts):
             dev.backlog.push(("wire", cts))
         else:
-            dev.pushes += 1
+            dev.count_push()
 
     # -- reactions (called from ProgressEngine._react) -----------------------
     def on_rts(self, engine, msg: WireMsg, dev) -> None:
@@ -126,7 +126,7 @@ class RendezvousManager:
         if not self.rt.fabric.try_push(rdma):
             dev.backlog.push(("wire", rdma))
         else:
-            dev.pushes += 1
+            dev.count_push()
         engine.signal(op.local_comp, done(rank=op.peer, tag=op.tag), dev)
 
     def on_rdma_payload(self, engine, msg: WireMsg, dev) -> None:
@@ -152,7 +152,7 @@ class RendezvousManager:
         if not self.rt.fabric.try_push(resp):
             dev.backlog.push(("wire", resp))
         else:
-            dev.pushes += 1
+            dev.count_push()
 
     def on_get_resp(self, engine, msg: WireMsg, dev) -> None:
         op = self.rt.pending_ops.pop(msg.op_id, None)

@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, List, Optional
 from .channels import Device
 from .completion import (CompletionHandler, CompletionObject, CompletionQueue,
                          MPMCArray, Synchronizer)
+from .concurrency import ProgressWorkerPool, ThreadSafeCompletionQueue
 from .graph import CompletionGraph
 from .matching import HostMatchingEngine
 from .modes import CommConfig
@@ -131,6 +132,8 @@ class Runtime:
         return ep
 
     def free_endpoint(self, ep: Endpoint) -> None:
+        # a live worker pool must be quiesced before its devices go away
+        ep.stop_workers()
         # validate every device BEFORE mutating: a busy device must not
         # leave the endpoint half-freed
         for dev in ep.devices:
@@ -143,10 +146,21 @@ class Runtime:
                      name: str = "engine") -> ProgressEngine:
         return ProgressEngine(self, devices, name=name)
 
+    def alloc_workers(self, n_workers: int = 2) -> ProgressWorkerPool:
+        """A worker pool over this runtime's current devices, driven by
+        the shared engine (paper §4.2.3 multithreaded progress).  The
+        caller owns the lifecycle: ``with rt.alloc_workers(4): ...``."""
+        return ProgressWorkerPool.for_runtime(self, n_workers)
+
     # Completion-object allocation (paper §3.2.5): every alloc_* handle
     # satisfies the unified comp protocol — signal(Status) -> Status,
     # non-blocking test(), progress-driven wait().
-    def alloc_cq(self, capacity: Optional[int] = None) -> CompletionQueue:
+    def alloc_cq(self, capacity: Optional[int] = None, *,
+                 threadsafe: bool = False) -> CompletionObject:
+        """``threadsafe=True`` returns the LCQ-backed queue (paper §4.1.4
+        FAA array) — required when worker threads signal or drain it."""
+        if threadsafe:
+            return ThreadSafeCompletionQueue(capacity)
         return CompletionQueue(capacity)
 
     def alloc_handler(self, fn: Callable[[Status], None]) -> CompletionHandler:
@@ -209,13 +223,20 @@ progress_x = progress.x
 # ---------------------------------------------------------------------------
 
 class LocalCluster:
-    """All ranks in one address space — the paper's thread-mode testbed."""
+    """All ranks in one address space — the paper's thread-mode testbed.
+
+    ``link_latency`` (seconds) makes the simulated wire take time: pushed
+    messages become drainable only after the latency elapses.  Zero (the
+    default) keeps the instant fabric; the multithreaded benchmarks use a
+    real latency so completion windows model flow control.
+    """
 
     def __init__(self, n_ranks: int, config: Optional[CommConfig] = None,
-                 fabric_depth: int = 4096):
+                 fabric_depth: int = 4096, link_latency: float = 0.0):
         self.n_ranks = n_ranks
         self.config = config or CommConfig()
-        self.fabric = Fabric(n_ranks, depth=fabric_depth)
+        self.fabric = Fabric(n_ranks, depth=fabric_depth,
+                             latency=link_latency)
         self.runtimes = [Runtime(r, self) for r in range(n_ranks)]
 
     def __getitem__(self, rank: int) -> Runtime:
@@ -232,6 +253,11 @@ class LocalCluster:
                                   name=f"{name}@{rt.rank}")
                 for rt in self.runtimes]
 
+    def alloc_workers(self, n_workers: int = 2) -> "ProgressWorkerPool":
+        """A worker pool spanning every rank's devices — the paper's
+        thread-mode testbed with real threads driving all progress."""
+        return ProgressWorkerPool.for_cluster(self, n_workers)
+
     def progress_all(self, rounds: int = 1) -> int:
         """Drive every device of every rank; returns #work events."""
         n = 0
@@ -243,9 +269,14 @@ class LocalCluster:
 
     def quiesce(self, max_rounds: int = 10_000) -> None:
         """Progress until no work remains (test/benchmark helper)."""
+        import time as _time
         for _ in range(max_rounds):
             if not self.progress_all():
-                return
+                if self.fabric.in_flight() == 0:
+                    return
+                # messages still on the (latency-modeled) wire: wait for
+                # them to become drainable rather than declaring quiet
+                _time.sleep(self.fabric.latency / 4 or 1e-5)
         raise FatalError("cluster failed to quiesce")
 
 

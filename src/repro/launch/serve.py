@@ -38,6 +38,9 @@ def main():
     ap.add_argument("--transport", action="store_true",
                     help="route requests over prefill/decode endpoints")
     ap.add_argument("--prefill-devices", type=int, default=2)
+    ap.add_argument("--drain-workers", type=int, default=0,
+                    help="drain the result CQ from N worker threads "
+                         "(thread-safe LCQ-backed queue, DESIGN.md §10)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -66,7 +69,15 @@ def main():
                                    n_prefill=args.prefill_devices)
     sched = ServeScheduler(decode_fn, max_batch=args.max_batch,
                            allocator=alloc, transport=transport)
-    cq = sched.alloc_cq()      # unified comp API (routes via transport when present)
+    if args.drain_workers > 0 and transport is not None:
+        raise SystemExit("--drain-workers drains the local result CQ; "
+                         "with --transport results arrive via "
+                         "transport.poll_results() instead — pick one")
+    # unified comp API (routes via transport when present); worker-thread
+    # draining needs the thread-safe LCQ backend
+    cq = sched.alloc_cq(threadsafe=args.drain_workers > 0)
+    drain = (sched.start_result_drain(cq, args.drain_workers)
+             if args.drain_workers > 0 else None)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):
@@ -96,10 +107,13 @@ def main():
         per_dev = [d["posts"] for d in
                    transport.counters()["prefill"][0]["devices"]]
         print(f"[serve] prefill endpoint posts per device: {per_dev}")
-    while True:
-        st = cq.pop()
-        if st.is_retry():
-            break
+    from repro.core.concurrency import drain as drain_cq
+    if drain is not None:
+        for st in drain.stop():
+            n_tok += len(st.get_buffer())
+        print(f"[serve] {args.drain_workers} drain workers collected "
+              f"{sched.completed} results concurrently")
+    for st in drain_cq(cq):
         n_tok += len(st.get_buffer())
     print(f"[serve] {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s, {steps} engine rounds, "

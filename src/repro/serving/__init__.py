@@ -1,4 +1,4 @@
 from .engine import (DecodeCache, init_cache, make_serve_step,
                      make_prefill_step, cache_pspecs)
 from .kv_cache import PagedKVAllocator
-from .scheduler import Request, ServeScheduler, ServeTransport
+from .scheduler import Request, ResultDrain, ServeScheduler, ServeTransport

@@ -20,15 +20,19 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import threading
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.backlog import BacklogQueue
 from repro.core.completion import CompletionObject, CompletionQueue
+from repro.core.concurrency import ThreadSafeCompletionQueue
+from repro.core.concurrency import drain as drain_cq
 from repro.core.matching import HostMatchingEngine, MatchKind
 from repro.core.runtime import LocalCluster
-from repro.core.status import ErrorCode, Status, done, posted, retry
+from repro.core.status import ErrorCode, FatalError, Status, done, posted, retry
 from .kv_cache import PagedKVAllocator
 
 _req_ids = itertools.count()
@@ -156,14 +160,30 @@ class ServeScheduler:
         self.completed = 0
         self.retries = 0
 
-    def alloc_cq(self, capacity: Optional[int] = None) -> CompletionQueue:
+    def alloc_cq(self, capacity: Optional[int] = None, *,
+                 threadsafe: bool = False) -> CompletionObject:
         """Allocate a result queue through the unified comp API: routed to
         the transport's client runtime when one exists (so remote results
-        and local completions share one allocation surface)."""
+        and local completions share one allocation surface).
+        ``threadsafe=True`` returns the LCQ-backed queue — required when
+        results are drained by :meth:`start_result_drain` workers."""
         if self.transport is not None:
             client = self.transport.cluster[self.transport.client_rank]
-            return client.alloc_cq(capacity)
+            return client.alloc_cq(capacity, threadsafe=threadsafe)
+        if threadsafe:
+            return ThreadSafeCompletionQueue(capacity)
         return CompletionQueue(capacity)
+
+    def start_result_drain(self, cq: CompletionObject,
+                           n_workers: int = 2) -> "ResultDrain":
+        """Drain a client CQ from ``n_workers`` threads while the caller
+        keeps stepping the engine — the multithreaded-client pattern the
+        concurrency subsystem exists for.  ``cq`` must be thread-safe
+        (``alloc_cq(threadsafe=True)``)."""
+        if isinstance(cq, CompletionQueue):
+            raise FatalError("start_result_drain needs a thread-safe CQ: "
+                             "alloc_cq(threadsafe=True)")
+        return ResultDrain(cq, n_workers).start()
 
     # -- client API ----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
@@ -286,3 +306,64 @@ class ServeScheduler:
         if match is None:
             return retry()
         return match
+
+
+class ResultDrain:
+    """Worker threads concurrently popping finished results off one CQ.
+
+    Each worker collects into its own list (no shared mutable state on
+    the hot path); ``stop()`` joins the workers, performs one final drain
+    so nothing signaled between the stop flag and the join is stranded,
+    and returns every collected status.  The LCQ backend guarantees no
+    result is lost or double-delivered across the workers — asserted by
+    the threaded stress tests.
+    """
+
+    def __init__(self, cq: CompletionObject, n_workers: int = 2):
+        if n_workers < 1:
+            raise FatalError("result drain needs n_workers >= 1")
+        self.cq = cq
+        self.n_workers = n_workers
+        self._threads: List[threading.Thread] = []
+        self._stopping = False
+        self._collected: List[List[Status]] = [[] for _ in range(n_workers)]
+
+    def start(self) -> "ResultDrain":
+        self._stopping = False
+        self._threads = [
+            threading.Thread(target=self._run, args=(w,), daemon=True,
+                             name=f"result-drain/{w}")
+            for w in range(self.n_workers)
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def _run(self, wid: int) -> None:
+        out = self._collected[wid]
+        delay = 1e-5
+        while not self._stopping:
+            st = self.cq.pop()
+            if st.is_retry():
+                time.sleep(delay)
+                delay = min(delay * 2, 1e-3)
+            else:
+                out.append(st)
+                delay = 1e-5
+
+    @property
+    def drained(self) -> int:
+        return sum(len(c) for c in self._collected)
+
+    def stop(self, timeout: float = 10.0) -> List[Status]:
+        """Join workers (deadlock fails fast) and return all results."""
+        self._stopping = True
+        deadline = time.monotonic() + timeout
+        for t in self._threads:
+            t.join(max(0.0, deadline - time.monotonic()))
+            if t.is_alive():
+                raise FatalError(f"result-drain worker stuck: {t.name}")
+        self._threads = []
+        results = [st for chunk in self._collected for st in chunk]
+        results.extend(drain_cq(self.cq))  # final sweep: nothing stranded
+        return results
