@@ -1,0 +1,83 @@
+"""Perf gate — diff a fresh BENCH-JSON against its committed baseline.
+
+CI runs each benchmark at smoke scale, then calls this gate to compare
+the fresh ``us_per_call`` numbers against the repo-tracked baselines
+(BENCH_message_rate.json / BENCH_mt_message_rate.json, full-scale runs):
+any matched case whose per-call cost regresses by more than
+``--max-regression`` (default 25%) fails the job.  Cases are matched by
+their ``case`` string; cases present on only one side are reported and
+skipped (sweep shapes legitimately differ between smoke and full runs).
+
+    python benchmarks/compare.py BENCH_message_rate.json fresh.json
+    python benchmarks/compare.py base.json fresh.json --max-regression 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Tuple
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for row in doc.get("rows", []):
+        if "case" in row and "us_per_call" in row:
+            rows[row["case"]] = row
+    return rows
+
+
+def compare(baseline_path: str, fresh_path: str,
+            max_regression: float) -> Tuple[List[str], List[str]]:
+    """Returns (report_lines, failure_lines)."""
+    base = load_rows(baseline_path)
+    fresh = load_rows(fresh_path)
+    report, failures = [], []
+    matched = sorted(set(base) & set(fresh))
+    if not matched:
+        failures.append(f"no common cases between {baseline_path} and "
+                        f"{fresh_path} — the gate compared nothing")
+        return report, failures
+    for case in matched:
+        b, f = base[case]["us_per_call"], fresh[case]["us_per_call"]
+        ratio = f / b if b else float("inf")
+        verdict = "ok"
+        if ratio > 1.0 + max_regression:
+            verdict = "REGRESSION"
+            failures.append(
+                f"{case}: {f:.3f} us/call vs baseline {b:.3f} "
+                f"({ratio:.2f}x, limit {1.0 + max_regression:.2f}x)")
+        report.append(f"{case:32s} base={b:9.3f}  fresh={f:9.3f}  "
+                      f"{ratio:5.2f}x  {verdict}")
+    for case in sorted(set(base) ^ set(fresh)):
+        side = "baseline" if case in base else "fresh"
+        report.append(f"{case:32s} ({side} only — skipped)")
+    return report, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline BENCH-JSON")
+    ap.add_argument("fresh", help="freshly generated BENCH-JSON")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional us_per_call increase "
+                         "(0.25 = fail on >25%% slower)")
+    args = ap.parse_args()
+
+    report, failures = compare(args.baseline, args.fresh,
+                               args.max_regression)
+    for line in report:
+        print(line)
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)}):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"perf gate OK (max regression {args.max_regression:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

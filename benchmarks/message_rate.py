@@ -68,9 +68,12 @@ def _run_lanes(n_lanes: int, dedicated: bool, iters: int) -> float:
     return sent / dt
 
 
-def _run_endpoint(width: int, stripe: str, iters: int) -> dict:
-    """One endpoint-width cell: post through a striped Endpoint, report
-    rate + per-device counters."""
+def _run_endpoint(width: int, stripe: str, iters: int,
+                  burst: int = 32) -> dict:
+    """One endpoint-width cell: post through a striped Endpoint with
+    burst doorbells (``post_am_many``), report rate + per-device
+    counters.  ``burst=1`` falls back to scalar posting (the pre-batched
+    data plane, kept measurable for A/B runs)."""
     cfg = CommConfig(inject_max_bytes=64, packets_per_lane=64,
                      n_channels=width)
     cl = LocalCluster(2, cfg, fabric_depth=1 << 16)
@@ -80,14 +83,25 @@ def _run_endpoint(width: int, stripe: str, iters: int) -> dict:
     cq = cl[1].alloc_cq()
     rc = cl[1].register_rcomp(cq)
     payload = np.zeros(PAPER.msg_rate_size, np.uint8)
+    bufs = [payload] * burst
 
     t0 = time.perf_counter()
-    for i in range(iters):
-        ep0.post_am(1, payload, remote_comp=rc)
-        if i % 64 == 63:
-            ep1.progress()
-            while cq.pop().is_done():
-                pass
+    sent = 0
+    while sent < iters:
+        if burst > 1:
+            k = min(burst, iters - sent)
+            sts = ep0.post_am_many(1, bufs[:k], rc)
+            # count only accepted posts: a prefix-rejected suffix (pool /
+            # fabric back-pressure) is retried on the next loop pass
+            sent += sum(1 for s in sts if not s.is_retry())
+        else:
+            ep0.post_am(1, payload, remote_comp=rc)
+            sent += 1
+            if sent % 64:
+                continue
+        ep1.progress()
+        while cq.pop().is_done():
+            pass
     cl.quiesce()
     while cq.pop().is_done():
         pass
@@ -100,6 +114,7 @@ def _run_endpoint(width: int, stripe: str, iters: int) -> dict:
         "derived": f"{iters / dt / 1e3:.1f} kmsg/s",
         "width": width,
         "stripe": stripe,
+        "burst": burst,
         "device_posts": [d["posts"] for d in counters["devices"]],
         "device_pushes": [d["pushes"] for d in counters["devices"]],
     }
@@ -123,11 +138,23 @@ def run(quick: bool = True) -> List[dict]:
 
 
 def run_endpoint_sweep(max_width: int, iters: int,
-                       stripe: str = "round_robin") -> List[dict]:
+                       stripe: str = "round_robin",
+                       burst: int = 32, repeats: int = 3) -> List[dict]:
+    """Each cell reports its median-of-``repeats`` run.  On a shared
+    host the minimum rewards whichever cell got the single luckiest
+    scheduler window (different per cell), so cross-cell comparisons
+    flip on noise; the median is the typical per-message software cost
+    and compares cleanly.  Repeats are the OUTER loop — widths
+    interleave so every cell samples the same noise windows."""
     widths = [w for w in (1, 2, 4, 8, 16) if w <= max_width]
     if widths[-1] != max_width:
         widths.append(max_width)
-    return [_run_endpoint(w, stripe, iters) for w in widths]
+    runs: dict = {w: [] for w in widths}
+    for _ in range(max(1, repeats)):
+        for w in widths:
+            runs[w].append(_run_endpoint(w, stripe, iters, burst))
+    return [sorted(runs[w], key=lambda r: r["us_per_call"])
+            [len(runs[w]) // 2] for w in widths]
 
 
 def main() -> None:
@@ -138,12 +165,19 @@ def main() -> None:
                     choices=("round_robin", "by_peer", "by_size"))
     ap.add_argument("--iters", type=int, default=0,
                     help="messages per cell (0 = paper quick count)")
+    ap.add_argument("--burst", type=int, default=32,
+                    help="doorbell size for post_am_many (1 = scalar "
+                         "posting, the pre-batched data plane)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="runs per cell (interleaved); the median run "
+                         "is reported")
     ap.add_argument("--json", default="BENCH_message_rate.json",
                     help="output JSON path ('' disables)")
     args = ap.parse_args()
     iters = args.iters or PAPER.msg_rate_iters // 4
 
-    rows = run_endpoint_sweep(args.devices, iters, args.stripe)
+    rows = run_endpoint_sweep(args.devices, iters, args.stripe, args.burst,
+                              args.repeats)
     for r in rows:
         print(f"{r['case']:28s} {r['us_per_call']:8.3f} us/msg  "
               f"{r['derived']:>14s}  pushes/device={r['device_pushes']}")
@@ -158,7 +192,8 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "message_rate", "iters": iters,
-                       "stripe": args.stripe, "rows": rows}, f, indent=2)
+                       "stripe": args.stripe, "burst": args.burst,
+                       "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 
 

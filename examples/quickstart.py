@@ -9,7 +9,9 @@ Walks the paper's core concepts end to end on CPU:
   4. ASYNC completion graphs (comm ops as nodes, progress-completed)
   5. striping and progress policies (DESIGN.md §8)
   6. multithreaded progress workers + thread-safe CQs (DESIGN.md §10)
-  7. an in-graph ring collective under shard_map (the TPU adaptation)
+  7. burst posting: post_many doorbells + the OFF .batch() spelling
+     (DESIGN.md §11)
+  8. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -126,7 +128,38 @@ def main():
     print(f"worker threads delivered {wcq.pushes} AMs (lock skips: "
           f"{wep1.counters()['workers']['lock_skips']})")
 
-    # -- 7. the in-graph layer: ring collectives (run under shard_map on
+    # -- 7. burst posting (paper §4.3, DESIGN.md §11): a windowed hot
+    #       loop coalesces K posts into one doorbell per stripe device —
+    #       one packet-pool grab, one stacked payload copy, one fabric
+    #       push, one telemetry bump, instead of one of each per message.
+    #       A mid-burst retry splits the doorbell prefix-accept: re-post
+    #       the failed suffix after driving progress. --------------------
+    bursty = np.stack([np.full(8, i, np.uint8) for i in range(32)])
+    statuses = ep0.post_am_many(1, list(bursty), rcomp,
+                                tags=list(range(32)))
+    pending = [s for s in statuses if s.is_retry()]
+    while eps[0].progress() + eps[1].progress():
+        pass
+    delivered = 0
+    while not rcq.pop().is_retry():
+        delivered += 1
+    print(f"burst posting: {delivered}/32 AMs in "
+          f"{r0.engine.burst_posts} doorbell(s), {len(pending)} to re-post")
+
+    # the OFF spelling batches deferred ops the same way
+    batch = post_send_x(r0, 1, np.full(8, 1, np.uint8), 8, 70).endpoint(
+        ep0).batch()
+    post_send_x(r0, 1, np.full(8, 2, np.uint8), 8, 71).endpoint(
+        ep0).batch(batch)
+    got = [np.zeros(8, np.uint8), np.zeros(8, np.uint8)]
+    sync2 = r1.alloc_sync(expected=2)
+    for tag, buf in zip((70, 71), got):
+        post_recv_x(r1, 0, buf, 8, tag, sync2)()
+    batch.flush()                     # one doorbell for both sends
+    sync2.wait(cluster)
+    print(f"OFF .batch(): delivered {got[0][0]}, {got[1][0]} in order")
+
+    # -- 8. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

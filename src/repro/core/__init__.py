@@ -19,11 +19,11 @@ from .matching import (HostMatchingEngine, MatchKind, MatchTable,
 from .modes import CommConfig, CommMode, parse_mode
 from .off import OffBuilder, off
 from .packet_pool import (HostPacketPool, SlotPool, free_count, init_pool,
-                          pool_get, pool_put)
-from .post import (CommKind, Direction, classify, post_am, post_am_x,
-                   post_comm, post_comm_x, post_get, post_get_x, post_put,
-                   post_put_x, post_recv, post_recv_x, post_send,
-                   post_send_x)
+                          pool_get, pool_get_n, pool_put)
+from .post import (CommDesc, CommKind, Direction, PostBatch, classify,
+                   post_am, post_am_x, post_comm, post_comm_x, post_get,
+                   post_get_x, post_many, post_put, post_put_x, post_recv,
+                   post_recv_x, post_send, post_send_x)
 from .protocol import Protocol, ProtocolStats, select_protocol
 from .progress import (Endpoint, EndpointSpec, Fabric, MemoryRegion,
                        ProgressEngine, RendezvousManager, WireKind, WireMsg)
@@ -51,6 +51,8 @@ __all__ = [
     "CommKind", "Direction", "classify", "post_comm", "post_comm_x",
     "post_send", "post_send_x", "post_recv", "post_recv_x", "post_am",
     "post_am_x", "post_put", "post_put_x", "post_get", "post_get_x",
+    # burst posting (paper §4.3 batched data plane)
+    "CommDesc", "PostBatch", "post_many", "pool_get_n",
     # runtime + progress subsystem
     "Fabric", "LocalCluster", "MemoryRegion", "Runtime", "WireKind",
     "WireMsg", "g_runtime", "g_runtime_fina", "g_runtime_init", "progress",

@@ -102,11 +102,11 @@ class Device:
     def progresses(self) -> int:
         return self._progresses.load()
 
-    def count_post(self) -> None:
-        self._posts.fetch_add(1)
+    def count_post(self, n: int = 1) -> None:
+        self._posts.fetch_add(n)
 
-    def count_push(self) -> None:
-        self._pushes.fetch_add(1)
+    def count_push(self, n: int = 1) -> None:
+        self._pushes.fetch_add(n)
 
     def count_progress(self) -> None:
         self._progresses.fetch_add(1)

@@ -76,6 +76,23 @@ class CompletionObject:
     def signal(self, status: Status) -> Status:  # pragma: no cover
         raise NotImplementedError
 
+    def signal_many(self, statuses: List[Status]) -> List[Status]:
+        """Deliver a burst of completions in order; returns one result
+        Status per delivery, aligned with the input.  The default just
+        loops ``signal``; bulk-capable objects (queues) override it to
+        pay their admission cost once per burst.  Acceptance is always a
+        *prefix*: once one delivery is rejected (``retry``), the rest of
+        the burst must be rejected too, so the progress engine's parked
+        redeliveries stay in order."""
+        out: List[Status] = []
+        for i, st in enumerate(statuses):
+            r = self.signal(st)
+            out.append(r)
+            if isinstance(r, Status) and r.is_retry():
+                out.extend(retry(r.code) for _ in statuses[i + 1:])
+                break
+        return out
+
     def test(self) -> tuple[bool, Any]:  # pragma: no cover - interface
         raise NotImplementedError
 
@@ -144,6 +161,17 @@ class CompletionQueue(CompletionObject):
         self._q.append(status)
         self.pushes += 1
         return done()
+
+    def signal_many(self, statuses: List[Status]) -> List[Status]:
+        """Bulk enqueue: one capacity check + one deque extend for the
+        accepted prefix (queue-full rejects the rest, in order)."""
+        room = (len(statuses) if self.capacity is None
+                else max(0, self.capacity - len(self._q)))
+        n = min(room, len(statuses))
+        self._q.extend(statuses[:n])
+        self.pushes += n
+        return ([done()] * n
+                + [retry(ErrorCode.RETRY_QUEUE_FULL)] * (len(statuses) - n))
 
     def pop(self) -> Status:
         """``cq_pop``: done-status with payload, or retry when empty."""

@@ -25,6 +25,7 @@ drain it concurrently.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, List, Optional
 
 from ..completion import CompletionObject
@@ -32,6 +33,12 @@ from ..status import ErrorCode, Status, done, retry
 from .atomics import AtomicCounter
 
 _EMPTY = object()          # slot sentinel distinct from any user payload
+
+# pop-side liveness bound: when the queue *looks* non-empty (a producer
+# claimed a ticket) but nothing is published yet, spin at most this many
+# failed pops before yielding the core to the mid-ticket producer
+_POP_SPIN_LIMIT = 16
+_POP_YIELD_SLEEP = 1e-5
 
 
 class _Slot:
@@ -128,11 +135,16 @@ class ThreadSafeCompletionQueue(CompletionObject):
     def __init__(self, capacity: Optional[int] = None):
         self._q = LCQ(capacity or 4096)
         self.capacity = capacity
+        self._pop_yields = AtomicCounter()
 
     def signal(self, status: Status) -> Status:
         if self._q.push(status):
             return done()
         return retry(ErrorCode.RETRY_QUEUE_FULL)
+
+    # signal_many: the inherited prefix-accept loop is already optimal
+    # here — every LCQ push is an independent ticket claim, so there is
+    # no bulk admission to amortize.
 
     def pop(self) -> Status:
         item, ok = self._q.pop()
@@ -147,13 +159,23 @@ class ThreadSafeCompletionQueue(CompletionObject):
         return len(self._q) > 0, None
 
     def wait(self, progress=None, max_rounds: int = 100_000) -> Status:
+        spins = 0
         while True:
             super().wait(progress, max_rounds)
             st = self.pop()
             if not st.is_retry():
                 return st
-            # a concurrent popper won the race for the item wait() saw;
-            # the caller contract is "one status", so keep driving
+            # pop failed even though test() saw the queue non-empty.
+            # Either a concurrent popper won the race for that item, or —
+            # under burst signaling — a producer holds a claimed-but-
+            # unpublished ticket (len() counts the ticket, pop() sees an
+            # unpublished slot).  In the latter case looping here would
+            # busy-spin exactly as long as the producer stays descheduled,
+            # so: bounded spin, then yield the core to let it publish.
+            spins += 1
+            if spins > _POP_SPIN_LIMIT:
+                self._pop_yields.fetch_add(1)
+                time.sleep(_POP_YIELD_SLEEP)
 
     @property
     def pushes(self) -> int:
@@ -162,6 +184,12 @@ class ThreadSafeCompletionQueue(CompletionObject):
     @property
     def pops(self) -> int:
         return self._q.pops
+
+    @property
+    def pop_yields(self) -> int:
+        """Times a ``wait`` pop spun out against a mid-ticket producer
+        and yielded (liveness telemetry for the spin-bound regression)."""
+        return self._pop_yields.load()
 
     def races(self) -> dict:
         return {"push_races": self._q.push_races.load(),

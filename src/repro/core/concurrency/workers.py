@@ -43,15 +43,23 @@ class ProgressWorkerPool:
     """
 
     def __init__(self, targets: Sequence[Tuple[object, object]],
-                 n_workers: int = 2, name: str = "workers"):
+                 n_workers: int = 2, name: str = "workers",
+                 burst: int = 64):
         if n_workers < 1:
             raise FatalError("worker pool needs n_workers >= 1")
         if not targets:
             raise FatalError("worker pool needs at least one "
                              "(engine, device) target")
+        if burst < 0:
+            raise FatalError("burst must be >= 0 (0 = unbounded drain)")
         self.targets = list(targets)
         self.n_workers = n_workers
         self.name = name
+        # wire messages drained per try-lock acquisition: bounds how long
+        # one worker holds a device's progress lock (a busy stream is
+        # swept in bursts, not monopolized), while still amortizing the
+        # lock + backlog sweep across the whole burst (paper §4.3)
+        self.burst = burst
         self._threads: List[threading.Thread] = []
         self._stop = AtomicFlag()
         # telemetry
@@ -128,7 +136,7 @@ class ProgressWorkerPool:
             # device's try-lock back to back
             for i in range(n):
                 eng, dev = targets[(i + wid) % n]
-                r = eng.try_progress(dev)
+                r = eng.try_progress(dev, self.burst)
                 if r is None:
                     self.lock_skips.fetch_add(1)   # contended: move on
                 elif r:
@@ -147,6 +155,7 @@ class ProgressWorkerPool:
         return {
             "name": self.name,
             "n_workers": self.n_workers,
+            "burst": self.burst,
             "worker_passes": [c.load() for c in self.worker_passes],
             "lock_skips": self.lock_skips.load(),
             "idle_naps": self.idle_naps.load(),

@@ -97,6 +97,7 @@ class HostMatchingEngine:
                       for i in range(n_locks)]
         self._inserts = AtomicCounter()
         self._matches = AtomicCounter()
+        self._fast_matches = AtomicCounter()
 
     @property
     def inserts(self) -> int:
@@ -106,8 +107,37 @@ class HostMatchingEngine:
     def matches(self) -> int:
         return self._matches.load()
 
+    @property
+    def fast_matches(self) -> int:
+        """Matches taken through the lock-free :meth:`match_now` probe."""
+        return self._fast_matches.load()
+
     def _lock_of(self, key: Hashable) -> TryLock:
         return self.locks[hash(key) % len(self.locks)]
+
+    def match_now(self, key: Hashable, kind: MatchKind):
+        """Probe-before-lock fast path (the eager delivery hot case): pop
+        a complementary entry *if one is already posted* — without ever
+        taking the bucket lock — and NEVER store.
+
+        The probe is a plain dict read; the pop is a single
+        ``deque.popleft`` (GIL-atomic), so two concurrent fast-path
+        deliveries can never double-match one recv, and a concurrent
+        locked ``insert`` can never be dropped: ``insert`` re-checks the
+        complement under the lock with the same atomic pop.  Returns the
+        matched value, or ``None`` when no complement is posted — in
+        which case the caller falls back to the locked :meth:`insert`
+        (which stores into the unexpected queue)."""
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            return None
+        try:
+            value = bucket[kind.complement].popleft()
+        except IndexError:
+            return None
+        self._matches.fetch_add(1)
+        self._fast_matches.fetch_add(1)
+        return value
 
     def insert(self, key: Hashable, kind: MatchKind, value: Any):
         self._inserts.fetch_add(1)
@@ -115,12 +145,16 @@ class HostMatchingEngine:
             bucket = self._buckets.setdefault(
                 key, {MatchKind.SEND: collections.deque(),
                       MatchKind.RECV: collections.deque()})
-            other = bucket[kind.complement]
-            if other:
-                self._matches.fetch_add(1)
-                return other.popleft()
-            bucket[kind].append(value)
-            return None
+            # pop-with-except rather than check-then-pop: a lock-free
+            # match_now() racing this insert may drain the last
+            # complement between a truthiness check and the popleft
+            try:
+                matched = bucket[kind.complement].popleft()
+            except IndexError:
+                bucket[kind].append(value)
+                return None
+            self._matches.fetch_add(1)
+            return matched
 
     def pending(self) -> int:
         # snapshot the bucket list in one C-level call (GIL-atomic) so a

@@ -94,6 +94,23 @@ class OffBuilder:
     def __call__(self):
         return self._fn(*self._args, **self._opts)
 
+    def batch(self, collector=None):
+        """Defer this op into a :class:`~repro.core.post.PostBatch`
+        doorbell instead of firing it now::
+
+            b = post_send_x(rt, peer, buf).endpoint(ep).batch()
+            post_send_x(rt, peer, buf2).endpoint(ep).batch(b)
+            statuses = b.flush()          # one coalesced doorbell
+
+        With no argument a fresh batch is created; passing an existing
+        batch appends to it.  Returns the batch (for further adds /
+        ``flush``).  Only ``post_*`` operations can ride a doorbell —
+        anything else fails at ``flush`` time."""
+        if collector is None:
+            from .post import PostBatch   # late: post.py imports this module
+            collector = PostBatch()
+        return collector.add(self)
+
 
 def off(fn: Callable) -> Callable:
     """Decorator: attach an OFF variant as ``fn.x`` (the ``_x`` suffix).

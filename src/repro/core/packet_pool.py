@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -100,41 +100,83 @@ class HostPacketPool:
 
     def get(self, lane: int) -> tuple[int, Status]:
         """Pop a packet id; one try-lock-guarded steal attempt on local
-        exhaustion, failing to ``retry(RETRY_NOPACKET)`` (never blocking)."""
+        exhaustion, failing to ``retry(RETRY_NOPACKET)`` (never blocking).
+        The scalar get IS a burst of one — same locking, same steal."""
+        ids, st = self.get_n(lane, 1)
+        return (ids[0] if ids else -1), st
+
+    def _steal_half_locked(self, lane: int) -> bool:
+        """One nonblocking steal attempt into ``lane`` (whose lock the
+        caller holds): try-lock a random victim — never self, that would
+        waste the single attempt — and move half its deque, head end to
+        head end.  False when the victim was contended or empty."""
+        victim = (lane + 1
+                  + int(self._rngs[lane].integers(self.n_lanes - 1))) \
+            % self.n_lanes
+        vlock = self.locks[victim]
+        if not vlock.try_acquire():
+            # the paper's nonblocking get: a contended victim is a
+            # failed attempt, not a wait
+            self._steal_lock_failures.fetch_add(1)
+            return False
+        try:
+            vdq = self._deques[victim]
+            n_steal = len(vdq) // 2
+            if n_steal == 0:
+                return False
+            self._steals.fetch_add(1)
+            dq = self._deques[lane]
+            for _ in range(n_steal):
+                dq.appendleft(vdq.popleft())     # head end on both sides
+        finally:
+            vlock.release()
+        return True
+
+    def get_n(self, lane: int, n: int) -> tuple[list[int], Status]:
+        """Burst ``get`` (paper §4.3: amortize per-message costs): pop up
+        to ``n`` packet ids under ONE lane-lock acquisition — one lock
+        round-trip grabs a whole doorbell's worth of packets instead of
+        ``n`` separate get() calls.
+
+        Returns ``(ids, status)``; ``status`` is ``done`` when all ``n``
+        were obtained, else ``retry(RETRY_NOPACKET)`` with however many
+        packets *were* available (possibly zero).  A short grab is how a
+        mid-burst pool exhaustion splits a doorbell: the caller posts the
+        prefix it has packets for and retries the rest.  At most one
+        try-lock-guarded steal attempt is made."""
+        if n <= 0:
+            return [], done()
         self._gets.fetch_add(1)
         dq = self._deques[lane]
+        out: list[int] = []
         with self.locks[lane]:
-            if dq:
-                return dq.pop(), done()      # tail end: cache locality
-            # steal half from a random victim (head end); never pick self —
-            # that would waste the single nonblocking attempt
-            if self.n_lanes == 1:
-                return -1, retry(ErrorCode.RETRY_NOPACKET)
-            victim = (lane + 1
-                      + int(self._rngs[lane].integers(self.n_lanes - 1))) \
-                % self.n_lanes
-            vlock = self.locks[victim]
-            if not vlock.try_acquire():
-                # the paper's nonblocking get: a contended victim is a
-                # failed attempt, not a wait
-                self._steal_lock_failures.fetch_add(1)
-                return -1, retry(ErrorCode.RETRY_NOPACKET)
-            try:
-                vdq = self._deques[victim]
-                n_steal = len(vdq) // 2
-                if n_steal == 0:
-                    return -1, retry(ErrorCode.RETRY_NOPACKET)
-                self._steals.fetch_add(1)
-                for _ in range(n_steal):
-                    dq.appendleft(vdq.popleft())   # head end on both sides
-            finally:
-                vlock.release()
-            return dq.pop(), done()
+            while dq and len(out) < n:
+                out.append(dq.pop())             # tail end: cache locality
+            if len(out) == n:
+                return out, done()
+            if self.n_lanes == 1 or not self._steal_half_locked(lane):
+                return out, retry(ErrorCode.RETRY_NOPACKET)
+            while dq and len(out) < n:
+                out.append(dq.pop())
+            if len(out) == n:
+                return out, done()
+            return out, retry(ErrorCode.RETRY_NOPACKET)
 
     def put(self, lane: int, packet: int) -> Status:
         self._puts.fetch_add(1)
         with self.locks[lane]:
             self._deques[lane].append(packet)    # tail end
+        return done()
+
+    def put_n(self, lane: int, packets: Sequence[int]) -> Status:
+        """Burst ``put``: return a batch of packets under one lane-lock
+        acquisition (the progress engine's batched source-completion
+        sweep returns a whole drain's packets at once)."""
+        if not packets:
+            return done()
+        self._puts.fetch_add(1)
+        with self.locks[lane]:
+            self._deques[lane].extend(packets)   # tail end, post order
         return done()
 
     def free_packets(self) -> int:
@@ -243,6 +285,62 @@ def pool_get(pool: SlotPool, lane, steal_seed) -> tuple[SlotPool, jax.Array,
         return jax.lax.cond(ok, pop_after, fail, p2)
 
     return jax.lax.cond(cnt > 0, local_pop, steal, pool)
+
+
+def pool_get_n(pool: SlotPool, lane, n: int, steal_seed
+               ) -> tuple[SlotPool, jax.Array, jax.Array, jax.Array]:
+    """Functional burst ``get``: returns (pool', ids, got, status).
+
+    ``n`` is static (it shapes the output): ``ids`` is ``(n,)`` int32 in
+    pop order (stack top first), padded with ``-1``; ``got`` is the number
+    of valid ids; ``status`` is 0 when the full burst was satisfied, else
+    ``IN_GRAPH_RETRY`` (a short grab — the doorbell-splitting case).
+    Mirrors :meth:`HostPacketPool.get_n`: at most one steal attempt, and
+    only when the local lane cannot satisfy the burst alone.
+    """
+    n_lanes, cap = pool.slots.shape
+    lane = jnp.asarray(lane, jnp.int32)
+
+    def steal(p: SlotPool) -> SlotPool:
+        # identical victim selection / head-half transfer as pool_get,
+        # except the transfer is clamped to our lane's remaining room:
+        # unlike the scalar get (which only steals into an empty lane),
+        # the burst get steals while still holding packets, and an
+        # unclamped roll would wrap live slots past lane_cap —
+        # duplicating some ids and losing others
+        offset = jnp.remainder(jnp.asarray(steal_seed, jnp.int32),
+                               jnp.maximum(n_lanes - 1, 1))
+        victim = (lane + 1 + offset) % n_lanes
+        vcnt = p.count[victim]
+        n_steal = jnp.minimum(vcnt // 2, cap - p.count[lane])
+        ok = (n_steal > 0) & (victim != lane)
+        idx = jnp.arange(cap, dtype=jnp.int32)
+        stolen = jnp.where(idx < n_steal, p.slots[victim], -1)
+        remaining = jnp.where((idx >= n_steal) & (idx < vcnt),
+                              p.slots[victim], -1)
+        new_victim = jnp.where(ok, jnp.roll(remaining, -n_steal),
+                               p.slots[victim])
+        my = p.slots[lane]
+        new_mine = jnp.where(ok, jnp.where(idx < n_steal, stolen,
+                                           jnp.roll(my, n_steal)), my)
+        slots = p.slots.at[victim].set(new_victim).at[lane].set(new_mine)
+        count = (p.count.at[victim].add(jnp.where(ok, -n_steal, 0))
+                 .at[lane].add(jnp.where(ok, n_steal, 0)))
+        return SlotPool(slots, count)
+
+    pool = jax.lax.cond(pool.count[lane] >= n, lambda p: p, steal, pool)
+    cnt = pool.count[lane]
+    got = jnp.minimum(cnt, jnp.int32(n))
+    idx = jnp.arange(n, dtype=jnp.int32)
+    src = cnt - 1 - idx                        # stack top downward
+    ids = jnp.where(idx < got,
+                    pool.slots[lane, jnp.maximum(src, 0)], jnp.int32(-1))
+    row = jnp.where(jnp.arange(cap, dtype=jnp.int32) >= cnt - got,
+                    -1, pool.slots[lane])
+    pool = SlotPool(pool.slots.at[lane].set(row),
+                    pool.count.at[lane].add(-got))
+    status = jnp.where(got == n, 0, 1).astype(jnp.int32)
+    return pool, ids, got, status
 
 
 def pool_put(pool: SlotPool, lane, packet_id) -> tuple[SlotPool, jax.Array]:

@@ -36,11 +36,12 @@ nodes ride endpoints.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
-from typing import Any, Optional, Sequence
+from typing import Any, List, Optional, Sequence
 
 from .matching import MatchingPolicy
-from .off import off
+from .off import OffBuilder, off
 from .status import FatalError, Status
 
 
@@ -200,3 +201,171 @@ post_recv_x = post_recv.x
 post_am_x = post_am.x
 post_put_x = post_put.x
 post_get_x = post_get.x
+
+
+# ---------------------------------------------------------------------------
+# Burst posting (paper §4.3) — coalesce K posts into per-device doorbells.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CommDesc:
+    """One operation of a burst — ``post_comm``'s argument set as plain
+    data, cheap enough to build by the thousand.  ``size=None`` is
+    resolved to ``payload_nbytes(buf)`` by :func:`post_many`."""
+
+    kind: CommKind
+    rank: int
+    buf: Any
+    tag: int = 0
+    size: Optional[int] = None
+    local_comp: Any = None
+    remote_buf: Any = None
+    remote_comp: Any = None
+    matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG
+    allow_retry: bool = True
+    user_context: Any = None
+
+
+_BUILDER_KINDS = {"post_send": CommKind.SEND, "post_recv": CommKind.RECV,
+                  "post_am": CommKind.AM, "post_put": CommKind.PUT,
+                  "post_get": CommKind.GET}
+
+
+def _desc_of_builder(b: OffBuilder):
+    """Lower an unfired ``post_*_x`` builder to (runtime, endpoint, device,
+    CommDesc) so a batch can group it with its peers."""
+    name = b._fn.__name__
+    remote_buf = b.get("remote_buf")
+    remote_comp = b.get("remote_comp")
+    if name == "post_comm":
+        kind = classify(b.get("direction"), remote_buf, remote_comp)
+    elif name in _BUILDER_KINDS:
+        kind = _BUILDER_KINDS[name]
+        if kind == CommKind.AM and remote_comp is None:
+            raise FatalError("post_am requires a remote completion handle")
+        if kind in (CommKind.PUT, CommKind.GET) and remote_buf is None:
+            raise FatalError(f"{name} requires a remote buffer")
+        if kind == CommKind.PUT and remote_comp is not None:
+            kind = CommKind.PUT_SIGNAL
+    else:
+        raise FatalError(f"cannot batch {name!r}: only post_* operations "
+                         "ride doorbells")
+    runtime = b.get("runtime")
+    if runtime is None:
+        raise FatalError(f"{name}_x builder is missing its runtime")
+    desc = CommDesc(kind=kind, rank=b.get("rank"), buf=b.get("buf"),
+                    tag=b.get("tag", 0), size=b.get("size"),
+                    local_comp=b.get("local_comp"), remote_buf=remote_buf,
+                    remote_comp=remote_comp,
+                    matching_policy=b.get("matching_policy",
+                                          MatchingPolicy.RANK_TAG),
+                    allow_retry=b.get("allow_retry", True),
+                    user_context=b.get("user_context"))
+    return runtime, b.get("endpoint"), b.get("device"), desc
+
+
+def post_many(runtime, ops: Sequence, *, endpoint=None, device=None
+              ) -> List[Status]:
+    """Burst posting: post a sequence of operations (:class:`CommDesc`
+    descriptors or unfired ``post_*_x`` builders) as coalesced per-device
+    doorbells — one packet-pool ``get_n``, one stacked payload copy, one
+    ``fabric.push_burst``, one telemetry bump per doorbell, instead of one
+    of each per message (paper §4.3's batching insight at the device
+    boundary).
+
+    Ops are grouped by the device they resolve to (``endpoint=`` stripes
+    each op exactly like scalar posting; a builder's own ``.endpoint()`` /
+    ``.device()`` wins over the defaults).  Within a device group order is
+    preserved and failure is prefix-accept: once one op retries, every
+    later op of that group retries too, so per-stream FIFO survives a
+    doorbell split.  Returns one Status per op, in input order."""
+    n = len(ops)
+    resolved = []                        # (device, desc) per op
+    _MISS = object()
+    burst_devs: dict[int, Any] = {}      # per-endpoint whole-burst device
+    for op in ops:
+        if isinstance(op, OffBuilder):
+            rt_op, ep, dv, desc = _desc_of_builder(op)
+            if rt_op is not runtime:
+                raise FatalError("post_many: every op must ride the "
+                                 "calling runtime")
+            if ep is None and dv is None:   # no routing bound on the builder
+                ep, dv = endpoint, device
+        else:
+            desc = op
+            ep, dv = endpoint, device
+        if desc.size is None:
+            desc.size = payload_nbytes(desc.buf)
+        if ep is not None:
+            if dv is not None:
+                raise FatalError("post_many: pass endpoint= or device=, "
+                                 "not both")
+            cached = burst_devs.get(id(ep), _MISS)
+            if cached is _MISS:
+                if ep.runtime is not runtime:   # validate once per endpoint
+                    raise FatalError(
+                        f"post_many: endpoint {ep.name!r} belongs to rank "
+                        f"{ep.runtime.rank}, not rank {runtime.rank}")
+                # round-robin endpoints stripe per doorbell, not per op
+                # (Endpoint.select_burst_device): the batch's first op
+                # fixes one device for the whole burst; by_peer/by_size
+                # cache None and keep per-op selection
+                cached = ep.select_burst_device(rank=desc.rank,
+                                                size=desc.size)
+                burst_devs[id(ep)] = cached
+            dev = cached if cached is not None else \
+                ep.select_device(rank=desc.rank, size=desc.size)
+        else:
+            dev = dv or runtime.default_device
+        resolved.append((dev, desc))
+
+    # group by device, preserving in-group (stream) order
+    groups: dict[int, tuple[Any, List[int]]] = {}
+    for i, (dev, _) in enumerate(resolved):
+        entry = groups.get(id(dev))
+        if entry is None:
+            groups[id(dev)] = (dev, [i])
+        else:
+            entry[1].append(i)
+    statuses: List[Optional[Status]] = [None] * n
+    for dev, idxs in groups.values():
+        sts = runtime.engine.post_burst([resolved[i][1] for i in idxs], dev)
+        for i, st in zip(idxs, sts):
+            statuses[i] = st
+    return statuses
+
+
+class PostBatch:
+    """A doorbell under construction: collect deferred ops, then ``flush``.
+
+    The OFF spelling builds one incrementally —
+    ``batch = post_send_x(rt, peer, buf).endpoint(ep).batch()`` starts it,
+    further ``.batch(batch)`` calls append, ``batch.flush()`` rings the
+    doorbell(s) and returns the per-op statuses (input order).  ``add``
+    also takes :class:`CommDesc` descriptors directly.  The batch is
+    reusable after ``flush``."""
+
+    def __init__(self, runtime=None, *, endpoint=None, device=None):
+        self.runtime = runtime
+        self.endpoint = endpoint
+        self.device = device
+        self._ops: List[Any] = []
+
+    def add(self, op) -> "PostBatch":
+        if self.runtime is None and isinstance(op, OffBuilder):
+            self.runtime = op.get("runtime")
+        self._ops.append(op)
+        return self
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    def flush(self) -> List[Status]:
+        if self.runtime is None:
+            raise FatalError("PostBatch.flush: no runtime (add an op or "
+                             "construct with PostBatch(runtime))")
+        ops, self._ops = self._ops, []
+        if not ops:
+            return []
+        return post_many(self.runtime, ops, endpoint=self.endpoint,
+                         device=self.device)

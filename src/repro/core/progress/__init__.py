@@ -15,12 +15,13 @@ from .endpoint import (PROGRESS_POLICIES, STRIPE_POLICIES, Endpoint,
                        EndpointSpec)
 from .engine import ProgressEngine
 from .fabric import (Fabric, MemoryRegion, PendingOp, WireKind, WireMsg,
-                     as_bytes_view, next_op_id, payload_to_bytes)
+                     as_bytes_view, next_op_id, payload_to_bytes,
+                     payloads_to_bytes)
 from .rendezvous import RendezvousManager
 
 __all__ = [
     "Endpoint", "EndpointSpec", "Fabric", "MemoryRegion", "PendingOp",
     "ProgressEngine", "RendezvousManager", "WireKind", "WireMsg",
     "PROGRESS_POLICIES", "STRIPE_POLICIES", "as_bytes_view", "next_op_id",
-    "payload_to_bytes",
+    "payload_to_bytes", "payloads_to_bytes",
 ]

@@ -37,9 +37,10 @@ from typing import Optional, Sequence
 from ..concurrency.workers import ProgressWorkerPool
 from ..matching import MatchingPolicy
 from ..modes import CommMode
-from ..post import (post_am_x, post_get_x, post_put_x, post_recv_x,
-                    post_send_x)
+from ..post import (CommDesc, CommKind, post_am_x, post_get_x, post_put_x,
+                    post_recv_x, post_send_x)
 from ..post import post_comm as _post_comm
+from ..post import post_many as _post_many
 from ..status import FatalError, Status
 from .engine import ProgressEngine
 
@@ -147,6 +148,20 @@ class Endpoint:
         self._rr += 1
         return dev
 
+    def select_burst_device(self, *, rank: int = 0, size: int = 0):
+        """Stripe decision for a whole doorbell, or ``None`` for per-op
+        selection.  Round-robin advances once per *burst*, not per op: a
+        doorbell rides ONE device stream — per-peer FIFO holds within
+        the burst and the per-doorbell costs (pool ``get_n``, payload
+        staging, ``push_burst``, the receiver's progress pass) amortize
+        over the full burst instead of splintering across the bundle;
+        successive bursts still rotate over every device.  ``by_peer`` /
+        ``by_size`` keep per-op selection (their placement is a function
+        of the op, not of arrival order)."""
+        if self.spec.stripe == "round_robin":
+            return self.select_device(rank=rank, size=size)
+        return None
+
     # -- posting sugar: every op routes through the single endpoint= path
     #    of repro.core.post (the stripe policy picks the device inside
     #    _route_endpoint, which also validates endpoint ownership) --------
@@ -192,7 +207,61 @@ class Endpoint:
                           local_comp).tag(tag).endpoint(self) \
             .allow_retry(allow_retry)()
 
+    # -- burst posting (paper §4.3): K posts, one doorbell per stripe ------
+    def post_many(self, ops) -> list[Status]:
+        """Post a burst (:class:`~repro.core.post.CommDesc` descriptors or
+        unfired ``post_*_x`` builders) through the endpoint's stripe: ops
+        are grouped by the device each resolves to, and each group rides
+        ONE doorbell — one packet-pool ``get_n``, one stacked payload
+        staging copy, one ``fabric.push_burst``, one telemetry bump.
+        Per-group order is preserved and failure is prefix-accept, so a
+        mid-burst ``retry`` splits — never reorders — the doorbell."""
+        return _post_many(self.runtime, ops, endpoint=self)
+
+    def post_send_many(self, rank: int, bufs, *, tags=None, tag: int = 0,
+                       local_comp=None, allow_retry: bool = True
+                       ) -> list[Status]:
+        """Burst of sends to one peer; ``tags`` (else constant ``tag``)
+        aligns with ``bufs``."""
+        if tags is None:
+            tags = [tag] * len(bufs)
+        elif len(tags) != len(bufs):
+            raise FatalError(f"post_send_many: {len(bufs)} bufs but "
+                             f"{len(tags)} tags")
+        return _post_many(self.runtime, [
+            CommDesc(CommKind.SEND, rank, b, tag=t, local_comp=local_comp,
+                     allow_retry=allow_retry)
+            for b, t in zip(bufs, tags)], endpoint=self)
+
+    def post_am_many(self, rank: int, bufs, remote_comp, *, tags=None,
+                     tag: int = 0, local_comp=None,
+                     allow_retry: bool = True) -> list[Status]:
+        """Burst of active messages to one peer (the message-rate hot
+        loop): K payloads, one remote completion handle."""
+        if remote_comp is None:
+            raise FatalError("post_am_many requires a remote completion "
+                             "handle")
+        if tags is None:
+            tags = [tag] * len(bufs)
+        elif len(tags) != len(bufs):
+            raise FatalError(f"post_am_many: {len(bufs)} bufs but "
+                             f"{len(tags)} tags")
+        return _post_many(self.runtime, [
+            CommDesc(CommKind.AM, rank, b, tag=t, local_comp=local_comp,
+                     remote_comp=remote_comp, allow_retry=allow_retry)
+            for b, t in zip(bufs, tags)], endpoint=self)
+
     # -- progress ------------------------------------------------------------
+    def _idle(self, dev) -> bool:
+        """Lock-free probe: nothing for a pass on ``dev`` to do — no
+        incoming traffic, no backlog, no pending source completions.  A
+        burst that landed on one stripe leaves the other devices idle;
+        skipping their locked passes keeps a wide endpoint's progress
+        cost proportional to traffic, not to width."""
+        return (not dev.pending_tx and dev.backlog.empty_flag
+                and not self.runtime.fabric.stream_depth(
+                    self.runtime.rank, dev.index))
+
     def progress(self, rounds: int = 1, max_msgs: int = 0) -> int:
         """Drive this endpoint's devices with its engine(s).
 
@@ -202,12 +271,18 @@ class Endpoint:
         for _ in range(rounds):
             if self.spec.progress == "workers":
                 for eng, dev in zip(self.engines, self.devices):
+                    if self._idle(dev):
+                        continue
                     n += bool(eng.try_progress(dev, max_msgs))
             elif self.spec.progress == "dedicated":
                 for eng, dev in zip(self.engines, self.devices):
+                    if self._idle(dev):
+                        continue
                     n += bool(eng.progress(dev, max_msgs))
             else:
                 for dev in self.devices:
+                    if self._idle(dev):
+                        continue
                     n += bool(self.engines[0].progress(dev, max_msgs))
         return n
 

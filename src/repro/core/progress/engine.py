@@ -16,7 +16,7 @@ picks between them per workload.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..completion import CompletionObject
 from ..concurrency.atomics import AtomicCounter
@@ -25,7 +25,33 @@ from ..post import CommKind
 from ..protocol import Protocol, select_protocol
 from ..status import ErrorCode, FatalError, Status, done, posted, retry
 from .fabric import (PendingOp, WireKind, WireMsg, as_bytes_view,
-                     next_op_id, payload_to_bytes)
+                     next_op_id, payload_to_bytes, payloads_to_bytes)
+
+
+class _SignalBatch:
+    """Per-pass accumulator: completions grouped by target comp object so
+    one ``signal_many`` amortizes the admission cost (paper §4.3's
+    batched-CQ-poll analogue).  Per-comp order equals accumulation order,
+    so FIFO delivery per completion object is preserved."""
+
+    __slots__ = ("_groups",)
+
+    def __init__(self):
+        self._groups: Dict[int, Tuple[CompletionObject, List[Status]]] = {}
+
+    def add(self, comp: Optional[CompletionObject], st: Status) -> None:
+        if comp is None:
+            return
+        group = self._groups.get(id(comp))
+        if group is None:
+            self._groups[id(comp)] = (comp, [st])
+        else:
+            group[1].append(st)
+
+    def flush(self, engine: "ProgressEngine", dev) -> None:
+        for comp, sts in self._groups.values():
+            engine.signal_many(comp, sts, dev)
+        self._groups.clear()
 
 
 class ProgressEngine:
@@ -45,6 +71,7 @@ class ProgressEngine:
         # shared engine is driven from many threads at once
         self._passes = AtomicCounter()
         self._reactions = AtomicCounter()
+        self._burst_posts = AtomicCounter()
 
     @property
     def passes(self) -> int:
@@ -53,6 +80,11 @@ class ProgressEngine:
     @property
     def reactions(self) -> int:
         return self._reactions.load()
+
+    @property
+    def burst_posts(self) -> int:
+        """Doorbells rung through :meth:`post_burst`."""
+        return self._burst_posts.load()
 
     @property
     def devices(self) -> List:
@@ -160,6 +192,172 @@ class ProgressEngine:
             dev.pending_tx.append(msg.op_id)
         return posted(code=ErrorCode.POSTED_BACKLOG)
 
+    # -- burst posting (paper §4.3: amortize per-message software costs) ----
+    def post_burst(self, ops: Sequence, dev) -> List[Status]:
+        """Post a burst of operations on ONE device as coalesced doorbells.
+
+        ``ops`` are :class:`~repro.core.post.CommDesc` descriptors with
+        ``size`` already resolved.  Consecutive eager ops (SEND/AM small
+        enough for inject/bufcopy, with ``allow_retry``) form a doorbell:
+        one ``pool.get_n`` covers the run's packet demand, one stacked
+        payload copy stages the run, one ``fabric.push_burst`` per
+        (peer, device) stream rings it, one telemetry bump counts it.
+        Anything else — recvs, RMA, rendezvous-sized sends, no-retry ops —
+        cuts the run and rides the scalar :meth:`post` path in order.
+
+        Failure semantics are *prefix-accept*: the first op that cannot
+        proceed (pool exhausted, fabric full) fails, and every later op in
+        the burst fails with the same retry — posting op k+1 after op k
+        failed would let it overtake on the stream and break FIFO.  The
+        caller re-posts the failed suffix after driving progress (that is
+        the doorbell split the burst-ordering tests exercise)."""
+        rt = self.rt
+        n = len(ops)
+        statuses: List[Optional[Status]] = [None] * n
+        self._burst_posts.fetch_add(1)
+        i = 0
+        while i < n:
+            run_start = i
+            protos: List[Protocol] = []
+            while i < n:
+                op = ops[i]
+                if op.kind not in (CommKind.SEND, CommKind.AM) \
+                        or not op.allow_retry:
+                    break
+                proto = select_protocol(op.size, rt.config)
+                if proto == Protocol.ZEROCOPY:
+                    break
+                protos.append(proto)
+                i += 1
+            if protos:
+                sts = self._post_eager_burst(ops[run_start:i], protos, dev)
+                statuses[run_start:i] = sts
+                if sts[-1].is_retry():
+                    code = sts[-1].code
+                    for j in range(i, n):
+                        statuses[j] = retry(code)
+                    return statuses
+            if i < n:                        # one non-burstable op, scalar
+                op = ops[i]
+                st = self.post(kind=op.kind, rank=op.rank, buf=op.buf,
+                               tag=op.tag, size=op.size,
+                               local_comp=op.local_comp,
+                               remote_buf=op.remote_buf,
+                               remote_comp=op.remote_comp, device=dev,
+                               matching_policy=op.matching_policy,
+                               allow_retry=op.allow_retry,
+                               user_context=op.user_context)
+                statuses[i] = st
+                if st.is_retry():
+                    for j in range(i + 1, n):
+                        statuses[j] = retry(st.code)
+                    return statuses
+                i += 1
+        return statuses
+
+    def _post_eager_burst(self, ops: Sequence, protos: List[Protocol],
+                          dev) -> List[Status]:
+        """One doorbell: eager SEND/AM ops on one device, all allow_retry."""
+        rt = self.rt
+        n = len(ops)
+        dev.count_post(n)
+        for op in ops:
+            if op.rank < 0 or op.rank >= rt.n_ranks:
+                raise FatalError(f"bad target rank {op.rank}")
+
+        # ONE pool round-trip covers the whole run's packet demand
+        n_buf = sum(1 for p in protos if p == Protocol.BUFCOPY)
+        packets: List[int] = []
+        if n_buf:
+            packets, pst = rt.packet_pool.get_n(dev.lane, n_buf)
+        cut = n                              # first op we can't cover
+        if len(packets) < n_buf:
+            short = len(packets)
+            seen = 0
+            for idx, proto in enumerate(protos):
+                if proto == Protocol.BUFCOPY:
+                    if seen == short:
+                        cut = idx
+                        break
+                    seen += 1
+            rt.stats.retries += n - cut
+
+        # ONE stacked copy stages the whole run's payloads
+        payloads = payloads_to_bytes([op.buf for op in ops[:cut]])
+        for proto, data in zip(protos[:cut], payloads):
+            if proto == Protocol.BUFCOPY \
+                    and data.nbytes > rt.packet_pool.packet_bytes:
+                rt.packet_pool.put_n(dev.lane, packets)
+                raise FatalError("bufcopy payload exceeds packet size")
+        msgs: List[WireMsg] = []
+        pi = 0
+        for op, proto, data in zip(ops[:cut], protos[:cut], payloads):
+            packet, op_id = -1, -1
+            if proto == Protocol.BUFCOPY:
+                packet = packets[pi]
+                pi += 1
+                op_id = next_op_id()
+                rt.pending_ops[op_id] = PendingOp(
+                    op.kind, op.buf, op.size, op.tag, op.rank,
+                    op.local_comp, packet=packet, lane=dev.lane,
+                    user_context=op.user_context)
+            wire_kind = (WireKind.EAGER_AM if op.kind == CommKind.AM
+                         else WireKind.EAGER_SEND)
+            msgs.append(WireMsg(wire_kind, rt.rank, op.rank, tag=op.tag,
+                                payload=data, size=op.size,
+                                rcomp=op.remote_comp,
+                                matching_policy=op.matching_policy,
+                                op_id=op_id, device_index=dev.index))
+
+        # ring one doorbell per consecutive (peer, device) stream
+        pushed = cut
+        j = 0
+        while j < len(msgs):
+            k = j
+            while k < len(msgs) and msgs[k].dst == msgs[j].dst:
+                k += 1
+            acc = rt.fabric.push_burst(msgs[j:k])
+            for m in msgs[j:j + acc]:
+                if m.op_id >= 0:
+                    dev.pending_tx.append(m.op_id)
+            if acc < k - j:                  # fabric full: cut here
+                pushed = j + acc
+                break
+            j = k
+        dev.count_push(pushed)
+
+        # unwind the fabric-rejected tail (all ops here allow retry)
+        if pushed < cut:
+            unwound = [m.op_id for m in msgs[pushed:] if m.op_id >= 0]
+            rt.packet_pool.put_n(
+                dev.lane, [rt.pending_ops[oid].packet for oid in unwound])
+            for oid in unwound:
+                del rt.pending_ops[oid]
+            rt.stats.retries += cut - pushed
+
+        # burst telemetry: one stats bump per protocol class
+        inj = sum(1 for p in protos[:pushed] if p == Protocol.INJECT)
+        if inj:
+            rt.stats.record_many(Protocol.INJECT, inj, sum(
+                op.size for op, p in zip(ops[:pushed], protos[:pushed])
+                if p == Protocol.INJECT))
+        if pushed - inj:
+            rt.stats.record_many(Protocol.BUFCOPY, pushed - inj, sum(
+                op.size for op, p in zip(ops[:pushed], protos[:pushed])
+                if p == Protocol.BUFCOPY))
+
+        out: List[Status] = []
+        for idx, (op, proto) in enumerate(zip(ops, protos)):
+            if idx >= pushed:
+                out.append(retry(ErrorCode.RETRY_NOPACKET if idx >= cut
+                                 else ErrorCode.RETRY_LOCKED))
+            elif proto == Protocol.INJECT:
+                out.append(done(code=ErrorCode.DONE_INLINE, rank=op.rank,
+                                tag=op.tag))
+            else:
+                out.append(posted(ctx=msgs[idx].op_id))
+        return out
+
     def _post_recv(self, rank: int, buf, tag: int, size: int,
                    local_comp, dev, policy: MatchingPolicy) -> Status:
         key = make_key(rank, tag, policy)
@@ -259,28 +457,48 @@ class ProgressEngine:
                     break
                 did = True
 
-        # source-side completions (bufcopy send done on the wire)
-        while dev.pending_tx:
-            op_id = dev.pending_tx.popleft()
-            op = rt.pending_ops.get(op_id)
-            if op is None:
-                continue
-            if op.kind in (CommKind.SEND, CommKind.AM):
-                if op.packet >= 0:              # return packet to the pool
-                    rt.packet_pool.put(op.lane, op.packet)
-                    self.signal(op.local_comp,
-                                done(rank=op.peer, tag=op.tag), dev)
+        # source-side completions (bufcopy send done on the wire) — the
+        # whole sweep batches its pool returns (one put_n per lane) and
+        # its completion signals (one signal_many per comp object)
+        if dev.pending_tx:
+            batch = _SignalBatch()
+            puts: Dict[int, List[int]] = {}
+            while dev.pending_tx:
+                op_id = dev.pending_tx.popleft()
+                op = rt.pending_ops.get(op_id)
+                if op is None:
+                    continue
+                if op.kind in (CommKind.SEND, CommKind.AM):
+                    if op.packet >= 0:          # return packet to the pool
+                        puts.setdefault(op.lane, []).append(op.packet)
+                        batch.add(op.local_comp,
+                                  done(rank=op.peer, tag=op.tag))
+                        del rt.pending_ops[op_id]
+                    # zerocopy sends complete on CTS+RDMA, not here
+                elif op.kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
+                    batch.add(op.local_comp, done(rank=op.peer, tag=op.tag))
                     del rt.pending_ops[op_id]
-                # zerocopy sends complete on CTS+RDMA, not here
-            elif op.kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
-                self.signal(op.local_comp, done(rank=op.peer, tag=op.tag),
-                            dev)
-                del rt.pending_ops[op_id]
-            did = True
+                did = True
+            for lane, pkts in puts.items():
+                rt.packet_pool.put_n(lane, pkts)
+            batch.flush(self, dev)
 
-        # (4) poll incoming for this device stream and react
-        for msg in rt.fabric.drain(rt.rank, dev.index, max_msgs):
-            self._react(msg, dev)
+        # (4) poll incoming for this device stream and react: drain is one
+        # bounded burst per lock acquisition; eager completions accumulate
+        # into one signal batch flushed per contiguous eager run — a
+        # rendezvous/RMA reaction signals comps immediately inside
+        # _react, so the batch must flush BEFORE it runs or a deferred
+        # eager completion would overtake it on the same comp
+        msgs = rt.fabric.drain(rt.rank, dev.index, max_msgs)
+        if msgs:
+            batch = _SignalBatch()
+            for msg in msgs:
+                if msg.kind in (WireKind.EAGER_AM, WireKind.EAGER_SEND):
+                    self._react(msg, dev, batch)
+                else:
+                    batch.flush(self, dev)     # keep per-comp wire order
+                    self._react(msg, dev)
+            batch.flush(self, dev)
             did = True
         return did
 
@@ -292,22 +510,33 @@ class ProgressEngine:
                 n += bool(self.progress(dev, max_msgs))
         return n
 
-    def _react(self, msg: WireMsg, dev) -> None:
+    def _react(self, msg: WireMsg, dev, batch: Optional[_SignalBatch] = None
+               ) -> None:
         rt = self.rt
         self._reactions.fetch_add(1)
         k = msg.kind
         if k == WireKind.EAGER_AM:
             comp = rt.rcomp_registry[msg.rcomp]
-            self.signal(comp, done(msg.payload, rank=msg.src, tag=msg.tag),
-                        dev)
+            st = done(msg.payload, rank=msg.src, tag=msg.tag)
+            if batch is not None:
+                batch.add(comp, st)
+            else:
+                self.signal(comp, st, dev)
         elif k == WireKind.EAGER_SEND:
             key = make_key(msg.src, msg.tag, msg.matching_policy)
-            match = rt.matching.insert(
-                key, MatchKind.SEND, ("eager", msg.payload, msg.src, msg.tag))
+            # eager fast path: a lock-free probe of the pre-posted-recv
+            # stripe — when the recv is already posted (the windowed-
+            # benchmark common case) the delivery skips the bucket lock
+            # and the unexpected-queue insertion entirely
+            match = rt.matching.match_now(key, MatchKind.SEND)
+            if match is None:
+                match = rt.matching.insert(
+                    key, MatchKind.SEND,
+                    ("eager", msg.payload, msg.src, msg.tag))
             if match is not None:
                 _, buf, comp, rdev = match
                 self.deliver_recv(buf, msg.payload, comp, msg.src, msg.tag,
-                                  dev)
+                                  dev, batch=batch)
         elif k == WireKind.RTS:
             rt.rdv.on_rts(self, msg, dev)
         elif k == WireKind.CTS:
@@ -324,12 +553,16 @@ class ProgressEngine:
             raise FatalError(f"unknown wire kind {k}")
 
     def deliver_recv(self, buf, payload, comp, src: int, tag: int,
-                     dev=None) -> None:
+                     dev=None, batch: Optional[_SignalBatch] = None) -> None:
         if buf is not None:
             view = as_bytes_view(buf)
             n = min(view.nbytes, payload.nbytes)
             view[:n] = payload[:n]
-        self.signal(comp, done(payload, rank=src, tag=tag), dev)
+        st = done(payload, rank=src, tag=tag)
+        if batch is not None:
+            batch.add(comp, st)
+        else:
+            self.signal(comp, st, dev)
 
     def signal(self, comp: Optional[CompletionObject], st: Status,
                dev=None) -> None:
@@ -343,3 +576,17 @@ class ProgressEngine:
         if isinstance(result, Status) and result.is_retry():
             dev = dev or self.rt.default_device
             dev.backlog.push(("signal", comp, st))
+
+    def signal_many(self, comp: Optional[CompletionObject],
+                    statuses: List[Status], dev=None) -> None:
+        """Burst delivery: one ``signal_many`` on the comp object; any
+        rejected suffix (the comp protocol guarantees rejects are a
+        prefix-accept's tail, in order) parks in the device backlog for
+        in-order redelivery, exactly like scalar :meth:`signal`."""
+        if comp is None or not statuses:
+            return
+        results = comp.signal_many(statuses)
+        dev = dev or self.rt.default_device
+        for st, r in zip(statuses, results):
+            if isinstance(r, Status) and r.is_retry():
+                dev.backlog.push(("signal", comp, st))

@@ -68,6 +68,18 @@ class ProtocolStats:
             self.zerocopy_msgs += 1
             self.zerocopy_bytes += size
 
+    def record_many(self, proto: Protocol, n_msgs: int, n_bytes: int) -> None:
+        """Burst telemetry: one counter bump for a whole doorbell."""
+        if proto == Protocol.INJECT:
+            self.inject_msgs += n_msgs
+            self.inject_bytes += n_bytes
+        elif proto == Protocol.BUFCOPY:
+            self.bufcopy_msgs += n_msgs
+            self.bufcopy_bytes += n_bytes
+        else:
+            self.zerocopy_msgs += n_msgs
+            self.zerocopy_bytes += n_bytes
+
     @property
     def total_msgs(self) -> int:
         return self.inject_msgs + self.bufcopy_msgs + self.zerocopy_msgs

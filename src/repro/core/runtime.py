@@ -192,6 +192,15 @@ class Runtime:
     def _post(self, **kwargs) -> Status:
         return self.engine.post(**kwargs)
 
+    def post_many(self, ops, *, endpoint: Optional[Endpoint] = None,
+                  device: Optional[Device] = None) -> List[Status]:
+        """Burst posting (paper §4.3): coalesce a sequence of ops
+        (:class:`~repro.core.post.CommDesc` or unfired ``post_*_x``
+        builders) into per-device doorbells — see
+        :func:`repro.core.post.post_many`."""
+        from .post import post_many as _post_many
+        return _post_many(self, ops, endpoint=endpoint, device=device)
+
     def progress(self, device: Optional[Device] = None,
                  max_msgs: int = 0) -> bool:
         return self.engine.progress(device, max_msgs)
