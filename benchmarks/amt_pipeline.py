@@ -20,13 +20,13 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import (CommConfig, CompletionQueue, LocalCluster,
+from repro.core import (CompletionQueue, LocalCluster,
                         Synchronizer, post_am_x)
 from repro.configs.paper import PAPER
 
 
 def _run(n_ranks: int, n_layers: int, bsp: bool) -> Tuple[int, float]:
-    cl = LocalCluster(n_ranks, CommConfig(inject_max_bytes=256),
+    cl = LocalCluster(n_ranks, attrs={"eager_max_bytes": 256},
                       fabric_depth=1 << 14)
     cqs = [cl[r].alloc_cq() for r in range(n_ranks)]
     rcs = [cl[r].register_rcomp(cqs[r]) for r in range(n_ranks)]

@@ -13,19 +13,22 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (CommConfig, LocalCluster, Protocol, post_am_x,
+from repro.core import (LocalCluster, Protocol, post_am_x,
                         select_protocol)
 from repro.configs.paper import PAPER
 
+# protocol-threshold attrs for the size sweep (resolved per cluster;
+# select_protocol reads the same values back off the effective config)
+ATTRS = {"eager_max_bytes": 64, "rdv_threshold": 8 * 1024,
+         "packet_bytes": 16 * 1024, "packets_per_lane": 64}
+
 
 def run(quick: bool = True) -> List[dict]:
-    cfg = CommConfig(inject_max_bytes=64, bufcopy_max_bytes=8 * 1024,
-                     packet_bytes=16 * 1024, packets_per_lane=64)
     iters = max(PAPER.bw_iters // (5 if quick else 1), 5)
     sizes = PAPER.bw_sizes[::2] if quick else PAPER.bw_sizes
     rows = []
     for size in sizes:
-        cl = LocalCluster(2, cfg, fabric_depth=1 << 14)
+        cl = LocalCluster(2, attrs=ATTRS, fabric_depth=1 << 14)
         r0, r1 = cl[0], cl[1]
         cq = r1.alloc_cq()
         rc = r1.register_rcomp(cq)
@@ -43,7 +46,7 @@ def run(quick: bool = True) -> List[dict]:
                 delivered += 1
         dt = time.perf_counter() - t0
         assert delivered == iters
-        proto = select_protocol(size, cfg).value
+        proto = select_protocol(size, cl.config).value
         mbps = size * iters / dt / 1e6
         rows.append({
             "bench": "bandwidth",
@@ -51,17 +54,16 @@ def run(quick: bool = True) -> List[dict]:
             "us_per_call": dt / iters * 1e6,
             "derived": f"{mbps:.1f} MB/s",
         })
-    rows.extend(run_endpoint_sweep(sizes[-1], iters, cfg))
+    rows.extend(run_endpoint_sweep(sizes[-1], iters))
     return rows
 
 
-def run_endpoint_sweep(size: int, iters: int,
-                       cfg: CommConfig) -> List[dict]:
+def run_endpoint_sweep(size: int, iters: int) -> List[dict]:
     """Bulk-transfer bandwidth vs endpoint width (multi-device scaling)."""
     rows = []
     payload = np.random.default_rng(0).integers(0, 255, size, dtype=np.uint8)
     for width in (1, 2, 4):
-        cl = LocalCluster(2, cfg, fabric_depth=1 << 14)
+        cl = LocalCluster(2, attrs=ATTRS, fabric_depth=1 << 14)
         eps = cl.alloc_endpoint(n_devices=width, stripe="round_robin",
                                 progress="dedicated", name="bw")
         cq = cl[1].alloc_cq()

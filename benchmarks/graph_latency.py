@@ -33,13 +33,24 @@ if __package__ in (None, ""):                 # `python benchmarks/...py`
 
 import numpy as np
 
-from repro.core import (CommConfig, LocalCluster, post_recv_x, post_send_x)
+from repro.core import (LocalCluster, post_recv_x, post_send_x)
+
+_ATTRS = {"eager_max_bytes": 64, "packets_per_lane": 64}
+_DEPTH = 1 << 14
 
 
-def _cluster(depth: int = 1 << 14) -> LocalCluster:
-    return LocalCluster(2, CommConfig(inject_max_bytes=64,
-                                      packets_per_lane=64),
-                        fabric_depth=depth)
+def _cluster(depth: int = _DEPTH) -> LocalCluster:
+    return LocalCluster(2, attrs=_ATTRS, fabric_depth=depth)
+
+
+def _attrs_echo() -> dict:
+    """The resolved-attr echo for the benchmark's configuration — run
+    through the same chain the clusters use, without building one."""
+    from repro.core import attrs as A
+    from repro.core.runtime import RUNTIME_ATTRS
+    return A.resolve((*RUNTIME_ATTRS, "fabric_depth", "link_latency"),
+                     runtime=_ATTRS,
+                     overrides={"fabric_depth": _DEPTH}).echo()
 
 
 def run_reaction_chain(n_hops: int, size: int) -> float:
@@ -141,7 +152,9 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "graph_latency", "nodes": args.nodes,
-                       "size": args.size, "rows": rows}, f, indent=2)
+                       "size": args.size,
+                       "resolved_attrs": _attrs_echo(),
+                       "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 
 

@@ -31,14 +31,15 @@ if __package__ in (None, ""):                 # `python benchmarks/...py`
 
 import numpy as np
 
-from repro.core import CommConfig, LocalCluster, post_am_x
+from repro.core import LocalCluster, post_am_x
 from repro.configs.paper import PAPER
 
 
 def _run_lanes(n_lanes: int, dedicated: bool, iters: int) -> float:
-    cfg = CommConfig(inject_max_bytes=64, packets_per_lane=64,
-                     n_channels=n_lanes if dedicated else 1)
-    cl = LocalCluster(2, cfg, fabric_depth=1 << 16)
+    cl = LocalCluster(2, attrs={"eager_max_bytes": 64,
+                                "packets_per_lane": 64,
+                                "n_channels": n_lanes if dedicated else 1},
+                      fabric_depth=1 << 16)
     r0, r1 = cl[0], cl[1]
     cq = r1.alloc_cq()
     rc = r1.register_rcomp(cq)
@@ -74,9 +75,10 @@ def _run_endpoint(width: int, stripe: str, iters: int,
     burst doorbells (``post_am_many``), report rate + per-device
     counters.  ``burst=1`` falls back to scalar posting (the pre-batched
     data plane, kept measurable for A/B runs)."""
-    cfg = CommConfig(inject_max_bytes=64, packets_per_lane=64,
-                     n_channels=width)
-    cl = LocalCluster(2, cfg, fabric_depth=1 << 16)
+    cl = LocalCluster(2, attrs={"eager_max_bytes": 64,
+                                "packets_per_lane": 64,
+                                "n_channels": width},
+                      fabric_depth=1 << 16)
     eps = cl.alloc_endpoint(n_devices=width, stripe=stripe,
                             progress="dedicated", name="sweep")
     ep0, ep1 = eps
@@ -117,6 +119,9 @@ def _run_endpoint(width: int, stripe: str, iters: int,
         "burst": burst,
         "device_posts": [d["posts"] for d in counters["devices"]],
         "device_pushes": [d["pushes"] for d in counters["devices"]],
+        # full resolved-attr provenance for this cell's cluster — perf
+        # numbers always carry their configuration (DESIGN.md §12)
+        "_echo": cl.attrs_echo(),
     }
 
 
@@ -178,7 +183,11 @@ def main() -> None:
 
     rows = run_endpoint_sweep(args.devices, iters, args.stripe, args.burst,
                               args.repeats)
+    # one echo block per document: the widest cell's resolved attrs (the
+    # per-cell difference — n_channels/width — is already a row field)
+    resolved_attrs = rows[-1]["_echo"]
     for r in rows:
+        r.pop("_echo", None)
         print(f"{r['case']:28s} {r['us_per_call']:8.3f} us/msg  "
               f"{r['derived']:>14s}  pushes/device={r['device_pushes']}")
     widest = rows[-1]
@@ -193,6 +202,7 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"bench": "message_rate", "iters": iters,
                        "stripe": args.stripe, "burst": args.burst,
+                       "resolved_attrs": resolved_attrs,
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 

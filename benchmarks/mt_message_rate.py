@@ -38,7 +38,7 @@ if __package__ in (None, ""):                 # `python benchmarks/...py`
 
 import numpy as np
 
-from repro.core import (CommConfig, CommDesc, CommKind, LocalCluster,
+from repro.core import (CommDesc, CommKind, LocalCluster,
                         aggregate_lock_stats)
 
 DEFAULT_PER_THREAD = 2000
@@ -64,10 +64,11 @@ def _run_cell(n_threads: int, per_thread: int, window: int,
 
 def _run_cell_inner(n_threads: int, per_thread: int, window: int,
                     latency: float) -> dict:
-    cfg = CommConfig(inject_max_bytes=1,          # force bufcopy -> pool
-                    packets_per_lane=max(64, 4 * window),
-                    n_channels=n_threads)
-    cl = LocalCluster(2, cfg, fabric_depth=1 << 16, link_latency=latency)
+    cl = LocalCluster(2, attrs={
+        "eager_max_bytes": 1,                     # force bufcopy -> pool
+        "packets_per_lane": max(64, 4 * window),
+        "n_channels": n_threads,
+    }, fabric_depth=1 << 16, link_latency=latency)
     r0, r1 = cl[0], cl[1]
     devs0 = [r0.alloc_device() for _ in range(n_threads)]
     devs1 = [r1.alloc_device() for _ in range(n_threads)]
@@ -162,14 +163,17 @@ def _run_cell_inner(n_threads: int, per_thread: int, window: int,
         "leaked_packets": leaked,
         "hot_pool_acqs": hot_pool_acqs,
         "contention": contention,
+        "resolved_attrs": cl.attrs_echo(),
     }
 
 
 def sweep(thread_counts, per_thread: int, window: int, latency: float,
-          baseline: bool = True) -> List[dict]:
+          baseline: bool = True) -> tuple:
     rows = []
+    echo = None
     for n in thread_counts:
         cell = _run_cell(n, per_thread, window, latency)
+        echo = cell["resolved_attrs"]
         total = n * per_thread
         row = {
             "bench": "mt_message_rate",
@@ -194,14 +198,17 @@ def sweep(thread_counts, per_thread: int, window: int, latency: float,
             row["seq_us_per_call"] = t_seq / total * 1e6
             row["speedup_vs_sequential"] = t_seq / cell["seconds"]
         rows.append(row)
-    return rows
+    # one echo block for the sweep (the widest cell's resolved attrs;
+    # the per-cell n_channels difference is already the threads field)
+    return rows, echo
 
 
 def run(quick: bool = True) -> List[dict]:
     """benchmarks.run entry point."""
     counts = (1, 2) if quick else (1, 2, 4, 8)
     per = DEFAULT_PER_THREAD // (8 if quick else 1)
-    return sweep(counts, per, DEFAULT_WINDOW, DEFAULT_LATENCY)
+    rows, _ = sweep(counts, per, DEFAULT_WINDOW, DEFAULT_LATENCY)
+    return rows
 
 
 def main() -> None:
@@ -220,8 +227,9 @@ def main() -> None:
                     help="output JSON path ('' disables)")
     args = ap.parse_args()
 
-    rows = sweep(args.threads, args.iters, args.window,
-                 args.latency_us / 1e6, baseline=not args.no_baseline)
+    rows, resolved_attrs = sweep(args.threads, args.iters, args.window,
+                                 args.latency_us / 1e6,
+                                 baseline=not args.no_baseline)
     for r in rows:
         speed = (f"  speedup={r['speedup_vs_sequential']:.2f}x"
                  if "speedup_vs_sequential" in r else "")
@@ -256,6 +264,7 @@ def main() -> None:
                        "threads": args.threads,
                        "window": args.window,
                        "latency_us": args.latency_us,
+                       "resolved_attrs": resolved_attrs,
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 

@@ -11,7 +11,10 @@ Walks the paper's core concepts end to end on CPU:
   6. multithreaded progress workers + thread-safe CQs (DESIGN.md §10)
   7. burst posting: post_many doorbells + the OFF .batch() spelling
      (DESIGN.md §11)
-  8. an in-graph ring collective under shard_map (the TPU adaptation)
+  8. the unified attribute system: layered overrides + get_attr
+     introspection on every resource, with the old-kwarg -> attr
+     migration table (DESIGN.md §12)
+  9. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -159,7 +162,40 @@ def main():
     sync2.wait(cluster)
     print(f"OFF .batch(): delivered {got[0][0]}, {got[1][0]} in order")
 
-    # -- 8. the in-graph layer: ring collectives (run under shard_map on
+    # -- 8. the unified attribute system (DESIGN.md §12): every knob is
+    #       one registry entry, resolved defaults -> REPRO_ATTR_* env ->
+    #       LocalCluster(attrs=...) -> per-alloc named overrides, and
+    #       queryable on every live resource via get_attr/.attrs.
+    #
+    #       old kwarg spelling                  -> attribute name
+    #       ----------------------------------------------------------
+    #       CommConfig(inject_max_bytes=...)    -> eager_max_bytes
+    #       CommConfig(bufcopy_max_bytes=...)   -> rdv_threshold
+    #       CommConfig(n_channels=...)          -> n_channels
+    #       CommConfig(packets_per_lane=...)    -> packets_per_lane
+    #       CommConfig(packet_bytes=...)        -> packet_bytes
+    #       LocalCluster(fabric_depth=...)      -> fabric_depth
+    #       LocalCluster(link_latency=...)      -> link_latency
+    #       alloc_cq(capacity=...)              -> cq_capacity
+    #       EndpointSpec(n_devices/stripe/...)  -> n_devices/stripe/
+    #                                              progress/n_workers
+    #       ProgressWorkerPool(burst=...)       -> worker_burst
+    #       (old spellings keep working as deprecation shims) -----------
+    tuned = LocalCluster(2, attrs={"eager_max_bytes": 16,
+                                   "cq_capacity": 32})
+    tcq = tuned[0].alloc_cq()                      # runtime layer: 32
+    print(f"attrs: eager_max_bytes="
+          f"{tuned[0].get_attr('eager_max_bytes')} "
+          f"(source {tuned[0].attr_source('eager_max_bytes')}), "
+          f"cq_capacity={tcq.get_attr('cq_capacity')}, "
+          f"pool free_packets={tuned[0].get_attr('free_packets')}")
+    tep = tuned[0].alloc_endpoint(stripe="by_size")   # per-alloc override
+    print(f"attrs: endpoint stripe={tep.get_attr('stripe')} "
+          f"width={tep.get_attr('width')}; try "
+          f"REPRO_ATTR_RDV_THRESHOLD=64 python examples/quickstart.py "
+          f"to flip bulk sends to rendezvous")
+
+    # -- 9. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

@@ -23,7 +23,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import (CommConfig, LocalCluster, post_am_x)
+from repro.core import (LocalCluster, post_am_x)
 
 BASES = np.frombuffer(b"ACGT", dtype=np.uint8)
 
@@ -103,9 +103,9 @@ def run_kmer_count(reads: List[bytes], k: int, n_ranks: int, *,
                    agg_bytes: int = 8 * 1024
                    ) -> Tuple[Counter, KmerStats]:
     """Distributed two-pass k-mer count; returns (histogram, stats)."""
-    cl = LocalCluster(n_ranks, CommConfig(inject_max_bytes=256,
-                                          bufcopy_max_bytes=16 * 1024,
-                                          packet_bytes=32 * 1024))
+    cl = LocalCluster(n_ranks, attrs={"eager_max_bytes": 256,
+                                      "rdv_threshold": 16 * 1024,
+                                      "packet_bytes": 32 * 1024})
     states = [_RankState(r, n_ranks, agg_bytes) for r in range(n_ranks)]
     cqs = [cl[r].alloc_cq() for r in range(n_ranks)]
     rcomps = [cl[r].register_rcomp(cqs[r]) for r in range(n_ranks)]

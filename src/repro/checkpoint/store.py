@@ -94,7 +94,12 @@ def build_commit_graph(ckpt_dir: str, step: int, host_tree: Any,
         return tmp
 
     def write_manifest(*leaf_infos):
+        # the graph's queryable attrs (unified get_attr surface) ride the
+        # manifest: a restore can see how the commit pipeline was shaped
         manifest = {"step": step, "meta": meta or {},
+                    "commit_graph": {"n_nodes": g.get_attr("n_nodes"),
+                                     "n_comm_nodes":
+                                         g.get_attr("n_comm_nodes")},
                     "leaves": {name: info for name, info in leaf_infos}}
         mpath = os.path.join(tmp, "manifest.json")
         with open(mpath, "w") as f:

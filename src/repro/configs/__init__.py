@@ -31,6 +31,9 @@ _MODULES = {
 
 ARCH_NAMES = list(_MODULES)
 
+__all__ = ["ARCH_NAMES", "SHAPES", "Shape", "cells", "get_config",
+           "get_smoke", "shape_applicable"]
+
 
 def _mod(arch: str):
     if arch not in _MODULES:

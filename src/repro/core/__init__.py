@@ -4,6 +4,10 @@ Public surface mirrors the paper's C++ API (Listing 2) where it makes
 sense in Python, plus the in-graph collective layer that is the TPU
 adaptation of the zero-copy protocol.
 """
+from .attrs import (REGISTRY, AttrError, AttrResource, AttrSpec,
+                    ResolvedAttrs, get_spec, parse_attr_args, register_attr,
+                    registry_table, resolve, resolve_one,
+                    resolved_from_values)
 from .backlog import BacklogQueue, Ring, init_ring, ring_pop, ring_push, ring_size
 from .channels import Channel, Device, make_channels
 from .concurrency import (LCQ, AtomicCounter, AtomicCredit, AtomicFlag,
@@ -37,6 +41,10 @@ __all__ = [
     # status
     "ErrorCode", "ErrorKind", "FatalError", "Status", "done", "posted",
     "retry",
+    # unified attribute system (DESIGN.md §12)
+    "REGISTRY", "AttrError", "AttrResource", "AttrSpec", "ResolvedAttrs",
+    "get_spec", "parse_attr_args", "register_attr", "registry_table",
+    "resolve", "resolve_one", "resolved_from_values",
     # resources
     "BacklogQueue", "Channel", "Device", "CompletionGraph",
     "CompletionHandler", "CompletionObject", "CompletionQueue", "MPMCArray",

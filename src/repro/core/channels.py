@@ -31,11 +31,16 @@ import dataclasses
 import itertools
 from typing import Optional
 
+from . import attrs as _attrs
 from .backlog import BacklogQueue
 from .completion import CompletionQueue
 from .concurrency.atomics import AtomicCounter
 from .concurrency.locks import TryLock
 from .modes import CommConfig, CommMode
+
+#: attrs a device resolves at alloc time (n_channels may be overridden
+#: per device; 0-capacities mean unbounded)
+DEVICE_ATTRS = ("n_channels", "backlog_capacity", "cq_capacity")
 
 _device_ids = itertools.count()
 
@@ -63,17 +68,42 @@ def make_channels(n: int) -> tuple[Channel, ...]:
     return tuple(chans)
 
 
-class Device:
+class Device(_attrs.AttrResource):
     """A replicable set of communication resources (paper: LCI device)."""
 
     def __init__(self, config: CommConfig, lane: int,
-                 cq: Optional[CompletionQueue] = None):
+                 cq: Optional[CompletionQueue] = None,
+                 resolved: Optional[_attrs.ResolvedAttrs] = None):
         self.did = next(_device_ids)
         self.lane = lane                       # packet-pool lane this device owns
         self.config = config
-        self.channels = make_channels(config.resolved_channels())
-        self.cq = cq or CompletionQueue()
-        self.backlog = BacklogQueue()
+        if resolved is None:
+            resolved = _attrs.resolved_from_values(
+                {"n_channels": config.resolved_channels(),
+                 "backlog_capacity": 0, "cq_capacity": 0})
+        # an explicit per-device n_channels override beats the
+        # config-derived width; otherwise the mode logic decides (BSP and
+        # LCI_SHARED collapse to one channel regardless of the knob) —
+        # and the stored resolution must agree with the width the device
+        # actually runs with, so re-merge when the mode collapsed it
+        n_chan = (resolved["n_channels"]
+                  if resolved.source("n_channels") == "resource"
+                  else config.resolved_channels())
+        if resolved["n_channels"] != n_chan:
+            resolved = resolved.merged(_attrs.ResolvedAttrs(
+                {"n_channels": n_chan},
+                {"n_channels": resolved.source("n_channels")}))
+        self._init_attrs(resolved)
+        self.channels = make_channels(n_chan)
+        self.cq = cq or CompletionQueue(resolved["cq_capacity"] or None)
+        self.backlog = BacklogQueue(resolved["backlog_capacity"] or None)
+        self._export_attr("lane", lambda: self.lane)
+        self._export_attr("width", lambda: len(self.channels))
+        self._export_attr("posts", lambda: self.posts)
+        self._export_attr("pushes", lambda: self.pushes)
+        self._export_attr("progresses", lambda: self.progresses)
+        self._export_attr("progress_lock_stats",
+                          lambda: self.progress_lock.stats())
         self.index = 0                         # position in the owner's device list
         self.pending_tx = collections.deque()  # ops awaiting source completion
         # per-device progress try-lock (paper §4.2.3): any number of

@@ -32,6 +32,7 @@ from typing import Any, Callable, List, Optional
 import jax
 import jax.numpy as jnp
 
+from . import attrs as _attrs
 from .status import ErrorCode, FatalError, Status, done, retry
 
 
@@ -55,7 +56,7 @@ def _as_progress_fn(source) -> Optional[Callable[[], Any]]:
                      "cluster/runtime/engine/endpoint or a callable")
 
 
-class CompletionObject:
+class CompletionObject(_attrs.AttrResource):
     """Base functor — the unified ``comp`` protocol (paper §3.2.5).
 
     Every completion object allocated from a runtime (``alloc_handler`` /
@@ -130,6 +131,7 @@ class CompletionHandler(CompletionObject):
         self.fn = fn
         self.signals = 0
         self.last: Optional[Status] = None
+        self._export_attr("signals", lambda: self.signals)
 
     def signal(self, status: Status) -> Status:
         self.signals += 1
@@ -149,11 +151,17 @@ class CompletionQueue(CompletionObject):
     progress engine pushes it to the backlog instead of dropping it).
     """
 
-    def __init__(self, capacity: Optional[int] = None):
+    def __init__(self, capacity: Optional[int] = None,
+                 resolved: Optional[_attrs.ResolvedAttrs] = None):
         self._q: collections.deque = collections.deque()
         self.capacity = capacity
         self.pushes = 0
         self.pops = 0
+        self._init_attrs(resolved or _attrs.resolved_from_values(
+            {"cq_capacity": capacity or 0}))
+        self._export_attr("depth", lambda: len(self._q))
+        self._export_attr("pushes", lambda: self.pushes)
+        self._export_attr("pops", lambda: self.pops)
 
     def signal(self, status: Status) -> Status:
         if self.capacity is not None and len(self._q) >= self.capacity:
@@ -202,10 +210,13 @@ class Synchronizer(CompletionObject):
 
     def __init__(self, expected: int = 1):
         if expected < 1:
-            raise FatalError("synchronizer needs expected >= 1")
+            raise _attrs.AttrError(
+                f"attribute 'expected' must be >= 1, got {expected}")
         self.expected = expected
         self._received: List[Status] = []
         self._error: Optional[BaseException] = None
+        self._export_attr("expected", lambda: self.expected)
+        self._export_attr("received", lambda: len(self._received))
 
     def signal(self, status: Status) -> Status:
         if len(self._received) >= self.expected:

@@ -132,10 +132,16 @@ class ThreadSafeCompletionQueue(CompletionObject):
     object.
     """
 
-    def __init__(self, capacity: Optional[int] = None):
+    def __init__(self, capacity: Optional[int] = None, resolved=None):
         self._q = LCQ(capacity or 4096)
         self.capacity = capacity
         self._pop_yields = AtomicCounter()
+        from .. import attrs as _attrs
+        self._init_attrs(resolved or _attrs.resolved_from_values(
+            {"cq_capacity": capacity or 0}))
+        self._export_attr("depth", lambda: len(self._q))
+        self._export_attr("pop_yields", lambda: self.pop_yields)
+        self._export_attr("threadsafe", lambda: True)
 
     def signal(self, status: Status) -> Status:
         if self._q.push(status):

@@ -19,13 +19,14 @@ from __future__ import annotations
 import threading
 import time
 
+from .. import attrs as _attrs
 from .atomics import AtomicCounter
 
 # backoff schedule for the blocking fallback: a few pure spins (cheap,
-# catches short critical sections), then sleeps doubling up to 1 ms
-_PURE_SPINS = 4
+# catches short critical sections), then sleeps doubling up to 1 ms.
+# Attribute-tunable (env mutability: process-wide, read at construction):
+# lock_spin_count / lock_backoff_max in the DESIGN.md §12 registry.
 _BACKOFF_MIN = 1e-6
-_BACKOFF_MAX = 1e-3
 
 
 class TryLock:
@@ -42,9 +43,16 @@ class TryLock:
     ``spins`` (backoff iterations inside blocking acquires, atomic).
     """
 
-    def __init__(self, name: str = "lock", reentrant: bool = False):
+    def __init__(self, name: str = "lock", reentrant: bool = False,
+                 spin_count: int = None, backoff_max: float = None):
         self.name = name
         self._lock = threading.RLock() if reentrant else threading.Lock()
+        # spin/backoff tuning resolves through the attribute system
+        # (default -> REPRO_ATTR_LOCK_*); explicit args win
+        self.spin_count = (spin_count if spin_count is not None
+                           else _attrs.resolve_one("lock_spin_count"))
+        self.backoff_max = (backoff_max if backoff_max is not None
+                            else _attrs.resolve_one("lock_backoff_max"))
         self.acquisitions = 0
         self._contentions = AtomicCounter()
         self._spins = AtomicCounter()
@@ -75,9 +83,9 @@ class TryLock:
         spins = 0
         while True:
             spins += 1
-            if spins > _PURE_SPINS:
+            if spins > self.spin_count:
                 time.sleep(delay)
-                delay = min(delay * 2, _BACKOFF_MAX)
+                delay = min(delay * 2, self.backoff_max)
             if self._lock.acquire(blocking=False):
                 self._spins.fetch_add(spins)
                 self.acquisitions += 1

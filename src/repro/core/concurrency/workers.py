@@ -23,6 +23,8 @@ import threading
 import time
 from typing import List, Optional, Sequence, Tuple
 
+from .. import attrs as _attrs
+from ..attrs import AttrError
 from ..status import FatalError
 from .atomics import AtomicCounter, AtomicFlag
 from .locks import aggregate_lock_stats
@@ -31,7 +33,7 @@ _IDLE_SLEEP_MIN = 1e-5
 _IDLE_SLEEP_MAX = 1e-3
 
 
-class ProgressWorkerPool:
+class ProgressWorkerPool(_attrs.AttrResource):
     """N threads cooperatively driving progress over a set of devices.
 
     ``targets`` is a sequence of ``(engine, device)`` pairs; a device may
@@ -44,17 +46,31 @@ class ProgressWorkerPool:
 
     def __init__(self, targets: Sequence[Tuple[object, object]],
                  n_workers: int = 2, name: str = "workers",
-                 burst: int = 64):
+                 burst: Optional[int] = None,
+                 resolved: Optional[_attrs.ResolvedAttrs] = None):
+        if burst is None:
+            burst = _attrs.resolve_one("worker_burst")
         if n_workers < 1:
-            raise FatalError("worker pool needs n_workers >= 1")
+            raise AttrError(
+                f"attribute 'n_workers' must be >= 1 for a worker pool, "
+                f"got {n_workers}")
         if not targets:
             raise FatalError("worker pool needs at least one "
                              "(engine, device) target")
         if burst < 0:
-            raise FatalError("burst must be >= 0 (0 = unbounded drain)")
+            raise AttrError("attribute 'worker_burst' must be >= 0 "
+                            f"(0 = unbounded drain), got {burst}")
         self.targets = list(targets)
         self.n_workers = n_workers
         self.name = name
+        self._init_attrs(resolved or _attrs.resolved_from_values(
+            {"n_workers": n_workers, "worker_burst": burst}))
+        self._export_attr("n_targets", lambda: len(self.targets))
+        self._export_attr("running", lambda: self.running)
+        self._export_attr("lock_skips", lambda: self.lock_skips.load())
+        self._export_attr("idle_naps", lambda: self.idle_naps.load())
+        self._export_attr("contention", lambda: aggregate_lock_stats(
+            dev.progress_lock for _, dev in self.targets))
         # wire messages drained per try-lock acquisition: bounds how long
         # one worker holds a device's progress lock (a busy stream is
         # swept in bursts, not monopolized), while still amortizing the
@@ -70,18 +86,21 @@ class ProgressWorkerPool:
     # -- construction helpers ------------------------------------------------
     @classmethod
     def for_runtime(cls, runtime, n_workers: int = 2,
-                    name: Optional[str] = None) -> "ProgressWorkerPool":
+                    name: Optional[str] = None,
+                    burst: Optional[int] = None) -> "ProgressWorkerPool":
         """Workers over every device of one runtime, via its shared engine."""
         return cls([(runtime.engine, d) for d in runtime.devices],
-                   n_workers, name or f"rank{runtime.rank}/workers")
+                   n_workers, name or f"rank{runtime.rank}/workers",
+                   burst=burst)
 
     @classmethod
     def for_cluster(cls, cluster, n_workers: int = 2,
-                    name: str = "cluster/workers") -> "ProgressWorkerPool":
+                    name: str = "cluster/workers",
+                    burst: Optional[int] = None) -> "ProgressWorkerPool":
         """Workers over every device of every rank (thread-mode testbed)."""
         targets = [(rt.engine, d) for rt in cluster.runtimes
                    for d in rt.devices]
-        return cls(targets, n_workers, name)
+        return cls(targets, n_workers, name, burst=burst)
 
     # -- lifecycle -----------------------------------------------------------
     @property

@@ -99,6 +99,12 @@ class CompletionGraph(CompletionObject):
         self._parked: collections.deque = collections.deque()  # comm retries
         self._ext_signals: collections.deque = collections.deque()
         self._progress_sources: list = []
+        # read-only discovered attrs (the unified get_attr surface)
+        self._export_attr("n_nodes", lambda: len(self._nodes))
+        self._export_attr("n_comm_nodes", lambda: sum(
+            1 for n in self._nodes if n.kind != _FN))
+        self._export_attr("started", lambda: self._started)
+        self._export_attr("n_done", lambda: self._n_done)
 
     # -- construction -------------------------------------------------------
     def _insert(self, fn, deps: Sequence[int], name: Optional[str],

@@ -39,8 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import attrs as _attrs
 from .concurrency.atomics import AtomicCounter
-from .concurrency.locks import TryLock
+from .concurrency.locks import TryLock, aggregate_lock_stats
 
 
 class MatchKind(enum.IntEnum):
@@ -74,7 +75,7 @@ def make_key(rank: int, tag: int,
     return (None, tag)
 
 
-class HostMatchingEngine:
+class HostMatchingEngine(_attrs.AttrResource):
     """Trace-time / host-side matching engine, insert-linearizable.
 
     Buckets are materialized lazily (a Python dict is already a hash table);
@@ -90,7 +91,8 @@ class HostMatchingEngine:
     needs — one of them matches the other, never both or neither.
     """
 
-    def __init__(self, n_buckets: int = 65536, n_locks: int = 64):
+    def __init__(self, n_buckets: int = 65536, n_locks: int = 64,
+                 resolved=None):
         self.n_buckets = n_buckets
         self._buckets: dict[Hashable, dict[MatchKind, collections.deque]] = {}
         self.locks = [TryLock(name=f"match/bucket{i}")
@@ -98,6 +100,13 @@ class HostMatchingEngine:
         self._inserts = AtomicCounter()
         self._matches = AtomicCounter()
         self._fast_matches = AtomicCounter()
+        self._init_attrs(resolved or _attrs.resolved_from_values(
+            {"matching_buckets": n_buckets, "matching_locks": n_locks}))
+        self._export_attr("inserts", lambda: self.inserts)
+        self._export_attr("matches", lambda: self.matches)
+        self._export_attr("fast_matches", lambda: self.fast_matches)
+        self._export_attr("contention",
+                          lambda: aggregate_lock_stats(self.locks))
 
     @property
     def inserts(self) -> int:

@@ -42,12 +42,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import attrs as _attrs
 from .concurrency.atomics import AtomicCounter
-from .concurrency.locks import TryLock
+from .concurrency.locks import TryLock, aggregate_lock_stats
 from .status import ErrorCode, Status, done, retry
 
+#: attrs the host pool resolves at alloc time
+POOL_ATTRS = ("pool_lanes", "packets_per_lane", "packet_bytes")
 
-class HostPacketPool:
+
+class HostPacketPool(_attrs.AttrResource):
     """Host-side packet pool: per-lane locked deques + try-lock steal-half.
 
     ``n_lanes`` plays the role of the paper's thread count; each lane owns a
@@ -59,9 +63,20 @@ class HostPacketPool:
     """
 
     def __init__(self, n_lanes: int, packets_per_lane: int,
-                 packet_bytes: int = 8192, seed: int = 0):
+                 packet_bytes: int = 8192, seed: int = 0,
+                 resolved: Optional[_attrs.ResolvedAttrs] = None):
         self.n_lanes = n_lanes
         self.packet_bytes = packet_bytes
+        self._init_attrs(resolved or _attrs.resolved_from_values(
+            {"pool_lanes": n_lanes, "packets_per_lane": packets_per_lane,
+             "packet_bytes": packet_bytes}))
+        self._export_attr("width", lambda: self.n_lanes)
+        self._export_attr("free_packets", self.free_packets)
+        self._export_attr("steals", lambda: self.steals)
+        self._export_attr("steal_lock_failures",
+                          lambda: self.steal_lock_failures)
+        self._export_attr("contention",
+                          lambda: aggregate_lock_stats(self.locks))
         self.n_packets = n_lanes * packets_per_lane
         self._deques = [
             collections.deque(range(i * packets_per_lane,

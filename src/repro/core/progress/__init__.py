@@ -11,8 +11,8 @@ Layout (each file one concern; the paper's Figure-1 chain in engine.py):
 * :mod:`.endpoint` — :class:`Endpoint`/:class:`EndpointSpec`: named
   multi-device bundles with striping + progress policies.
 """
-from .endpoint import (PROGRESS_POLICIES, STRIPE_POLICIES, Endpoint,
-                       EndpointSpec)
+from .endpoint import (ENDPOINT_ATTRS, PROGRESS_POLICIES,
+                       STRIPE_POLICIES, Endpoint, EndpointSpec)
 from .engine import ProgressEngine
 from .fabric import (Fabric, MemoryRegion, PendingOp, WireKind, WireMsg,
                      as_bytes_view, next_op_id, payload_to_bytes,
@@ -20,7 +20,7 @@ from .fabric import (Fabric, MemoryRegion, PendingOp, WireKind, WireMsg,
 from .rendezvous import RendezvousManager
 
 __all__ = [
-    "Endpoint", "EndpointSpec", "Fabric", "MemoryRegion", "PendingOp",
+    "ENDPOINT_ATTRS", "Endpoint", "EndpointSpec", "Fabric", "MemoryRegion", "PendingOp",
     "ProgressEngine", "RendezvousManager", "WireKind", "WireMsg",
     "PROGRESS_POLICIES", "STRIPE_POLICIES", "as_bytes_view", "next_op_id",
     "payload_to_bytes", "payloads_to_bytes",

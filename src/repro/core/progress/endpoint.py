@@ -34,6 +34,9 @@ import bisect
 import dataclasses
 from typing import Optional, Sequence
 
+from .. import attrs as _attrs
+from ..attrs import AttrError
+from ..concurrency.locks import aggregate_lock_stats
 from ..concurrency.workers import ProgressWorkerPool
 from ..matching import MatchingPolicy
 from ..modes import CommMode
@@ -44,42 +47,66 @@ from ..post import post_many as _post_many
 from ..status import FatalError, Status
 from .engine import ProgressEngine
 
-STRIPE_POLICIES = ("round_robin", "by_peer", "by_size")
-PROGRESS_POLICIES = ("shared", "dedicated", "workers")
+STRIPE_POLICIES = _attrs.get_spec("stripe").choices
+PROGRESS_POLICIES = _attrs.get_spec("progress").choices
+
+#: the attrs an endpoint resolves at alloc time
+ENDPOINT_ATTRS = ("n_devices", "stripe", "progress", "n_workers",
+                  "worker_burst")
 
 
 @dataclasses.dataclass(frozen=True)
-class EndpointSpec:
+class EndpointSpec(_attrs.AttrResource):
     """Declarative endpoint description — what a layer *asks for*.
 
-    Carried by config objects (e.g. ``distributed.Comm``) that cannot hold
-    live devices; ``Runtime.alloc_endpoint(spec=...)`` materializes it.
+    A thin view over resolved attributes (DESIGN.md §12): every shape
+    field defaults to ``None`` = "resolve through the attribute chain"
+    (library default, then ``REPRO_ATTR_*``), and explicit fields are
+    validated at construction with errors naming the attribute.  Carried
+    by config objects (e.g. ``distributed.Comm``) that cannot hold live
+    devices; ``Runtime.alloc_endpoint(spec=...)`` materializes it.
     """
 
     name: str = "endpoint"
-    n_devices: int = 1
-    stripe: str = "round_robin"
-    progress: str = "shared"
+    n_devices: Optional[int] = None
+    stripe: Optional[str] = None
+    progress: Optional[str] = None
     # workers mode: thread count driving the endpoint's devices
     # (0 = auto: one worker per device)
-    n_workers: int = 0
+    n_workers: Optional[int] = None
     # by_size boundaries (bytes): size class i = first boundary >= size;
     # None derives geometric classes from the runtime's protocol thresholds.
     size_boundaries: Optional[Sequence[int]] = None
+    # wire messages drained per progress-lock grab in workers mode
+    worker_burst: Optional[int] = None
 
     def __post_init__(self):
-        if self.stripe not in STRIPE_POLICIES:
-            raise FatalError(f"unknown stripe policy {self.stripe!r}; "
-                             f"pick from {STRIPE_POLICIES}")
-        if self.progress not in PROGRESS_POLICIES:
-            raise FatalError(f"unknown progress policy {self.progress!r}; "
-                             f"pick from {PROGRESS_POLICIES}")
-        if self.n_devices < 1:
-            raise FatalError("an endpoint needs at least one device")
-        if self.n_workers < 0:
-            raise FatalError("n_workers must be >= 0 (0 = one per device)")
+        explicit = {a: getattr(self, a) for a in ENDPOINT_ATTRS
+                    if getattr(self, a) is not None}
+        resolved = _attrs.resolve(ENDPOINT_ATTRS, overrides=explicit)
+        self._init_attrs(resolved)
+        for attr in ENDPOINT_ATTRS:
+            object.__setattr__(self, attr, resolved[attr])
         if self.n_workers and self.progress != "workers":
-            raise FatalError("n_workers only applies to progress='workers'")
+            if resolved.source("n_workers") == "resource":
+                raise AttrError("attribute 'n_workers' only applies to "
+                                "progress='workers', got progress="
+                                f"{self.progress!r}")
+            # an env/runtime-layer worker count is ambient tuning, not a
+            # request for workers mode: inert on non-worker endpoints.
+            # The stored resolution must agree with what the endpoint
+            # actually runs with, so zero it there too.
+            object.__setattr__(self, "n_workers", 0)
+            self._init_attrs(resolved.merged(_attrs.ResolvedAttrs(
+                {"n_workers": 0},
+                {"n_workers": resolved.source("n_workers")})))
+        if self.size_boundaries is not None:
+            bounds = tuple(self.size_boundaries)
+            if any(b < 0 for b in bounds):
+                raise AttrError("attribute 'size_boundaries' must be "
+                                f"non-negative byte sizes, got {bounds}")
+            object.__setattr__(self, "size_boundaries", bounds)
+        self._export_attr("size_boundaries", lambda: self.size_boundaries)
 
     @classmethod
     def for_mode(cls, mode: CommMode, n_devices: int = 1,
@@ -93,10 +120,11 @@ class EndpointSpec:
                    progress="shared")
 
 
-class Endpoint:
+class Endpoint(_attrs.AttrResource):
     """A live bundle of devices on one runtime, posting through a stripe."""
 
-    def __init__(self, runtime, spec: EndpointSpec):
+    def __init__(self, runtime, spec: EndpointSpec,
+                 resolved: Optional[_attrs.ResolvedAttrs] = None):
         self.runtime = runtime
         self.spec = spec
         self.devices = [runtime.alloc_device()
@@ -112,7 +140,7 @@ class Endpoint:
             self.workers = ProgressWorkerPool(
                 list(zip(self.engines, self.devices)),
                 n_workers=spec.n_workers or spec.n_devices,
-                name=f"{spec.name}/workers")
+                name=f"{spec.name}/workers", burst=spec.worker_burst)
         self._rr = 0
         if spec.size_boundaries is not None:
             self._boundaries = list(spec.size_boundaries)
@@ -121,6 +149,19 @@ class Endpoint:
             # holds inject-able messages, each further class 8x larger
             self._boundaries = [runtime.config.inject_max_bytes * (8 ** i)
                                 for i in range(spec.n_devices - 1)]
+        # introspection: the alloc-time resolution (full provenance when
+        # allocated through Runtime.alloc_endpoint) plus discovered state
+        self._init_attrs(resolved or spec._resolved_attrs)
+        self._export_attr("width", lambda: len(self.devices))
+        self._export_attr("size_boundaries", lambda: list(self._boundaries))
+        self._export_attr("device_indices",
+                          lambda: [d.index for d in self.devices])
+        self._export_attr("contention", self._contention)
+
+    def _contention(self) -> dict:
+        """Aggregate progress-lock telemetry across the bundle (the
+        runtime-discovered contention attribute)."""
+        return aggregate_lock_stats(d.progress_lock for d in self.devices)
 
     @property
     def name(self) -> str:

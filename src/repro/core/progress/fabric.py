@@ -18,11 +18,15 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import attrs as _attrs
 from ..completion import CompletionObject
 from ..concurrency.atomics import AtomicCounter
 from ..matching import MatchingPolicy
 from ..post import CommKind
 from ..status import FatalError
+
+#: attrs the fabric resolves at alloc time
+FABRIC_ATTRS = ("fabric_depth", "link_latency")
 
 
 class WireKind:
@@ -74,7 +78,7 @@ def next_op_id() -> int:
     return next(_op_ids)
 
 
-class Fabric:
+class Fabric(_attrs.AttrResource):
     """Bounded per-(dst, device) FIFO queues; the NIC send-queue stand-in.
 
     ``depth`` bounds each queue — a full queue is the paper's "underlying
@@ -93,7 +97,8 @@ class Fabric:
     """
 
     def __init__(self, n_ranks: int, depth: int = 4096,
-                 latency: float = 0.0):
+                 latency: float = 0.0,
+                 resolved: Optional[_attrs.ResolvedAttrs] = None):
         self.n_ranks = n_ranks
         self.depth = depth
         self.latency = latency
@@ -101,6 +106,11 @@ class Fabric:
         # atomic: producers on any thread bump these concurrently
         self._pushes = AtomicCounter()
         self._full_events = AtomicCounter()
+        self._init_attrs(resolved or _attrs.resolved_from_values(
+            {"fabric_depth": depth, "link_latency": latency}))
+        self._export_attr("in_flight", self.in_flight)
+        self._export_attr("pushes", lambda: self.pushes)
+        self._export_attr("full_events", lambda: self.full_events)
 
     @property
     def pushes(self) -> int:

@@ -20,21 +20,28 @@ keeps the paper's Listing-2 call surface on the runtime object.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
-from .channels import Device
+from . import attrs as _attrs
+from .channels import DEVICE_ATTRS, Device
 from .completion import (CompletionHandler, CompletionObject, CompletionQueue,
                          MPMCArray, Synchronizer)
 from .concurrency import ProgressWorkerPool, ThreadSafeCompletionQueue
 from .graph import CompletionGraph
 from .matching import HostMatchingEngine
-from .modes import CommConfig
+from .modes import _FIELD_TO_ATTR, CommConfig
 from .off import off
-from .packet_pool import HostPacketPool
+from .packet_pool import POOL_ATTRS, HostPacketPool
 from .protocol import ProtocolStats
 from .status import FatalError, Status
+
+#: runtime-level attrs one Runtime resolves at construction
+RUNTIME_ATTRS = ("mode", "n_channels", "eager_max_bytes", "rdv_threshold",
+                 "wire_bf16", "matching_buckets", "matching_locks",
+                 "packets_per_lane", "packet_bytes", "pool_lanes")
 # Re-exported names that historically lived here (public API compatibility).
-from .progress import (Endpoint, EndpointSpec, Fabric, MemoryRegion,
+from .progress import (ENDPOINT_ATTRS, Endpoint, EndpointSpec, Fabric,
+                       MemoryRegion,
                        PendingOp, ProgressEngine, RendezvousManager,
                        WireKind, WireMsg, as_bytes_view, payload_to_bytes)
 
@@ -43,25 +50,60 @@ _as_bytes_view = as_bytes_view
 _payload_to_bytes = payload_to_bytes
 
 
-class Runtime:
+def _resolve_worker_args(layer: Mapping, n_workers: Optional[int],
+                         burst: Optional[int]) -> tuple:
+    """Resolve alloc_workers knobs through the chain; attr ``n_workers``
+    0 means "auto" = the historical pool default of 2."""
+    explicit = {k: v for k, v in (("n_workers", n_workers),
+                                  ("worker_burst", burst)) if v is not None}
+    r = _attrs.resolve(("n_workers", "worker_burst"), runtime=layer,
+                       overrides=explicit)
+    return r["n_workers"] or 2, r["worker_burst"]
+
+
+class Runtime(_attrs.AttrResource):
     """One rank's LCI runtime: the replicable resource set.
 
     Posting and progress are delegated to the default
     :class:`~repro.core.progress.ProgressEngine`; dedicated engines (and
     multi-device striping) are allocated through :meth:`alloc_endpoint`.
+
+    Every ``alloc_*`` resolves its knobs through the four-layer attribute
+    chain (DESIGN.md §12): library defaults → ``REPRO_ATTR_*`` env →
+    this runtime's config layer (``LocalCluster(attrs=...)`` merged with
+    explicit ``CommConfig`` fields) → per-call named-argument overrides.
     """
 
     def __init__(self, rank: int, cluster: "LocalCluster",
                  config: Optional[CommConfig] = None):
         self.rank = rank
         self.cluster = cluster
-        self.config = config or cluster.config
+        # the runtime-level layer feeding every per-resource resolution
+        if config is None:
+            self._attr_layer: Dict[str, Any] = dict(cluster._attr_layer)
+            self.config = cluster.config
+        else:
+            # a per-rank config's explicit fields override the cluster
+            # layer — and the effective config must be rebuilt from the
+            # merge, so the data path (select_protocol reads
+            # config.inject_max_bytes) agrees with introspection
+            self._attr_layer = {**cluster._attr_layer,
+                                **config.explicit_attrs()}
+            self.config = CommConfig(**{
+                f: self._attr_layer[a] for f, a in _FIELD_TO_ATTR.items()
+                if a in self._attr_layer})
+        resolved = _attrs.resolve(RUNTIME_ATTRS, runtime=self._attr_layer)
+        self._init_attrs(resolved)
         # resources (all replicable; these are the process-default set)
-        self.matching = HostMatchingEngine(self.config.matching_buckets)
+        self.matching = HostMatchingEngine(
+            resolved["matching_buckets"], resolved["matching_locks"],
+            resolved=resolved.subset(("matching_buckets",
+                                      "matching_locks")))
         self.packet_pool = HostPacketPool(
-            n_lanes=max(1, self.config.n_channels),
-            packets_per_lane=self.config.packets_per_lane,
-            packet_bytes=self.config.packet_bytes)
+            n_lanes=resolved["pool_lanes"] or max(1, resolved["n_channels"]),
+            packets_per_lane=resolved["packets_per_lane"],
+            packet_bytes=resolved["packet_bytes"],
+            resolved=resolved.subset(POOL_ATTRS))
         self.rcomp_registry = MPMCArray()      # paper §4.1.1 MPMC array
         self.memory_regions = MPMCArray()
         self.devices: List[Device] = []
@@ -73,6 +115,12 @@ class Runtime:
         self.engine = ProgressEngine(self, name=f"rank{rank}/shared")
         self.endpoints: List[Endpoint] = []
         self.default_device = self.alloc_device(lane=0)
+        # read-only discovered attributes (LCI get_attr_* mirror)
+        self._export_attr("rank_me", lambda: self.rank)
+        self._export_attr("rank_n", lambda: self.cluster.n_ranks)
+        self._export_attr("n_devices", lambda: len(self.devices))
+        self._export_attr("n_endpoints", lambda: len(self.endpoints))
+        self._export_attr("free_packets", self.packet_pool.free_packets)
 
     # -- rank / fabric queries ----------------------------------------------
     def get_rank_me(self) -> int:
@@ -90,10 +138,17 @@ class Runtime:
         return self.cluster.fabric
 
     # -- resource allocation -------------------------------------------------
-    def alloc_device(self, lane: Optional[int] = None) -> Device:
+    def alloc_device(self, lane: Optional[int] = None,
+                     **overrides) -> Device:
+        """Allocate one device; ``**overrides`` are per-resource attribute
+        overrides (``n_channels``, ``backlog_capacity``, ``cq_capacity``)
+        validated against the registry at alloc time."""
+        resolved = _attrs.resolve(DEVICE_ATTRS, runtime=self._attr_layer,
+                                  overrides=overrides)
         dev = Device(self.config,
                      lane=(lane if lane is not None
-                           else len(self.devices) % self.packet_pool.n_lanes))
+                           else len(self.devices) % self.packet_pool.n_lanes),
+                     resolved=resolved)
         # indices are never reused: a fabric stream keyed by a freed
         # device's index must not silently alias a later allocation
         dev.index = self._next_device_index
@@ -115,21 +170,58 @@ class Runtime:
         self._check_device_freeable(device)
         self.devices.remove(device)
 
-    def alloc_endpoint(self, n_devices: int = 1,
-                       stripe: str = "round_robin",
-                       progress: str = "shared",
+    def alloc_endpoint(self, n_devices: Optional[int] = None,
+                       stripe: Optional[str] = None,
+                       progress: Optional[str] = None,
                        name: Optional[str] = None, *,
-                       spec: Optional[EndpointSpec] = None) -> Endpoint:
+                       spec: Optional[EndpointSpec] = None,
+                       n_workers: Optional[int] = None,
+                       worker_burst: Optional[int] = None,
+                       size_boundaries=None) -> Endpoint:
         """Allocate a named multi-device endpoint (paper §3.2.3: devices
-        are replicable and incrementally tunable).  Pass either the knobs
-        or a prebuilt :class:`EndpointSpec`."""
+        are replicable and incrementally tunable).  Pass the knobs (each
+        ``None`` resolves through the attribute chain) or a prebuilt
+        :class:`EndpointSpec` (already resolved at its construction)."""
         if spec is None:
-            spec = EndpointSpec(
-                name=name or f"rank{self.rank}/ep{len(self.endpoints)}",
-                n_devices=n_devices, stripe=stripe, progress=progress)
-        ep = Endpoint(self, spec)
+            explicit = {k: v for k, v in
+                        (("n_devices", n_devices), ("stripe", stripe),
+                         ("progress", progress), ("n_workers", n_workers),
+                         ("worker_burst", worker_burst))
+                        if v is not None}
+            spec, resolved = self._materialize_spec(
+                name or f"rank{self.rank}/ep{len(self.endpoints)}",
+                explicit, size_boundaries)
+        else:
+            # a prebuilt spec pins only the fields its caller set
+            # explicitly ("resource" source); everything it left to
+            # defaults stays tunable through this runtime's attrs layer
+            explicit = {a: spec._resolved_attrs[a] for a in ENDPOINT_ATTRS
+                        if spec._resolved_attrs.source(a) == "resource"}
+            spec, resolved = self._materialize_spec(
+                spec.name, explicit, spec.size_boundaries)
+        ep = Endpoint(self, spec, resolved=resolved)
         self.endpoints.append(ep)
         return ep
+
+    def _materialize_spec(self, name: str, explicit: Dict[str, Any],
+                          size_boundaries) -> tuple:
+        """Resolve endpoint attrs through the full chain and build the
+        concrete spec.  An ambient (env/runtime-layer) n_workers only
+        applies to workers-mode endpoints — it is zeroed elsewhere, and
+        the stored resolution is kept in sync so introspection reports
+        what the endpoint actually runs with; an explicit n_workers on a
+        non-worker endpoint still errors in EndpointSpec."""
+        resolved = _attrs.resolve(ENDPOINT_ATTRS, runtime=self._attr_layer,
+                                  overrides=explicit)
+        vals = {a: resolved[a] for a in ENDPOINT_ATTRS}
+        if vals["progress"] != "workers" and "n_workers" not in explicit:
+            vals["n_workers"] = 0
+            resolved = resolved.merged(_attrs.ResolvedAttrs(
+                {"n_workers": 0},
+                {"n_workers": resolved.source("n_workers")}))
+        spec = EndpointSpec(name=name, size_boundaries=size_boundaries,
+                            **vals)
+        return spec, resolved
 
     def free_endpoint(self, ep: Endpoint) -> None:
         # a live worker pool must be quiesced before its devices go away
@@ -146,11 +238,16 @@ class Runtime:
                      name: str = "engine") -> ProgressEngine:
         return ProgressEngine(self, devices, name=name)
 
-    def alloc_workers(self, n_workers: int = 2) -> ProgressWorkerPool:
+    def alloc_workers(self, n_workers: Optional[int] = None, *,
+                      burst: Optional[int] = None) -> ProgressWorkerPool:
         """A worker pool over this runtime's current devices, driven by
         the shared engine (paper §4.2.3 multithreaded progress).  The
-        caller owns the lifecycle: ``with rt.alloc_workers(4): ...``."""
-        return ProgressWorkerPool.for_runtime(self, n_workers)
+        caller owns the lifecycle: ``with rt.alloc_workers(4): ...``.
+        ``n_workers``/``burst`` resolve through the attribute chain
+        (attrs ``n_workers`` — 0 = the pool default of 2 — and
+        ``worker_burst``)."""
+        n, b = _resolve_worker_args(self._attr_layer, n_workers, burst)
+        return ProgressWorkerPool.for_runtime(self, n, burst=b)
 
     # Completion-object allocation (paper §3.2.5): every alloc_* handle
     # satisfies the unified comp protocol — signal(Status) -> Status,
@@ -158,10 +255,17 @@ class Runtime:
     def alloc_cq(self, capacity: Optional[int] = None, *,
                  threadsafe: bool = False) -> CompletionObject:
         """``threadsafe=True`` returns the LCQ-backed queue (paper §4.1.4
-        FAA array) — required when worker threads signal or drain it."""
+        FAA array) — required when worker threads signal or drain it.
+        ``capacity`` resolves through the attribute chain (attr
+        ``cq_capacity``; 0 = unbounded)."""
+        overrides = {} if capacity is None else {"cq_capacity": capacity}
+        resolved = _attrs.resolve(("cq_capacity",),
+                                  runtime=self._attr_layer,
+                                  overrides=overrides)
+        cap = resolved["cq_capacity"] or None
         if threadsafe:
-            return ThreadSafeCompletionQueue(capacity)
-        return CompletionQueue(capacity)
+            return ThreadSafeCompletionQueue(cap, resolved=resolved)
+        return CompletionQueue(cap, resolved=resolved)
 
     def alloc_handler(self, fn: Callable[[Status], None]) -> CompletionHandler:
         return CompletionHandler(fn)
@@ -231,41 +335,78 @@ progress_x = progress.x
 # cluster
 # ---------------------------------------------------------------------------
 
-class LocalCluster:
+class LocalCluster(_attrs.AttrResource):
     """All ranks in one address space — the paper's thread-mode testbed.
 
     ``link_latency`` (seconds) makes the simulated wire take time: pushed
     messages become drainable only after the latency elapses.  Zero (the
     default) keeps the instant fabric; the multithreaded benchmarks use a
     real latency so completion windows model flow control.
+
+    ``attrs`` is the **runtime-level config layer** of the attribute chain
+    (DESIGN.md §12): a mapping of attribute names to values that every
+    rank's ``alloc_*`` resolves beneath per-call overrides but above
+    ``REPRO_ATTR_*`` env and library defaults.  Explicit ``CommConfig``
+    fields join the same layer (the ``attrs`` mapping wins on conflict);
+    ``fabric_depth``/``link_latency`` constructor args are the cluster's
+    own per-resource overrides for its fabric.
     """
 
     def __init__(self, n_ranks: int, config: Optional[CommConfig] = None,
-                 fabric_depth: int = 4096, link_latency: float = 0.0):
+                 fabric_depth: Optional[int] = None,
+                 link_latency: Optional[float] = None,
+                 attrs: Optional[Mapping[str, Any]] = None):
         self.n_ranks = n_ranks
-        self.config = config or CommConfig()
-        self.fabric = Fabric(n_ranks, depth=fabric_depth,
-                             latency=link_latency)
+        config = config or CommConfig()
+        # the runtime-level layer: explicit config fields, then the attrs
+        # mapping (validated against the registry — unknown names raise)
+        self._attr_layer: Dict[str, Any] = {**config.explicit_attrs(),
+                                            **_attrs._canonicalize(attrs)}
+        for key in self._attr_layer:
+            _attrs.get_spec(key)
+        # rebuild the effective config so field reads
+        # (config.inject_max_bytes, ...) reflect the merged layer
+        config_layer = {f: self._attr_layer[a]
+                        for f, a in _FIELD_TO_ATTR.items()
+                        if a in self._attr_layer}
+        self.config = CommConfig(**config_layer)
+        fabric_overrides = {k: v for k, v in
+                            (("fabric_depth", fabric_depth),
+                             ("link_latency", link_latency))
+                            if v is not None}
+        fr = _attrs.resolve(("fabric_depth", "link_latency"),
+                            runtime=self._attr_layer,
+                            overrides=fabric_overrides)
+        self.fabric = Fabric(n_ranks, depth=fr["fabric_depth"],
+                             latency=fr["link_latency"], resolved=fr)
+        self._init_attrs(
+            fr.merged(_attrs.resolve(RUNTIME_ATTRS,
+                                     runtime=self._attr_layer)))
+        self._export_attr("rank_n", lambda: self.n_ranks)
+        self._export_attr("in_flight", self.fabric.in_flight)
         self.runtimes = [Runtime(r, self) for r in range(n_ranks)]
 
     def __getitem__(self, rank: int) -> Runtime:
         return self.runtimes[rank]
 
-    def alloc_endpoint(self, n_devices: int = 1,
-                       stripe: str = "round_robin",
-                       progress: str = "shared",
-                       name: str = "endpoint") -> List[Endpoint]:
+    def alloc_endpoint(self, n_devices: Optional[int] = None,
+                       stripe: Optional[str] = None,
+                       progress: Optional[str] = None,
+                       name: str = "endpoint",
+                       **overrides) -> List[Endpoint]:
         """Allocate a symmetric endpoint on every rank (device streams are
         matched by index, so peers must replicate the same bundle shape);
         returns the per-rank endpoints, indexed by rank."""
         return [rt.alloc_endpoint(n_devices, stripe, progress,
-                                  name=f"{name}@{rt.rank}")
+                                  name=f"{name}@{rt.rank}", **overrides)
                 for rt in self.runtimes]
 
-    def alloc_workers(self, n_workers: int = 2) -> "ProgressWorkerPool":
+    def alloc_workers(self, n_workers: Optional[int] = None, *,
+                      burst: Optional[int] = None) -> "ProgressWorkerPool":
         """A worker pool spanning every rank's devices — the paper's
         thread-mode testbed with real threads driving all progress."""
-        return ProgressWorkerPool.for_cluster(self, n_workers)
+        n, b = _resolve_worker_args(self._attr_layer, n_workers, burst)
+        return ProgressWorkerPool.for_cluster(self, n, burst=b)
 
     def progress_all(self, rounds: int = 1) -> int:
         """Drive every device of every rank; returns #work events."""
@@ -295,9 +436,11 @@ _g_cluster: Optional[LocalCluster] = None
 
 
 def g_runtime_init(n_ranks: int = 1,
-                   config: Optional[CommConfig] = None) -> LocalCluster:
+                   config: Optional[CommConfig] = None,
+                   attrs: Optional[Mapping[str, Any]] = None
+                   ) -> LocalCluster:
     global _g_cluster
-    _g_cluster = LocalCluster(n_ranks, config)
+    _g_cluster = LocalCluster(n_ranks, config, attrs=attrs)
     return _g_cluster
 
 

@@ -1,3 +1,5 @@
 """Distributed layer: comm abstraction, sharding rules, pipeline, and
 resilience features (compression, elastic resharding, stragglers)."""
 from .comm import Comm, local_comm
+
+__all__ = ["Comm", "local_comm"]

@@ -30,6 +30,7 @@ from jax import lax
 
 from repro.compat import axis_size
 
+from repro.core import attrs as _attrs
 from repro.core import collectives as C
 from repro.core.modes import CommConfig, CommMode
 from repro.core.progress import EndpointSpec
@@ -75,6 +76,32 @@ class Comm:
 
     def with_endpoint(self, spec: EndpointSpec) -> "Comm":
         return dataclasses.replace(self, endpoint=spec)
+
+    # -- attribute introspection (DESIGN.md §12): the Comm is a view over
+    #    the effective config its collectives actually run with ----------
+    def get_attr(self, name: str):
+        """Query one attribute of the *effective* config (endpoint spec
+        layered over the CommConfig), plus the discovered mesh widths
+        ``tp``/``dp``.  Endpoint attrs (``stripe``/``progress``/
+        ``n_devices``/...) resolve against the attached spec."""
+        name = _attrs.canonical_name(name)
+        if name == "tp":
+            return self.tp
+        if name == "dp":
+            return self.dp
+        if self.endpoint is not None:
+            try:
+                return self.endpoint.get_attr(name)
+            except _attrs.AttrError:
+                pass                       # not an endpoint attr: fall back
+        return self.cfg.get_attr(name)
+
+    @property
+    def attrs(self) -> dict:
+        out = dict(self.cfg.attrs)
+        if self.endpoint is not None:
+            out.update(self.endpoint.attrs)
+        return out
 
     # -- axis sizes (1 when unbound) ----------------------------------------
     @property

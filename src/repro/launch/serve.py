@@ -41,6 +41,11 @@ def main():
     ap.add_argument("--drain-workers", type=int, default=0,
                     help="drain the result CQ from N worker threads "
                          "(thread-safe LCQ-backed queue, DESIGN.md §10)")
+    ap.add_argument("--attr", action="append", default=[],
+                    metavar="NAME=VALUE",
+                    help="runtime-level attribute override for the "
+                         "transport cluster (repeatable; e.g. "
+                         "--attr rdv_threshold=4096 — DESIGN.md §12)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -64,9 +69,21 @@ def main():
 
     alloc = PagedKVAllocator(n_pages=256, page_size=16)
     transport = None
+    if args.attr and not args.transport:
+        raise SystemExit("--attr tunes the transport cluster; it needs "
+                         "--transport (without it there is no host "
+                         "runtime to configure)")
     if args.transport:
-        transport = ServeTransport(LocalCluster(2),
+        from repro.core.attrs import parse_attr_args
+        cluster = LocalCluster(2, attrs=parse_attr_args(args.attr))
+        transport = ServeTransport(cluster,
                                    n_prefill=args.prefill_devices)
+        echo = cluster.attrs_echo()
+        overridden = {k: v for k, v in echo["values"].items()
+                      if echo["sources"].get(k) not in (None, "default",
+                                                        "discovered")}
+        if overridden:
+            print(f"[serve] transport attrs (non-default): {overridden}")
     sched = ServeScheduler(decode_fn, max_batch=args.max_batch,
                            allocator=alloc, transport=transport)
     if args.drain_workers > 0 and transport is not None:

@@ -53,6 +53,11 @@ def main():
     ap.add_argument("--mesh", default="",
                     help="e.g. 2x4 => (data=2, model=4); empty = local")
     ap.add_argument("--mode", default="lci_dedicated")
+    ap.add_argument("--attr", action="append", default=[],
+                    metavar="NAME=VALUE",
+                    help="runtime-level attribute override for the comm "
+                         "config (repeatable; e.g. --attr n_channels=8 "
+                         "— DESIGN.md §12)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--metrics-csv", default="")
@@ -81,7 +86,20 @@ def main():
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_mesh((d, m), ("data", "model"))
-        comm = Comm(CommConfig(mode=parse_mode(args.mode)),
+        from repro.core.attrs import parse_attr_args
+        from repro.core.modes import _FIELD_TO_ATTR
+        attr_over = parse_attr_args(args.attr)
+        fields = {f: attr_over[a] for f, a in _FIELD_TO_ATTR.items()
+                  if a in attr_over}
+        # the in-graph trainer only consumes CommConfig-mapped attrs;
+        # reject the rest rather than silently dropping a valid name
+        unused = set(attr_over) - set(_FIELD_TO_ATTR.values())
+        if unused:
+            raise SystemExit(
+                f"--attr {sorted(unused)} are host-runtime attributes; "
+                f"the trainer's comm config accepts "
+                f"{sorted(_FIELD_TO_ATTR.values())}")
+        comm = Comm(CommConfig(**{"mode": parse_mode(args.mode), **fields}),
                     model_axis="model", data_axis="data",
                     fsdp=cfg.fsdp_params)
         step_inner = make_train_step(model, specs, opt, comm)
@@ -101,6 +119,9 @@ def main():
             out_specs=(sspecs, {k: P() for k in mkeys}), check_vma=False),
             donate_argnums=(0,))
     else:
+        if args.attr:
+            raise SystemExit("--attr tunes the mesh comm config; it needs "
+                             "--mesh (single-device runs have no comm)")
         step_fn = jax.jit(make_train_step(model, specs, opt),
                           donate_argnums=(0,))
 

@@ -2,3 +2,5 @@
 VLM cross-attention, Whisper encoder-decoder — all comm-parameterized."""
 from .common import ModelConfig, ParamSpec
 # registry imported lazily (populated as model families land)
+
+__all__ = ["ModelConfig", "ParamSpec"]

@@ -1,3 +1,7 @@
 from .adamw import AdamWConfig, OptState, adamw_init, adamw_update
 from .schedules import cosine_schedule, linear_warmup
 from .grad_sync import grad_sync, global_norm, clip_by_global_norm
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "linear_warmup", "grad_sync", "global_norm",
+           "clip_by_global_norm"]

@@ -2,3 +2,7 @@ from .engine import (DecodeCache, init_cache, make_serve_step,
                      make_prefill_step, cache_pspecs)
 from .kv_cache import PagedKVAllocator
 from .scheduler import Request, ResultDrain, ServeScheduler, ServeTransport
+
+__all__ = ["DecodeCache", "init_cache", "make_serve_step",
+           "make_prefill_step", "cache_pspecs", "PagedKVAllocator",
+           "Request", "ResultDrain", "ServeScheduler", "ServeTransport"]

@@ -121,6 +121,15 @@ class ServeTransport:
             "decode": [ep.counters() for ep in self.decode],
         }
 
+    @property
+    def attrs(self) -> dict:
+        """Queryable endpoint attributes per side (unified get_attr
+        surface, DESIGN.md §12): what the transport actually runs with."""
+        return {
+            "prefill": self.prefill[0].attrs,
+            "decode": self.decode[0].attrs,
+        }
+
 
 @dataclasses.dataclass
 class Request:

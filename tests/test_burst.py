@@ -512,11 +512,16 @@ class TestBurstProgress:
         assert _drain_tags(cq) == list(range(10))
 
     def test_worker_pool_burst_knob(self):
-        from repro.core import ProgressWorkerPool
+        from repro.core import ProgressWorkerPool, resolve_one
         cl = LocalCluster(1)
         pool = ProgressWorkerPool.for_runtime(cl[0], n_workers=1)
-        assert pool.burst == 64
-        assert pool.counters()["burst"] == 64
+        # the default resolves through the attribute chain (library
+        # default 64, REPRO_ATTR_WORKER_BURST honored)
+        assert pool.burst == resolve_one("worker_burst")
+        assert pool.counters()["burst"] == pool.burst
+        explicit = ProgressWorkerPool.for_runtime(cl[0], n_workers=1,
+                                                  burst=16)
+        assert explicit.burst == 16
         with pytest.raises(Exception):
             ProgressWorkerPool([(cl[0].engine, cl[0].default_device)],
                                burst=-1)

@@ -1,0 +1,73 @@
+"""Public-API drift guard: every package ``__init__`` exports exactly
+what it imports (satellite of the attribute-system PR).
+
+Rules per ``repro`` package ``__init__.py`` (skipping empty ones):
+
+* it declares ``__all__``;
+* every symbol it re-exports with a *relative* ``from .x import y`` is
+  listed in ``__all__`` (an import without an export is drift one way);
+* every name in ``__all__`` resolves to a real module attribute (an
+  export without an import/definition is drift the other way).
+"""
+import ast
+import glob
+import importlib
+import os
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_INITS = sorted(
+    p for p in glob.glob(os.path.join(SRC, "repro", "**", "__init__.py"),
+                         recursive=True)
+    if open(p).read().strip()
+    and not open(p).read().lstrip().startswith("#")   # comment-only stub
+)
+
+
+def _module_name(path: str) -> str:
+    rel = os.path.relpath(os.path.dirname(path), SRC)
+    return rel.replace(os.sep, ".")
+
+
+def _parse(path: str):
+    tree = ast.parse(open(path).read())
+    imported = set()
+    for node in tree.body:
+        if isinstance(node, ast.ImportFrom) and node.level > 0:
+            for alias in node.names:
+                imported.add(alias.asname or alias.name)
+    exported = None
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                getattr(t, "id", "") == "__all__" for t in node.targets):
+            exported = {ast.literal_eval(e) for e in node.value.elts}
+    return imported, exported
+
+
+@pytest.mark.parametrize("path", _INITS, ids=_module_name)
+def test_all_matches_imports(path):
+    imported, exported = _parse(path)
+    assert exported is not None, \
+        f"{_module_name(path)} has no __all__ declaration"
+    missing = imported - exported
+    assert not missing, (
+        f"{_module_name(path)} imports {sorted(missing)} without "
+        f"exporting them in __all__")
+
+
+@pytest.mark.parametrize("path", _INITS, ids=_module_name)
+def test_all_names_resolve(path):
+    _, exported = _parse(path)
+    mod = importlib.import_module(_module_name(path))
+    dangling = [n for n in sorted(exported or ()) if not hasattr(mod, n)]
+    assert not dangling, (
+        f"{_module_name(path)} exports {dangling} in __all__ but the "
+        f"module has no such attributes")
+
+
+def test_core_all_is_sorted_within_groups():
+    """Cheap hygiene: no duplicates anywhere in repro.core.__all__."""
+    import repro.core as core
+    assert len(core.__all__) == len(set(core.__all__))
