@@ -70,21 +70,25 @@ def _run_lanes(n_lanes: int, dedicated: bool, iters: int) -> float:
 
 
 def _run_endpoint(width: int, stripe: str, iters: int,
-                  burst: int = 32) -> dict:
+                  burst: int = 32, wire_bf16: bool = False) -> dict:
     """One endpoint-width cell: post through a striped Endpoint with
     burst doorbells (``post_am_many``), report rate + per-device
     counters.  ``burst=1`` falls back to scalar posting (the pre-batched
-    data plane, kept measurable for A/B runs)."""
+    data plane, kept measurable for A/B runs).  ``wire_bf16`` posts
+    float32 payloads of the same byte size with the bf16 wire
+    compression attr on — the fused copy halves the wire bytes."""
     cl = LocalCluster(2, attrs={"eager_max_bytes": 64,
                                 "packets_per_lane": 64,
-                                "n_channels": width},
+                                "n_channels": width,
+                                "wire_bf16": wire_bf16},
                       fabric_depth=1 << 16)
     eps = cl.alloc_endpoint(n_devices=width, stripe=stripe,
                             progress="dedicated", name="sweep")
     ep0, ep1 = eps
     cq = cl[1].alloc_cq()
     rc = cl[1].register_rcomp(cq)
-    payload = np.zeros(PAPER.msg_rate_size, np.uint8)
+    payload = (np.zeros(PAPER.msg_rate_size // 4, np.float32) if wire_bf16
+               else np.zeros(PAPER.msg_rate_size, np.uint8))
     bufs = [payload] * burst
 
     t0 = time.perf_counter()
@@ -111,7 +115,8 @@ def _run_endpoint(width: int, stripe: str, iters: int,
     counters = ep0.counters()
     return {
         "bench": "message_rate",
-        "case": f"endpoint_width={width}/{stripe}",
+        "case": f"endpoint_width={width}/{stripe}"
+                + ("/bf16" if wire_bf16 else ""),
         "us_per_call": dt / iters * 1e6,
         "derived": f"{iters / dt / 1e3:.1f} kmsg/s",
         "width": width,
@@ -154,12 +159,16 @@ def run_endpoint_sweep(max_width: int, iters: int,
     widths = [w for w in (1, 2, 4, 8, 16) if w <= max_width]
     if widths[-1] != max_width:
         widths.append(max_width)
-    runs: dict = {w: [] for w in widths}
+    # widths + one bf16-wire cell at the widest width (satellite of the
+    # fused-doorbell PR: the wire_bf16 attr must stay measured, not dead)
+    cells = [(w, False) for w in widths] + [(max_width, True)]
+    runs: dict = {c: [] for c in cells}
     for _ in range(max(1, repeats)):
-        for w in widths:
-            runs[w].append(_run_endpoint(w, stripe, iters, burst))
-    return [sorted(runs[w], key=lambda r: r["us_per_call"])
-            [len(runs[w]) // 2] for w in widths]
+        for w, bf16 in cells:
+            runs[(w, bf16)].append(
+                _run_endpoint(w, stripe, iters, burst, wire_bf16=bf16))
+    return [sorted(runs[c], key=lambda r: r["us_per_call"])
+            [len(runs[c]) // 2] for c in cells]
 
 
 def main() -> None:
@@ -183,14 +192,16 @@ def main() -> None:
 
     rows = run_endpoint_sweep(args.devices, iters, args.stripe, args.burst,
                               args.repeats)
-    # one echo block per document: the widest cell's resolved attrs (the
-    # per-cell difference — n_channels/width — is already a row field)
-    resolved_attrs = rows[-1]["_echo"]
+    # one echo block per document: the widest plain cell's resolved
+    # attrs (per-cell differences — n_channels/width, the bf16 cell's
+    # wire_bf16 — are already encoded in the row's case name)
+    plain = [r for r in rows if not r["case"].endswith("/bf16")]
+    resolved_attrs = plain[-1]["_echo"]
     for r in rows:
         r.pop("_echo", None)
-        print(f"{r['case']:28s} {r['us_per_call']:8.3f} us/msg  "
+        print(f"{r['case']:33s} {r['us_per_call']:8.3f} us/msg  "
               f"{r['derived']:>14s}  pushes/device={r['device_pushes']}")
-    widest = rows[-1]
+    widest = plain[-1]
     if args.stripe == "round_robin":
         # by_peer/by_size legitimately concentrate homogeneous traffic on
         # one device; only round-robin must touch the whole bundle

@@ -44,7 +44,8 @@ from repro.core import (CommDesc, CommKind, LocalCluster,
 DEFAULT_PER_THREAD = 2000
 DEFAULT_WINDOW = 16
 DEFAULT_LATENCY = 1e-3          # 1 ms simulated wire
-_IDLE_NAP = 5e-5
+_IDLE_NAP = 5e-5                # first idle nap; doubles per idle sweep
+_IDLE_NAP_CAP = 4 * _IDLE_NAP   # spin-then-sleep backoff ceiling
 
 
 def _run_cell(n_threads: int, per_thread: int, window: int,
@@ -84,9 +85,13 @@ def _run_cell_inner(n_threads: int, per_thread: int, window: int,
     barrier = threading.Barrier(n_threads + 1)
     errors: List[BaseException] = []
 
+    psize = payload.nbytes
+
     def poster(tid: int) -> None:
         dev, cq, rc = devs0[tid], cqs[tid], rcs[tid]
-        rot, posted, comped = tid, 0, 0
+        rot, posted, comped, idle = tid, 0, 0, 0
+        nap = _IDLE_NAP
+        n_targets = len(targets)
         try:
             barrier.wait()
             while comped < per_thread:
@@ -98,23 +103,39 @@ def _run_cell_inner(n_threads: int, per_thread: int, window: int,
                     # `room` scalar posts each paying a pool-lane lock
                     # round-trip (paper §4.3)
                     sts = r0.post_many(
-                        [CommDesc(CommKind.AM, 1, payload, remote_comp=rc)
+                        [CommDesc(CommKind.AM, 1, payload, size=psize,
+                                  remote_comp=rc)
                          for _ in range(room)], device=dev)
-                    accepted = sum(1 for s in sts if not s.is_retry())
-                    posted += accepted
-                    if accepted == room:
+                    # acceptance is a prefix (post_many contract): a
+                    # clean last status means the whole burst landed
+                    if not sts[-1].is_retry():
+                        posted += room
                         continue
+                    posted += next(i for i, s in enumerate(sts)
+                                   if s.is_retry())
                 # window full (or pool/fabric retry): drive progress on
                 # the next device; a failed try-lock just moves on
-                eng, d = targets[rot % len(targets)]
+                eng, d = targets[rot % n_targets]
                 rot += 1
                 did = eng.try_progress(d)
-                got = False
-                while not cq.pop().is_retry():
-                    comped += 1
-                    got = True
-                if not got and not did:
-                    time.sleep(_IDLE_NAP)     # wire time: let peers run
+                # burst drain: the whole published run comes out in one
+                # head-CAS claim (LCQ.pop_many) instead of a CAS per pop
+                got = cq.pop_many()
+                comped += len(got)
+                if got or did:
+                    idle = 0
+                    nap = _IDLE_NAP
+                elif (idle := idle + 1) >= n_targets:
+                    # every target idle for a full sweep: genuinely
+                    # waiting on the wire — yield with spin-then-sleep
+                    # backoff.  (Napping per idle *target* would sleep
+                    # n_targets times per sweep and stretch delivery by
+                    # the same factor; napping flat-rate keeps every
+                    # waiting thread polling at full tilt, which under
+                    # the GIL taxes the threads that DO have work.)
+                    idle = 0
+                    time.sleep(nap)
+                    nap = min(nap * 2, _IDLE_NAP_CAP)
         except BaseException as e:            # surfaced after join
             errors.append(e)
 

@@ -4,13 +4,26 @@ Reads benchmarks/artifacts/dryrun/*.json and prints, per (arch × shape ×
 mesh × mode): the three roofline terms (compute / memory / collective
 seconds on TPU v5e constants), the dominant bottleneck, MODEL_FLOPS /
 HLO_FLOPs, and the roofline fraction.  ``python -m benchmarks.roofline``.
+
+The **message-rate roofline** (fused-doorbell PR, DESIGN.md §13) places
+the measured ``BENCH_message_rate`` result against the *simulated wire
+bound* — the per-message cost of the bare fabric (descriptor + queue
+ops, no posting/matching/completion software) — and reports what
+fraction of that bound the fused data plane reaches.  ``--json`` writes
+the row(s) to a BENCH document.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
+import time
 from typing import Dict, List, Optional
+
+if __package__ in (None, ""):                 # `python benchmarks/...py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
 
@@ -69,5 +82,92 @@ def run(quick: bool = True) -> List[dict]:
     return rows
 
 
-if __name__ == "__main__":
+def simulated_wire_bound(iters: int = 30000, payload_bytes: int = 8,
+                         burst: int = 1) -> float:
+    """us/msg through the bare simulated wire — descriptor construction
+    + fabric push + drain, nothing else.  ``burst=1`` is the scalar
+    plane's floor (one WireMsg per message); ``burst=K`` the fused
+    plane's (one packed descriptor per K-row doorbell, DESIGN.md §13).
+    The posting software can approach these but not beat them."""
+    import numpy as np
+    from repro.core.progress.fabric import (Fabric, PackedBurst, WireKind,
+                                            WireMsg)
+
+    fab = Fabric(2, depth=1 << 16)
+    payload = np.zeros(payload_bytes, np.uint8)
+    data = np.broadcast_to(payload, (burst, payload_bytes))
+    sizes = np.full(burst, payload_bytes, np.int64)
+    tags = [0] * burst
+    pushed = 0
+    t0 = time.perf_counter()
+    while pushed < iters:
+        if burst == 1:
+            for _ in range(64):
+                fab.try_push(WireMsg(WireKind.EAGER_AM, src=0, dst=1,
+                                     payload=payload, size=payload_bytes,
+                                     rcomp=0))
+            fab.drain(1, 0)
+            pushed += 64
+        else:
+            pb = PackedBurst(data, sizes, tags, burst)
+            fab.push_packed(WireMsg(WireKind.EAGER_PACKED_AM, src=0,
+                                    dst=1, payload=pb,
+                                    size=int(data.nbytes), rcomp=0))
+            fab.drain(1, 0)
+            pushed += burst
+    return (time.perf_counter() - t0) / pushed * 1e6
+
+
+def message_rate_vs_wire(bench_path: str = "BENCH_message_rate.json"
+                         ) -> Optional[dict]:
+    """The fused data plane's fraction of the simulated wire bound,
+    taken from the committed (or freshly written) message-rate BENCH
+    document's widest plain cell."""
+    if not os.path.exists(bench_path):
+        return None
+    doc = json.load(open(bench_path))
+    plain = [r for r in doc.get("rows", [])
+             if not r["case"].endswith("/bf16")]
+    if not plain:
+        return None
+    fused = plain[-1]                         # widest endpoint cell
+    burst = int(doc.get("burst", 1))
+    bound = simulated_wire_bound(burst=max(1, burst))
+    scalar_bound = simulated_wire_bound(burst=1)
+    frac = bound / fused["us_per_call"] if fused["us_per_call"] else 0.0
+    return {
+        "bench": "roofline",
+        "case": f"message_rate/{fused['case']}",
+        "us_per_call": fused["us_per_call"],
+        "wire_bound_us": bound,
+        "scalar_wire_bound_us": scalar_bound,
+        "fraction_of_wire_bound": frac,
+        "derived": f"packed wire bound {bound:.3f} us/msg -> "
+                   f"{frac * 100:.0f}% of bound "
+                   f"(scalar wire floor {scalar_bound:.3f})",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default="BENCH_message_rate.json",
+                    help="message-rate BENCH document to place against "
+                         "the wire bound")
+    ap.add_argument("--json", default="",
+                    help="write the roofline rows to this BENCH-JSON "
+                         "('' prints only)")
+    args = ap.parse_args()
     print(table())
+    row = message_rate_vs_wire(args.bench)
+    if row is not None:
+        print(f"\n{row['case']}: {row['us_per_call']:.3f} us/msg, "
+              f"{row['derived']}")
+    if args.json:
+        rows = ([row] if row is not None else []) + run()
+        with open(args.json, "w") as f:
+            json.dump({"bench": "roofline", "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

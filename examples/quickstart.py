@@ -14,7 +14,9 @@ Walks the paper's core concepts end to end on CPU:
   8. the unified attribute system: layered overrides + get_attr
      introspection on every resource, with the old-kwarg -> attr
      migration table (DESIGN.md §12)
-  9. an in-graph ring collective under shard_map (the TPU adaptation)
+  9. fused doorbells: packed single-descriptor bursts + the bf16 wire
+     compression toggle (DESIGN.md §13)
+  10. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -195,7 +197,32 @@ def main():
           f"REPRO_ATTR_RDV_THRESHOLD=64 python examples/quickstart.py "
           f"to flip bulk sends to rendezvous")
 
-    # -- 9. the in-graph layer: ring collectives (run under shard_map on
+    # -- 9. fused doorbells (DESIGN.md §13): eager bursts of >=
+    #       fused_min_burst uniform ops collapse into ONE packed wire
+    #       descriptor (one stage-copy, one push, one matching probe),
+    #       and wire_bf16 folds f32->bf16 wire compression into that
+    #       same staging copy — delivered payloads come back as f32. --
+    fcl = LocalCluster(2, attrs={"eager_max_bytes": 64,
+                                 "wire_bf16": True})
+    feps = fcl.alloc_endpoint(n_devices=1, name="fused")
+    print(f"attrs: doorbell_fused={fcl[0].get_attr('doorbell_fused')} "
+          f"fused_min_burst={fcl[0].get_attr('fused_min_burst')} "
+          f"wire_bf16={fcl[0].get_attr('wire_bf16')}")
+    fcq = fcl[1].alloc_cq()
+    frc = fcl[1].register_rcomp(fcq)
+    fbufs = [np.linspace(0, 1, 4, dtype=np.float32)] * 8
+    fsts = feps[0].post_am_many(1, fbufs, frc)     # one fused doorbell
+    feps[1].progress()
+    delivered = 0
+    while fcq.pop().is_done():
+        delivered += 1
+    print(f"fused doorbell: {sum(1 for s in fsts if s.is_done())} posted "
+          f"-> {delivered} delivered as f32 over a bf16 wire "
+          f"({fcl[0].fabric.pushes} rows on 1 descriptor); flip it off "
+          f"with attrs={{'doorbell_fused': False}} or "
+          f"REPRO_ATTR_DOORBELL_FUSED=0")
+
+    # -- 10. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

@@ -19,18 +19,21 @@ from .completion import (CompletionHandler, CompletionObject, CompletionQueue,
 from .graph import CompletionGraph
 from .matching import (HostMatchingEngine, MatchKind, MatchTable,
                        MatchingPolicy, encode_key, init_table, insert,
-                       insert_batch, make_key, pending_count)
+                       insert_batch, make_key, pending_count, probe,
+                       probe_batch)
 from .modes import CommConfig, CommMode, parse_mode
 from .off import OffBuilder, off
-from .packet_pool import (HostPacketPool, SlotPool, free_count, init_pool,
-                          pool_get, pool_get_n, pool_put)
+from .packet_pool import (HostPacketPool, SlotPool, free_count,
+                          init_buffers, init_pool, pool_get,
+                          pool_get_copy_n, pool_get_n, pool_put)
 from .post import (CommDesc, CommKind, Direction, PostBatch, classify,
                    post_am, post_am_x, post_comm, post_comm_x, post_get,
                    post_get_x, post_many, post_put, post_put_x, post_recv,
                    post_recv_x, post_send, post_send_x)
 from .protocol import Protocol, ProtocolStats, select_protocol
 from .progress import (Endpoint, EndpointSpec, Fabric, MemoryRegion,
-                       ProgressEngine, RendezvousManager, WireKind, WireMsg)
+                       PackedBurst, ProgressEngine, RendezvousManager,
+                       WireKind, WireMsg, pack_payloads)
 from .runtime import (LocalCluster, Runtime, g_runtime, g_runtime_fina,
                       g_runtime_init, progress, progress_x)
 from .status import (ErrorCode, ErrorKind, FatalError, Status, done, posted,
@@ -61,6 +64,9 @@ __all__ = [
     "post_am_x", "post_put", "post_put_x", "post_get", "post_get_x",
     # burst posting (paper §4.3 batched data plane)
     "CommDesc", "PostBatch", "post_many", "pool_get_n",
+    # fused doorbells (DESIGN.md §13)
+    "PackedBurst", "pack_payloads", "pool_get_copy_n", "init_buffers",
+    "probe", "probe_batch",
     # runtime + progress subsystem
     "Fabric", "LocalCluster", "MemoryRegion", "Runtime", "WireKind",
     "WireMsg", "g_runtime", "g_runtime_fina", "g_runtime_init", "progress",

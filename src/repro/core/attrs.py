@@ -212,7 +212,19 @@ register_attr("rdv_threshold", int, 2 * 1024 * 1024, minimum=0,
                   "above this the zero-copy rendezvous protocol engages")
 register_attr("wire_bf16", bool, False,
               resources=("runtime", "cluster"),
-              doc="cast reduce-ring accumulators to bf16 per hop")
+              doc="compress float32 payloads to bf16 on the wire (fused "
+                  "doorbell copy; delivered payloads are restored to f32) "
+                  "and cast reduce-ring accumulators to bf16 per hop")
+register_attr("doorbell_fused", bool, True,
+              resources=("runtime", "cluster"),
+              doc="fuse eager doorbells into packed single-descriptor "
+                  "bursts (one stage-copy-push per doorbell); off = the "
+                  "per-op scalar-burst data plane (DESIGN.md §13)")
+register_attr("fused_min_burst", int, 4, minimum=2,
+              resources=("runtime", "cluster"),
+              doc="smallest run of uniform eager ops worth packing into "
+                  "a fused doorbell; shorter runs ride the scalar-burst "
+                  "path")
 register_attr("matching_buckets", int, 65536, minimum=1,
               resources=("runtime", "cluster", "matching"),
               doc="matching-engine hash buckets (paper §4.1.3 default)")

@@ -35,6 +35,11 @@ import jax.numpy as jnp
 from . import attrs as _attrs
 from .status import ErrorCode, FatalError, Status, done, retry
 
+# shared signal ack: Status is immutable and signalers only branch on
+# is_retry()/code, so one object serves every accepted delivery (statuses
+# are the highest-volume objects on the data plane — see status.Status)
+_ACCEPTED = done()
+
 
 def _as_progress_fn(source) -> Optional[Callable[[], Any]]:
     """Normalize anything that can drive progress into a 0-arg callable.
@@ -168,7 +173,7 @@ class CompletionQueue(CompletionObject):
             return retry(ErrorCode.RETRY_QUEUE_FULL)
         self._q.append(status)
         self.pushes += 1
-        return done()
+        return _ACCEPTED
 
     def signal_many(self, statuses: List[Status]) -> List[Status]:
         """Bulk enqueue: one capacity check + one deque extend for the
@@ -176,9 +181,9 @@ class CompletionQueue(CompletionObject):
         room = (len(statuses) if self.capacity is None
                 else max(0, self.capacity - len(self._q)))
         n = min(room, len(statuses))
-        self._q.extend(statuses[:n])
+        self._q.extend(statuses if n == len(statuses) else statuses[:n])
         self.pushes += n
-        return ([done()] * n
+        return ([_ACCEPTED] * n
                 + [retry(ErrorCode.RETRY_QUEUE_FULL)] * (len(statuses) - n))
 
     def pop(self) -> Status:

@@ -33,7 +33,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
-from typing import Any, Callable, Hashable, Optional
+from typing import Any, Callable, Hashable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -147,6 +147,53 @@ class HostMatchingEngine(_attrs.AttrResource):
         self._matches.fetch_add(1)
         self._fast_matches.fetch_add(1)
         return value
+
+    def match_now_n(self, key: Hashable, kind: MatchKind, n: int) -> list:
+        """Burst probe for ONE key (a fused doorbell of uniform match
+        keys): pop up to ``n`` pre-posted complements with a single
+        bucket lookup and NEVER store.  Each pop is the same GIL-atomic
+        ``popleft`` as :meth:`match_now`, so racing fast-path deliveries
+        still never double-match one entry.  Returns the matched values
+        in FIFO order (possibly fewer than ``n``, possibly empty) — the
+        caller falls back to the locked :meth:`insert` per missing row."""
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            return []
+        dq = bucket[kind.complement]
+        out: list = []
+        try:
+            for _ in range(n):
+                out.append(dq.popleft())
+        except IndexError:
+            pass
+        if out:
+            self._matches.fetch_add(len(out))
+            self._fast_matches.fetch_add(len(out))
+        return out
+
+    def match_now_burst(self, keys: Sequence[Hashable], kind: MatchKind
+                        ) -> list:
+        """Vectorized probe for a whole burst's match keys (paper §4.3 at
+        the matching engine): one pass groups the keys, then each unique
+        key pays a single bucket lookup (:meth:`match_now_n`) for all its
+        rows — duplicate keys in one doorbell cost one probe instead of
+        K.  Returns values aligned with ``keys``; ``None`` rows had no
+        pre-posted complement and fall back to the per-bucket locked
+        path."""
+        out: list = [None] * len(keys)
+        if not self._buckets:
+            return out
+        groups: dict = {}
+        for i, k in enumerate(keys):
+            g = groups.get(k)
+            if g is None:
+                groups[k] = [i]
+            else:
+                g.append(i)
+        for k, idxs in groups.items():
+            for i, v in zip(idxs, self.match_now_n(k, kind, len(idxs))):
+                out[i] = v
+        return out
 
     def insert(self, key: Hashable, kind: MatchKind, value: Any):
         self._inserts.fetch_add(1)
@@ -322,6 +369,66 @@ def _insert_dyn(table: MatchTable, key, kind, val):
                        sel(table.vals, new_val))
     status = jnp.where(any_match, 1, jnp.where(any_empty, 0, 2))
     return table, matched_val, status
+
+
+def probe(table: MatchTable, key: jax.Array, kind: int):
+    """Functional ``match_now``: pop a complementary entry if one is
+    already stored — NEVER store.  Returns ``(table', matched_val,
+    hit)``; ``matched_val == -1`` and ``hit == False`` when no
+    complement is present (the caller falls back to :func:`insert`)."""
+    n_buckets, _ = table.keys.shape
+    b = _hash_key(key, n_buckets)
+    row_keys = table.keys[b]
+    row_kinds = table.kinds[b]
+    comp = jnp.int32(MatchKind(kind).complement)
+
+    is_match = (row_keys == key) & (row_kinds == comp)
+    any_match = jnp.any(is_match)
+    slot = jnp.argmax(is_match)
+    matched_val = jnp.where(any_match, table.vals[b, slot], -1)
+
+    def clear(arr, empty):
+        old = arr[b, slot]
+        return arr.at[b, slot].set(jnp.where(any_match,
+                                             jnp.asarray(empty, arr.dtype),
+                                             old))
+
+    table = MatchTable(clear(table.keys, 0), clear(table.kinds, 0),
+                       clear(table.vals, -1))
+    return table, matched_val, any_match
+
+
+def probe_batch(table: MatchTable, keys, kind: int):
+    """Vectorized burst probe — the fused doorbell's one hashed-array
+    pass: every key is hashed and its bucket row compared in a single
+    vectorized gather, producing a per-key candidate mask; the actual
+    pops then resolve sequentially (scan), because duplicate keys in one
+    burst must each pop a *distinct* pre-posted entry — the same
+    exactness argument as :func:`insert_batch`.  Returns ``(table',
+    matched_vals, hits)`` aligned with ``keys``."""
+    n_buckets, _ = table.keys.shape
+    keys = jnp.asarray(keys, jnp.int32)
+    comp = jnp.int32(MatchKind(kind).complement)
+    # the one hashed-array pass: (k,) bucket indices, (k, cap) gathered
+    # rows, one vectorized candidate mask over the whole burst
+    b = _hash_key(keys, n_buckets)
+    candidates = jnp.any((table.keys[b] == keys[:, None])
+                         & (table.kinds[b] == comp), axis=1)
+
+    def step(tab, kc):
+        key, cand = kc
+
+        def hit(t):
+            return probe(t, key, int(kind))
+
+        def miss(t):
+            return t, jnp.int32(-1), jnp.asarray(False)
+
+        tab, val, ok = jax.lax.cond(cand, hit, miss, tab)
+        return tab, (val, ok)
+
+    table, (vals, hits) = jax.lax.scan(step, table, (keys, candidates))
+    return table, vals, hits
 
 
 def pending_count(table: MatchTable) -> jax.Array:

@@ -358,6 +358,44 @@ def pool_get_n(pool: SlotPool, lane, n: int, steal_seed
     return pool, ids, got, status
 
 
+def init_buffers(n_packets: int, packet_bytes: int) -> jax.Array:
+    """Backing byte table for the functional pool — the in-graph mirror
+    of :attr:`HostPacketPool.buffer_of` (one fixed-size pre-registered
+    buffer per packet id)."""
+    return jnp.zeros((n_packets, packet_bytes), jnp.uint8)
+
+
+def pool_get_copy_n(pool: SlotPool, buf: jax.Array, lane, payload,
+                    steal_seed) -> tuple[SlotPool, jax.Array, jax.Array,
+                                         jax.Array, jax.Array]:
+    """Fused allocate-and-stage (DESIGN.md §13): one dispatch pops a
+    burst of packet slots AND scatters the burst's payload bytes into
+    the pool's backing buffers — the doorbell's stage-copy without a
+    host round-trip between "get packets" and "write payloads".
+
+    ``payload`` is ``(n, row_bytes)`` uint8 (one packed wire image, e.g.
+    from the doorbell stage-copy kernel); row ``i`` lands in
+    ``buf[ids[i]]`` (zero-padded to the packet width).  On a short grab
+    only the first ``got`` rows are written — the unallocated tail
+    touches nothing, mirroring the host pool's prefix-accept split.
+    Returns ``(pool', buf', ids, got, status)`` with the same id/status
+    contract as :func:`pool_get_n`.
+    """
+    n, row_bytes = payload.shape
+    n_packets, packet_bytes = buf.shape
+    if row_bytes > packet_bytes:
+        raise ValueError(f"pool_get_copy_n: payload rows of {row_bytes} "
+                         f"bytes exceed packet_bytes={packet_bytes}")
+    pool, ids, got, status = pool_get_n(pool, lane, n, steal_seed)
+    rows = payload.astype(jnp.uint8)
+    if row_bytes < packet_bytes:
+        rows = jnp.pad(rows, ((0, 0), (0, packet_bytes - row_bytes)))
+    # unallocated rows (id == -1) scatter out of bounds and are dropped
+    idx = jnp.where(ids >= 0, ids, jnp.int32(n_packets))
+    buf = buf.at[idx].set(rows, mode="drop")
+    return pool, buf, ids, got, status
+
+
 def pool_put(pool: SlotPool, lane, packet_id) -> tuple[SlotPool, jax.Array]:
     """Functional ``put``: push to stack top. Returns (pool', status)."""
     lane = jnp.asarray(lane, jnp.int32)

@@ -14,13 +14,15 @@ Layout (each file one concern; the paper's Figure-1 chain in engine.py):
 from .endpoint import (ENDPOINT_ATTRS, PROGRESS_POLICIES,
                        STRIPE_POLICIES, Endpoint, EndpointSpec)
 from .engine import ProgressEngine
-from .fabric import (Fabric, MemoryRegion, PendingOp, WireKind, WireMsg,
-                     as_bytes_view, next_op_id, payload_to_bytes,
+from .fabric import (Fabric, MemoryRegion, PackedBurst, PendingBurst,
+                     PendingOp, WireKind, WireMsg, as_bytes_view,
+                     next_op_id, pack_payloads, payload_to_bytes,
                      payloads_to_bytes)
 from .rendezvous import RendezvousManager
 
 __all__ = [
     "ENDPOINT_ATTRS", "Endpoint", "EndpointSpec", "Fabric", "MemoryRegion", "PendingOp",
+    "PackedBurst", "PendingBurst", "pack_payloads",
     "ProgressEngine", "RendezvousManager", "WireKind", "WireMsg",
     "PROGRESS_POLICIES", "STRIPE_POLICIES", "as_bytes_view", "next_op_id",
     "payload_to_bytes", "payloads_to_bytes",

@@ -34,6 +34,8 @@ import bisect
 import dataclasses
 from typing import Optional, Sequence
 
+import numpy as np
+
 from .. import attrs as _attrs
 from ..attrs import AttrError
 from ..concurrency.locks import aggregate_lock_stats
@@ -44,6 +46,7 @@ from ..post import (CommDesc, CommKind, post_am_x, post_get_x, post_put_x,
                     post_recv_x, post_send_x)
 from ..post import post_comm as _post_comm
 from ..post import post_many as _post_many
+from ..protocol import Protocol, select_protocol
 from ..status import FatalError, Status
 from .engine import ProgressEngine
 
@@ -259,11 +262,54 @@ class Endpoint(_attrs.AttrResource):
         mid-burst ``retry`` splits — never reorders — the doorbell."""
         return _post_many(self.runtime, ops, endpoint=self)
 
+    def _try_post_fused(self, kind: CommKind, rank: int, bufs, tags,
+                        tag: int, local_comp, remote_comp) -> \
+            Optional[list[Status]]:
+        """Direct fused lowering for a uniform ``post_*_many`` burst
+        (DESIGN.md §13): skip per-op :class:`CommDesc` construction and
+        size resolution entirely and hand the raw payload list to the
+        engine's packed doorbell.  Returns ``None`` when the burst is
+        not uniform-eager — the caller falls back to descriptors."""
+        rt = self.runtime
+        k = len(bufs)
+        if not (rt.doorbell_fused and k >= rt.fused_min_burst):
+            return None
+        first = bufs[0]
+        if not isinstance(first, np.ndarray):
+            return None
+        nb = first.nbytes
+        if not (len(set(map(id, bufs))) == 1
+                or all(isinstance(b, np.ndarray) and b.nbytes == nb
+                       for b in bufs)):
+            return None
+        proto = select_protocol(nb, rt.config)
+        if proto == Protocol.ZEROCOPY:
+            return None
+        if tags is None:
+            tags = [tag] * k
+        elif len(tags) != len(bufs):
+            raise FatalError(f"post_{kind.value}_many: {len(bufs)} bufs "
+                             f"but {len(tags)} tags")
+        else:
+            tags = list(tags)
+        dev = self.select_burst_device(rank=rank, size=nb) \
+            or self.select_device(rank=rank, size=nb)
+        eng = rt.engine
+        eng._burst_posts.fetch_add(1)
+        return eng._post_fused_run(kind, rank, bufs, tags, nb, (proto,) * k,
+                                   local_comp, remote_comp,
+                                   MatchingPolicy.RANK_TAG, dev)
+
     def post_send_many(self, rank: int, bufs, *, tags=None, tag: int = 0,
                        local_comp=None, allow_retry: bool = True
                        ) -> list[Status]:
         """Burst of sends to one peer; ``tags`` (else constant ``tag``)
         aligns with ``bufs``."""
+        if allow_retry and bufs:
+            sts = self._try_post_fused(CommKind.SEND, rank, bufs, tags,
+                                       tag, local_comp, None)
+            if sts is not None:
+                return sts
         if tags is None:
             tags = [tag] * len(bufs)
         elif len(tags) != len(bufs):
@@ -282,6 +328,11 @@ class Endpoint(_attrs.AttrResource):
         if remote_comp is None:
             raise FatalError("post_am_many requires a remote completion "
                              "handle")
+        if allow_retry and bufs:
+            sts = self._try_post_fused(CommKind.AM, rank, bufs, tags,
+                                       tag, local_comp, remote_comp)
+            if sts is not None:
+                return sts
         if tags is None:
             tags = [tag] * len(bufs)
         elif len(tags) != len(bufs):

@@ -24,8 +24,22 @@ from ..matching import MatchKind, MatchingPolicy, make_key
 from ..post import CommKind
 from ..protocol import Protocol, select_protocol
 from ..status import ErrorCode, FatalError, Status, done, posted, retry
-from .fabric import (PendingOp, WireKind, WireMsg, as_bytes_view,
-                     next_op_id, payload_to_bytes, payloads_to_bytes)
+from .fabric import (PackedBurst, PendingBurst, PendingOp, WireKind, WireMsg,
+                     as_bytes_view, next_op_id, pack_payloads,
+                     payload_to_bytes, payloads_to_bytes)
+
+#: wire kinds whose reactions batch their completion signals
+_EAGER_KINDS = frozenset((WireKind.EAGER_AM, WireKind.EAGER_SEND,
+                          WireKind.EAGER_PACKED_AM,
+                          WireKind.EAGER_PACKED_SEND))
+
+
+def _sum_sizes(sizes, a: int, b: int) -> int:
+    """Total declared bytes of rows [a, b) — ``sizes`` is an int
+    (uniform burst) or a per-row list."""
+    if isinstance(sizes, int):
+        return sizes * (b - a)
+    return sum(sizes[a:b])
 
 
 class _SignalBatch:
@@ -47,6 +61,18 @@ class _SignalBatch:
             self._groups[id(comp)] = (comp, [st])
         else:
             group[1].append(st)
+
+    def add_many(self, comp: Optional[CompletionObject],
+                 sts: List[Status]) -> None:
+        """A fused doorbell's worth of completions for one comp object —
+        one dict probe and one extend instead of K ``add`` calls."""
+        if comp is None or not sts:
+            return
+        group = self._groups.get(id(comp))
+        if group is None:
+            self._groups[id(comp)] = (comp, list(sts))
+        else:
+            group[1].extend(sts)
 
     def flush(self, engine: "ProgressEngine", dev) -> None:
         for comp, sts in self._groups.values():
@@ -216,21 +242,24 @@ class ProgressEngine:
         statuses: List[Optional[Status]] = [None] * n
         self._burst_posts.fetch_add(1)
         i = 0
-        while i < n:
-            run_start = i
+        last_size = last_proto = None    # memoized: bursts are usually
+        while i < n:                     # uniform-size, one lookup serves
+            run_start = i                # the whole run
             protos: List[Protocol] = []
             while i < n:
                 op = ops[i]
                 if op.kind not in (CommKind.SEND, CommKind.AM) \
                         or not op.allow_retry:
                     break
-                proto = select_protocol(op.size, rt.config)
-                if proto == Protocol.ZEROCOPY:
+                if op.size != last_size:
+                    last_proto = select_protocol(op.size, rt.config)
+                    last_size = op.size
+                if last_proto == Protocol.ZEROCOPY:
                     break
-                protos.append(proto)
+                protos.append(last_proto)
                 i += 1
             if protos:
-                sts = self._post_eager_burst(ops[run_start:i], protos, dev)
+                sts = self._post_eager_run(ops[run_start:i], protos, dev)
                 statuses[run_start:i] = sts
                 if sts[-1].is_retry():
                     code = sts[-1].code
@@ -254,6 +283,186 @@ class ProgressEngine:
                     return statuses
                 i += 1
         return statuses
+
+    def _post_eager_run(self, ops: Sequence, protos: List[Protocol],
+                        dev) -> List[Status]:
+        """Route one eager run: fused packed doorbell when the run is
+        long enough and uniform (one peer, one kind, one remote comp,
+        one matching policy — the shape a single PackedBurst descriptor
+        can carry), else the scalar per-message burst."""
+        rt = self.rt
+        if rt.doorbell_fused and len(ops) >= rt.fused_min_burst:
+            first = ops[0]
+            kind, rank = first.kind, first.rank
+            rcomp, policy = first.remote_comp, first.matching_policy
+            # ONE pass both proves uniformity and extracts the columns
+            # the packed descriptor needs (kind/policy are enum
+            # singletons, so identity compares)
+            bufs: List = []
+            tags: List[int] = []
+            sizes: List[int] = []
+            lcomps: List = []
+            for op in ops:
+                if (op.kind is not kind or op.rank != rank
+                        or op.remote_comp != rcomp
+                        or op.matching_policy is not policy
+                        or op.user_context is not None):
+                    break
+                bufs.append(op.buf)
+                tags.append(op.tag)
+                sizes.append(op.size)
+                lcomps.append(op.local_comp)
+            else:
+                return self._post_fused_run(kind, rank, bufs, tags, sizes,
+                                            protos, lcomps, rcomp, policy,
+                                            dev)
+        return self._post_eager_burst(ops, protos, dev)
+
+    def _post_fused_run(self, kind: CommKind, rank: int, bufs: List,
+                        tags: List[int], sizes, protos: Sequence[Protocol],
+                        local_comps, remote_comp,
+                        policy: MatchingPolicy, dev) -> List[Status]:
+        """One FUSED doorbell (DESIGN.md §13): K uniform eager ops to one
+        peer collapse into a single stage-copy-push — one pool ``get_n``,
+        one packed staging copy (:func:`pack_payloads`, where the
+        ``wire_bf16`` compression rides for free), ONE wire descriptor
+        (:class:`PackedBurst`) rung with one ``fabric.push_packed``, and
+        one :class:`PendingBurst` covering every bufcopy row's deferred
+        completion.  Status semantics, prefix-accept split points and
+        telemetry match :meth:`_post_eager_burst` row for row.
+
+        ``sizes`` is an int (uniform) or per-row list; ``local_comps`` a
+        single comp object (or None) shared by all rows, or a per-row
+        list."""
+        rt = self.rt
+        n = len(bufs)
+        dev.count_post(n)
+        if rank < 0 or rank >= rt.n_ranks:
+            raise FatalError(f"bad target rank {rank}")
+
+        # ONE pool round-trip covers the whole run's packet demand
+        n_buf = protos.count(Protocol.BUFCOPY) if hasattr(protos, "count") \
+            else sum(1 for p in protos if p == Protocol.BUFCOPY)
+        uniform_proto = (Protocol.BUFCOPY if n_buf == n
+                         else Protocol.INJECT if n_buf == 0 else None)
+        packets: List[int] = []
+        if n_buf:
+            packets, _pst = rt.packet_pool.get_n(dev.lane, n_buf)
+        cut = n                              # first op we can't cover
+        if len(packets) < n_buf:
+            short = len(packets)
+            seen = 0
+            for idx, proto in enumerate(protos):
+                if proto == Protocol.BUFCOPY:
+                    if seen == short:
+                        cut = idx
+                        break
+                    seen += 1
+            rt.stats.retries += n - cut
+
+        pushed = 0
+        op_id = -1
+        if cut:
+            # ONE packed staging copy builds the whole wire image
+            data, dsizes, wire_dtype = pack_payloads(
+                bufs if cut == n else bufs[:cut], rt.wire_bf16)
+            if n_buf and int(dsizes.max(initial=0)) \
+                    > rt.packet_pool.packet_bytes:
+                # only bufcopy rows must fit a packet (as in the scalar
+                # path); the max() gate keeps the per-row check off the
+                # hot path
+                for idx, (proto, ds) in enumerate(zip(protos, dsizes)):
+                    if proto == Protocol.BUFCOPY \
+                            and ds > rt.packet_pool.packet_bytes:
+                        rt.packet_pool.put_n(dev.lane, packets)
+                        raise FatalError(
+                            "bufcopy payload exceeds packet size")
+            burst = PackedBurst(data, dsizes,
+                                tags if cut == n else tags[:cut],
+                                cut, wire_dtype)
+            msg = WireMsg(WireKind.EAGER_PACKED_AM if kind == CommKind.AM
+                          else WireKind.EAGER_PACKED_SEND,
+                          rt.rank, rank, tag=tags[0], payload=burst,
+                          size=int(data.nbytes), rcomp=remote_comp,
+                          matching_policy=policy, op_id=-1,
+                          device_index=dev.index)
+            pushed = rt.fabric.push_packed(msg)
+            dev.count_push(pushed)
+            if pushed < cut:
+                rt.stats.retries += cut - pushed
+
+        # bufcopy bookkeeping: one pending op for the whole doorbell;
+        # packets of unpushed rows go straight back
+        if n_buf:
+            if uniform_proto is not None:        # all-bufcopy run
+                used = pushed
+                bidx = range(pushed)
+            else:
+                bidx = [i for i in range(pushed)
+                        if protos[i] == Protocol.BUFCOPY]
+                used = len(bidx)
+            if used < len(packets):
+                rt.packet_pool.put_n(dev.lane, packets[used:])
+            if used:
+                op_id = next_op_id()
+                if isinstance(local_comps, list):
+                    comps = [local_comps[i] for i in bidx]
+                    if len(set(map(id, comps))) == 1:
+                        # uniform run (commonly all None): collapse to a
+                        # scalar so the completion sweep takes its bulk
+                        # branch — or skips the rows entirely
+                        comps = comps[0]
+                else:
+                    comps = local_comps
+                rt.pending_ops[op_id] = PendingBurst(
+                    kind, rank, dev.lane, packets[:used],
+                    tags[:pushed] if used == pushed
+                    else [tags[i] for i in bidx], comps)
+                dev.pending_tx.append(op_id)
+
+        # burst telemetry: one stats bump per protocol class
+        if pushed:
+            if uniform_proto is not None:
+                rt.stats.record_many(uniform_proto, pushed,
+                                     _sum_sizes(sizes, 0, pushed))
+            else:
+                inj_bytes = sum(sizes[i] for i in range(pushed)
+                                if protos[i] == Protocol.INJECT)
+                buf_bytes = sum(sizes[i] for i in range(pushed)
+                                if protos[i] == Protocol.BUFCOPY)
+                inj = pushed - (len(bidx) if n_buf else 0)
+                if inj:
+                    rt.stats.record_many(Protocol.INJECT, inj, inj_bytes)
+                if pushed - inj:
+                    rt.stats.record_many(Protocol.BUFCOPY, pushed - inj,
+                                         buf_bytes)
+
+        # statuses: identical codes to the scalar burst; identical rows
+        # share ONE immutable status object instead of K constructions
+        out: List[Optional[Status]] = [None] * n
+        if pushed:
+            if n_buf == 0:
+                t0 = tags[0]
+                if all(t == t0 for t in tags[:pushed]):
+                    st = done(code=ErrorCode.DONE_INLINE, rank=rank, tag=t0)
+                    out[:pushed] = [st] * pushed
+                else:
+                    out[:pushed] = [done(code=ErrorCode.DONE_INLINE,
+                                         rank=rank, tag=t)
+                                    for t in tags[:pushed]]
+            elif uniform_proto is not None:
+                out[:pushed] = [posted(ctx=op_id)] * pushed
+            else:
+                pst = posted(ctx=op_id)
+                for i in range(pushed):
+                    out[i] = pst if protos[i] == Protocol.BUFCOPY else \
+                        done(code=ErrorCode.DONE_INLINE, rank=rank,
+                             tag=tags[i])
+        if pushed < cut:
+            out[pushed:cut] = [retry(ErrorCode.RETRY_LOCKED)] * (cut - pushed)
+        if cut < n:
+            out[cut:] = [retry(ErrorCode.RETRY_NOPACKET)] * (n - cut)
+        return out
 
     def _post_eager_burst(self, ops: Sequence, protos: List[Protocol],
                           dev) -> List[Status]:
@@ -402,6 +611,17 @@ class ProgressEngine:
         else the pass's did-work bool."""
         dev = device or (self._devices[0] if self._devices
                          else self.rt.default_device)
+        rt = self.rt
+        # idle fast path: nothing backlogged, no pending source-side
+        # completions, nothing due on the wire — skip the lock and the
+        # pass bookkeeping entirely.  Polling threads spend most of
+        # their passes discovering exactly this, and under the GIL an
+        # expensive "nothing to do" serializes every OTHER thread too.
+        # Unlocked reads are safe: a stale miss is just an earlier poll,
+        # and new work re-arms all three signals.
+        if dev.backlog.empty_flag and not dev.pending_tx \
+                and not rt.fabric.ready(rt.rank, dev.index):
+            return False
         if not dev.progress_lock.try_acquire():
             return None
         try:
@@ -468,6 +688,29 @@ class ProgressEngine:
                 op = rt.pending_ops.get(op_id)
                 if op is None:
                     continue
+                if type(op) is PendingBurst:
+                    # one fused doorbell: all packets back in one batch,
+                    # completions in row (FIFO) order
+                    puts.setdefault(op.lane, []).extend(op.packets)
+                    if isinstance(op.comps, list):
+                        for c, t in zip(op.comps, op.tags):
+                            if c is not None:
+                                batch.add(c, done(rank=op.peer, tag=t))
+                    elif op.comps is not None:
+                        t0 = op.tags[0] if op.tags else None
+                        if all(t == t0 for t in op.tags):
+                            # uniform tags: ONE immutable status serves
+                            # the whole doorbell's local completions
+                            batch.add_many(op.comps,
+                                           [done(rank=op.peer, tag=t0)]
+                                           * len(op.tags))
+                        else:
+                            batch.add_many(op.comps,
+                                           [done(rank=op.peer, tag=t)
+                                            for t in op.tags])
+                    del rt.pending_ops[op_id]
+                    did = True
+                    continue
                 if op.kind in (CommKind.SEND, CommKind.AM):
                     if op.packet >= 0:          # return packet to the pool
                         puts.setdefault(op.lane, []).append(op.packet)
@@ -493,7 +736,7 @@ class ProgressEngine:
         if msgs:
             batch = _SignalBatch()
             for msg in msgs:
-                if msg.kind in (WireKind.EAGER_AM, WireKind.EAGER_SEND):
+                if msg.kind in _EAGER_KINDS:
                     self._react(msg, dev, batch)
                 else:
                     batch.flush(self, dev)     # keep per-comp wire order
@@ -522,6 +765,56 @@ class ProgressEngine:
                 batch.add(comp, st)
             else:
                 self.signal(comp, st, dev)
+        elif k == WireKind.EAGER_PACKED_AM:
+            # one fused doorbell: one rcomp lookup, one vectorized
+            # payload unpack (bf16 rows decompress here), one batched
+            # signal extend for the whole burst
+            burst: PackedBurst = msg.payload
+            self._reactions.fetch_add(burst.count - 1)
+            comp = rt.rcomp_registry[msg.rcomp]
+            src = msg.src
+            tags = burst.tags
+            if (burst.data.strides[0] == 0 and burst.wire_dtype is None
+                    and len(set(tags)) == 1):
+                # broadcast burst (same payload object repeated): every
+                # delivered row is byte-identical, so ONE immutable
+                # Status serves the whole doorbell
+                sts = [done(burst.data[0], rank=src, tag=tags[0])
+                       ] * burst.count
+            else:
+                sts = [done(p, rank=src, tag=t)
+                       for p, t in zip(burst.delivered_payloads(), tags)]
+            if batch is not None:
+                batch.add_many(comp, sts)
+            else:
+                for st in sts:
+                    self.signal(comp, st, dev)
+        elif k == WireKind.EAGER_PACKED_SEND:
+            burst = msg.payload
+            self._reactions.fetch_add(burst.count - 1)
+            src, pol = msg.src, msg.matching_policy
+            payloads = burst.delivered_payloads()
+            tags = burst.tags
+            t0 = tags[0]
+            if all(t == t0 for t in tags):
+                # uniform match key: ONE bucket probe pops the whole
+                # burst's worth of pre-posted recvs
+                vals = rt.matching.match_now_n(
+                    make_key(src, t0, pol), MatchKind.SEND, burst.count)
+                matches = vals + [None] * (burst.count - len(vals))
+            else:
+                matches = rt.matching.match_now_burst(
+                    [make_key(src, t, pol) for t in tags], MatchKind.SEND)
+            for i, match in enumerate(matches):
+                payload = payloads[i]
+                if match is None:           # per-bucket locked fallback
+                    match = rt.matching.insert(
+                        make_key(src, tags[i], pol), MatchKind.SEND,
+                        ("eager", payload, src, tags[i]))
+                if match is not None:
+                    _, buf, comp, rdev = match
+                    self.deliver_recv(buf, payload, comp, src, tags[i],
+                                      dev, batch=batch)
         elif k == WireKind.EAGER_SEND:
             key = make_key(msg.src, msg.tag, msg.matching_policy)
             # eager fast path: a lock-free probe of the pre-posted-recv
@@ -586,6 +879,9 @@ class ProgressEngine:
         if comp is None or not statuses:
             return
         results = comp.signal_many(statuses)
+        last = results[-1] if results else None
+        if not (isinstance(last, Status) and last.is_retry()):
+            return          # rejects are a suffix: clean last = clean burst
         dev = dev or self.rt.default_device
         for st, r in zip(statuses, results):
             if isinstance(r, Status) and r.is_retry():

@@ -16,6 +16,7 @@ import itertools
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import ml_dtypes
 import numpy as np
 
 from .. import attrs as _attrs
@@ -32,12 +33,22 @@ FABRIC_ATTRS = ("fabric_depth", "link_latency")
 class WireKind:
     EAGER_SEND = "eager_send"      # send-recv eager payload
     EAGER_AM = "eager_am"          # active-message eager payload
+    # fused doorbells (DESIGN.md §13): ONE descriptor carries a whole
+    # burst's payloads as a packed 2-D byte array
+    EAGER_PACKED_SEND = "eager_packed_send"
+    EAGER_PACKED_AM = "eager_packed_am"
     RTS = "rts"                    # rendezvous request-to-send
     CTS = "cts"                    # rendezvous clear-to-send
     RDMA_PAYLOAD = "rdma_payload"  # rendezvous data movement (zero-copy)
     PUT = "put"                    # RMA put (optionally with signal)
     GET_REQ = "get_req"            # RMA get request
     GET_RESP = "get_resp"          # RMA get response
+
+
+#: packed wire kinds — each such message weighs ``payload.count`` toward
+#: the stream depth bound (and every message-counting telemetry)
+PACKED_KINDS = frozenset((WireKind.EAGER_PACKED_SEND,
+                          WireKind.EAGER_PACKED_AM))
 
 
 @dataclasses.dataclass
@@ -69,6 +80,65 @@ class PendingOp:
     packet: int = -1               # bufcopy: packet id to return to the pool
     lane: int = 0
     user_context: Any = None
+
+
+@dataclasses.dataclass
+class PackedBurst:
+    """One fused eager doorbell's wire image (DESIGN.md §13).
+
+    The whole burst rides a single :class:`WireMsg` whose payload is this
+    descriptor: ``data`` holds the K wire rows as one packed 2-D byte
+    array (one stacked copy staged them), ``sizes[i]`` is row *i*'s
+    delivered payload size in bytes, and ``tags[i]`` its message tag.
+    ``wire_dtype == "bf16"`` marks rows carrying bf16-compressed float32
+    payloads — :meth:`delivered_payloads` restores them to f32 bytes, so
+    receivers observe flat uint8 arrays exactly like the scalar path.
+    """
+
+    data: np.ndarray               # (count, row_bytes) uint8 wire bytes
+    sizes: np.ndarray              # (count,) delivered bytes per row
+    tags: List[int]                # per-row message tags
+    count: int
+    wire_dtype: Optional[str] = None
+
+    def prefix(self, n: int) -> "PackedBurst":
+        """The first ``n`` rows — a fabric prefix-accept split point."""
+        return PackedBurst(self.data[:n], self.sizes[:n], self.tags[:n],
+                           n, self.wire_dtype)
+
+    def delivered_payloads(self) -> List[np.ndarray]:
+        """Per-row payload byte arrays as the receiver must observe them
+        (bf16 rows decompressed back to float32 bytes in ONE vectorized
+        cast for the whole burst)."""
+        if self.wire_dtype == "bf16":
+            # order="C": astype's default order='K' keeps a broadcast
+            # row's degenerate strides, which the uint8 view rejects
+            rows = (self.data.view(ml_dtypes.bfloat16)
+                    .astype(np.float32, order="C").view(np.uint8))
+        else:
+            rows = self.data
+        width = rows.shape[1]
+        sizes = self.sizes
+        if sizes.size and int(sizes[0]) == width \
+                and bool((sizes == width).all()):
+            return list(rows)              # uniform full-width: row views
+        return [rows[i, :int(s)] for i, s in enumerate(sizes)]
+
+
+@dataclasses.dataclass
+class PendingBurst:
+    """Source-side state for ONE fused bufcopy doorbell: K packets and K
+    deferred completions under a single pending-op id.  The progress
+    sweep returns all packets with one ``put_n`` and signals the
+    completions in row (FIFO) order, matching the per-op scalar path.
+    ``comps`` is either one completion object shared by every row or a
+    per-row list aligned with ``tags``."""
+    kind: CommKind
+    peer: int
+    lane: int
+    packets: List[int]
+    tags: List[int]
+    comps: Any = None
 
 
 _op_ids = itertools.count()
@@ -103,6 +173,11 @@ class Fabric(_attrs.AttrResource):
         self.depth = depth
         self.latency = latency
         self._queues: Dict[Tuple[int, int], collections.deque] = {}
+        # per-stream weight beyond len(queue): a packed doorbell occupies
+        # one deque slot but weighs payload.count messages toward the
+        # depth bound, so _extra holds sum(count - 1) per stream.  Same
+        # approximate-under-races contract as the depth bound itself.
+        self._extra: Dict[Tuple[int, int], int] = {}
         # atomic: producers on any thread bump these concurrently
         self._pushes = AtomicCounter()
         self._full_events = AtomicCounter()
@@ -126,7 +201,8 @@ class Fabric(_attrs.AttrResource):
 
     def try_push(self, msg: WireMsg) -> bool:
         q = self._q(msg.dst, msg.device_index)
-        if len(q) >= self.depth:
+        if len(q) + self._extra.get((msg.dst, msg.device_index), 0) \
+                >= self.depth:
             self._full_events.fetch_add(1)
             return False
         if self.latency:
@@ -152,7 +228,8 @@ class Fabric(_attrs.AttrResource):
                 raise FatalError("push_burst: a doorbell rides one "
                                  "(dst, device) stream; got mixed streams")
         q = self._q(dst, didx)
-        n = min(len(msgs), max(0, self.depth - len(q)))
+        n = min(len(msgs), max(0, self.depth - len(q)
+                               - self._extra.get((dst, didx), 0)))
         if n < len(msgs):
             self._full_events.fetch_add(1)
         if n == 0:
@@ -166,6 +243,53 @@ class Fabric(_attrs.AttrResource):
         self._pushes.fetch_add(n)
         return n
 
+    def push_packed(self, msg: WireMsg) -> int:
+        """Ring a fused doorbell: ONE descriptor whose :class:`PackedBurst`
+        payload carries the whole burst.  The burst weighs ``count``
+        messages toward the stream depth bound — split points are
+        identical to pushing the rows through :meth:`push_burst` — and
+        accepts the longest row prefix that fits (the rejected suffix is
+        the caller's to retry).  Per-doorbell costs collapse to one queue
+        lookup, one latency stamp, one append, one telemetry FAA.
+        Returns the number of rows accepted."""
+        burst: PackedBurst = msg.payload
+        key = (msg.dst, msg.device_index)
+        q = self._q(*key)
+        n = min(burst.count,
+                max(0, self.depth - len(q) - self._extra.get(key, 0)))
+        if n < burst.count:
+            self._full_events.fetch_add(1)
+        if n == 0:
+            return 0
+        if n < burst.count:                  # prefix-accept split
+            pb = burst.prefix(n)
+            msg = dataclasses.replace(msg, payload=pb,
+                                      size=int(pb.data.nbytes))
+        if self.latency:
+            msg.ready_at = time.perf_counter() + self.latency
+        q.append(msg)
+        if n > 1:
+            self._extra[key] = self._extra.get(key, 0) + n - 1
+        self._pushes.fetch_add(n)
+        return n
+
+    def ready(self, dst: int, device_index: int) -> bool:
+        """Cheap unlocked readiness probe: is at least one message on
+        this stream due for delivery?  The poll-before-lock doorbell
+        check — idle progress passes branch on this instead of paying
+        the lock + telemetry + drain machinery to discover nothing.
+        Safe without the stream lock: a stale True costs one full pass,
+        a stale False is indistinguishable from polling a hair earlier."""
+        q = self._queues.get((dst, device_index))
+        if not q:
+            return False
+        if not self.latency:
+            return True
+        try:
+            return q[0].ready_at <= time.perf_counter()
+        except IndexError:            # racing drain emptied the stream
+            return False
+
     def drain(self, dst: int, device_index: int, limit: int = 0
               ) -> List[WireMsg]:
         """Pop ready messages from one stream.  ``limit`` bounds the
@@ -178,28 +302,44 @@ class Fabric(_attrs.AttrResource):
         q = self._q(dst, device_index)
         n = len(q) if limit == 0 else min(limit, len(q))
         if not self.latency:
-            return [q.popleft() for _ in range(n)]
-        # latency model: streams are FIFO, so stop at the first message
-        # still "on the wire"
-        now = time.perf_counter()
-        out: List[WireMsg] = []
-        while len(out) < n and q and q[0].ready_at <= now:
-            out.append(q.popleft())
+            out = [q.popleft() for _ in range(n)]
+        else:
+            # latency model: streams are FIFO, so stop at the first message
+            # still "on the wire"
+            now = time.perf_counter()
+            out = []
+            while len(out) < n and q and q[0].ready_at <= now:
+                out.append(q.popleft())
+        # settle the packed-weight surplus — only streams that actually
+        # carried fused doorbells pay the scan (scalar drains skip it)
+        key = (dst, device_index)
+        ex = self._extra.get(key)
+        if ex:
+            dec = sum(m.payload.count - 1 for m in out
+                      if m.kind in PACKED_KINDS)
+            if dec:
+                self._extra[key] = ex - dec
         return out
 
     def stream_depth(self, dst: int, device_index: int) -> int:
         """Queued messages on one stream (including not-yet-drainable
-        ones) — the lock-free idle probe progress drivers use to skip a
-        quiet device without paying for a full locked pass."""
+        ones; a packed doorbell counts its row count) — the lock-free
+        idle probe progress drivers use to skip a quiet device without
+        paying for a full locked pass."""
         q = self._queues.get((dst, device_index))
-        return len(q) if q is not None else 0
+        if q is None:
+            return 0
+        return len(q) + self._extra.get((dst, device_index), 0)
 
     def in_flight(self) -> int:
-        """Total queued messages (including not-yet-drainable ones)."""
-        return sum(len(q) for q in self._queues.values())
+        """Total queued messages (including not-yet-drainable ones);
+        packed doorbells count their row counts."""
+        return (sum(len(q) for q in self._queues.values())
+                + sum(self._extra.values()))
 
     def pending_to(self, dst: int) -> int:
-        return sum(len(q) for (d, _), q in self._queues.items() if d == dst)
+        return sum(len(q) + self._extra.get(k, 0)
+                   for k, q in self._queues.items() if k[0] == dst)
 
     def pending_streams(self, dst: int) -> List[int]:
         """Device-stream indices with traffic queued toward ``dst``."""
@@ -242,25 +382,84 @@ def payload_to_bytes(buf: Any) -> np.ndarray:
 def payloads_to_bytes(bufs: Sequence[Any]) -> List[np.ndarray]:
     """Stage a burst's payloads — ONE stacked copy instead of K.
 
-    When every payload is a same-sized ``np.ndarray`` (the windowed-
-    benchmark common case), the whole burst is materialized with a single
-    ``np.stack`` — one vectorized memcpy — and each message gets a row
+    When every payload is an ``np.ndarray`` sharing one dtype and shape
+    (the windowed-benchmark common case), the whole burst is materialized
+    with a single ``np.stack(bufs)`` — one vectorized memcpy, no
+    per-element Python conversion at all — and each message gets a row
     view of the stacked array (rows are independent snapshots, so source
-    buffers stay reusable exactly like :func:`payload_to_bytes`).  Ragged
+    buffers stay reusable exactly like :func:`payload_to_bytes`).
+    Same-sized arrays of *mixed* dtype stack through per-item flat byte
+    views (still one burst-sized copy, byte-exact per payload); ragged
     or non-array bursts fall back to per-payload copies."""
     if len(bufs) <= 1:
         return [payload_to_bytes(b) for b in bufs]
     first = bufs[0]
     if isinstance(first, np.ndarray):
-        nbytes = first.nbytes
+        dt, shape, nbytes = first.dtype, first.shape, first.nbytes
+        if all(isinstance(b, np.ndarray) and b.dtype == dt
+               and b.shape == shape for b in bufs):
+            stacked = np.stack(bufs)                  # the ONE copy
+            return list(stacked.reshape(len(bufs), -1).view(np.uint8))
         if all(isinstance(b, np.ndarray) and b.nbytes == nbytes
                for b in bufs):
-            # flat uint8 payloads (the hot case) stack as-is; anything
-            # else gets a per-item flat byte view first — np.stack reads
-            # the views and performs the single burst-sized copy
+            # mixed dtype/shape but same byte size: np.stack reads
+            # per-item flat byte views and performs the single copy
             stacked = np.stack([
                 b if b.dtype == np.uint8 and b.ndim == 1
                 else b.reshape(-1).view(np.uint8)
                 for b in bufs])
             return list(stacked)                      # row views, no copy
     return [payload_to_bytes(b) for b in bufs]
+
+
+def pack_payloads(bufs: Sequence[Any], wire_bf16: bool = False
+                  ) -> Tuple[np.ndarray, np.ndarray, Optional[str]]:
+    """Stage a fused doorbell: ONE dtype-normalized copy builds the
+    packed wire image (DESIGN.md §13).  Returns ``(data, sizes,
+    wire_dtype)`` for a :class:`PackedBurst`: ``data`` is ``(K,
+    row_bytes)`` uint8, ``sizes[i]`` the delivered byte size of row
+    ``i``.
+
+    Fast paths, in order:
+
+    * every element is the SAME array object (a repeated payload — the
+      message-rate hot loop): one row snapshot, broadcast K ways with no
+      further copying;
+    * uniform dtype+shape ndarrays: one ``np.stack``;
+    * anything else: per-row byte staging into a zero-padded matrix.
+
+    ``wire_bf16`` compresses float32 bursts to bf16 on the wire at zero
+    marginal cost (the cast IS the staging copy); it applies only on the
+    uniform-f32 fast paths — mixed bursts ship uncompressed — and
+    ``sizes`` always reports the *delivered* (f32) byte size."""
+    k = len(bufs)
+    first = bufs[0]
+    if isinstance(first, np.ndarray):
+        # identity probe runs at C speed: 64-element bursts are common
+        # and a Python-level ``all(b is first ...)`` genexpr shows up in
+        # the message-rate profile
+        if len(set(map(id, bufs))) == 1:
+            flat = first.reshape(-1)
+            if wire_bf16 and first.dtype == np.float32:
+                row = flat.astype(ml_dtypes.bfloat16).view(np.uint8)
+                wire_dtype = "bf16"
+            else:
+                row = flat.view(np.uint8).copy()      # the one snapshot
+                wire_dtype = None
+            data = np.broadcast_to(row, (k, row.size))
+            return data, np.full(k, first.nbytes, np.int64), wire_dtype
+        dt, shape = first.dtype, first.shape
+        if all(isinstance(b, np.ndarray) and b.dtype == dt
+               and b.shape == shape for b in bufs):
+            flat = np.stack(bufs).reshape(k, -1)      # the ONE copy
+            if wire_bf16 and dt == np.float32:
+                return (flat.astype(ml_dtypes.bfloat16).view(np.uint8),
+                        np.full(k, first.nbytes, np.int64), "bf16")
+            return (flat.view(np.uint8),
+                    np.full(k, first.nbytes, np.int64), None)
+    rows = [payload_to_bytes(b) for b in bufs]
+    sizes = np.fromiter((r.nbytes for r in rows), np.int64, k)
+    data = np.zeros((k, int(sizes.max(initial=0))), np.uint8)
+    for i, r in enumerate(rows):
+        data[i, :r.nbytes] = r
+    return data, sizes, None

@@ -37,7 +37,8 @@ from .status import FatalError, Status
 
 #: runtime-level attrs one Runtime resolves at construction
 RUNTIME_ATTRS = ("mode", "n_channels", "eager_max_bytes", "rdv_threshold",
-                 "wire_bf16", "matching_buckets", "matching_locks",
+                 "wire_bf16", "doorbell_fused", "fused_min_burst",
+                 "matching_buckets", "matching_locks",
                  "packets_per_lane", "packet_bytes", "pool_lanes")
 # Re-exported names that historically lived here (public API compatibility).
 from .progress import (ENDPOINT_ATTRS, Endpoint, EndpointSpec, Fabric,
@@ -94,6 +95,12 @@ class Runtime(_attrs.AttrResource):
                 if a in self._attr_layer})
         resolved = _attrs.resolve(RUNTIME_ATTRS, runtime=self._attr_layer)
         self._init_attrs(resolved)
+        # data-plane flags cached as plain fields: the fused doorbell path
+        # (DESIGN.md §13) reads them per burst, so no attr-chain lookup on
+        # the hot path
+        self.doorbell_fused: bool = resolved["doorbell_fused"]
+        self.fused_min_burst: int = resolved["fused_min_burst"]
+        self.wire_bf16: bool = resolved["wire_bf16"]
         # resources (all replicable; these are the process-default set)
         self.matching = HostMatchingEngine(
             resolved["matching_buckets"], resolved["matching_locks"],

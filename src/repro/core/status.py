@@ -52,12 +52,15 @@ class FatalError(RuntimeError):
     """Paper: 'fatal errors are reported through C++ exceptions'."""
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Status:
     """The ``status_t`` object returned by posting/checking operations.
 
     When ``kind == DONE`` the payload fields (``value``/``buffer``, ``rank``,
     ``tag``) carry valid information about the completed operation.
+
+    Slotted: statuses are the highest-volume objects on the data plane
+    (two per eager message), so the ~20% ctor/footprint win matters.
     """
 
     kind: ErrorKind

@@ -1,0 +1,13 @@
+"""Doorbell stage-copy kernels (DESIGN.md §13).
+
+The fused data plane's hot step — dtype-normalize a doorbell's K
+payloads into one packed wire image and push it into the packet pool —
+expressed as a Pallas kernel plus jitted wrappers so the in-graph
+(functional-pool) path stages, compresses, and allocates in ONE
+dispatch.  ``ref.py`` is the pure-jnp oracle, ``kernel.py`` the Pallas
+TPU kernel, ``ops.py`` the public jitted entry points.
+"""
+from .ops import stage_copy, stage_copy_push
+from .ref import stage_copy_ref
+
+__all__ = ["stage_copy", "stage_copy_push", "stage_copy_ref"]

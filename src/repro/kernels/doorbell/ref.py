@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the doorbell stage-copy (DESIGN.md §13)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rows_to_bytes(rows: jax.Array) -> jax.Array:
+    """(k, e) any-dtype -> (k, e * itemsize) uint8 wire rows."""
+    b = jax.lax.bitcast_convert_type(rows, jnp.uint8)
+    return b.reshape(rows.shape[0], -1)
+
+
+def stage_copy_ref(payloads: jax.Array, *, wire_bf16: bool = False
+                   ) -> jax.Array:
+    """(k, e) payloads -> (k, row_bytes) packed uint8 wire image.
+
+    Mirrors the host data plane's ``pack_payloads`` math: the staging
+    copy IS the dtype normalization, and ``wire_bf16`` folds the f32 ->
+    bf16 wire compression into that same copy (non-f32 bursts ship
+    uncompressed, exactly like the host path).
+    """
+    if wire_bf16 and payloads.dtype == jnp.float32:
+        payloads = payloads.astype(jnp.bfloat16)
+    return _rows_to_bytes(payloads)

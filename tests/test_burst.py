@@ -497,7 +497,9 @@ class TestTscqSpinBound:
 
 class TestBurstProgress:
     def test_bounded_drain_leaves_remainder(self):
-        cl = LocalCluster(2, CommConfig(inject_max_bytes=64))
+        # scalar data plane: max_msgs bounds delivered completions 1:1
+        cl = LocalCluster(2, CommConfig(inject_max_bytes=64),
+                          attrs={"doorbell_fused": False})
         r0, r1 = cl[0], cl[1]
         cq = r1.alloc_cq()
         rc = r1.register_rcomp(cq)
@@ -508,6 +510,21 @@ class TestBurstProgress:
         assert len(cq) == 4
         r1.engine.progress(dev, max_msgs=4)
         assert len(cq) == 8
+        cl.quiesce()
+        assert _drain_tags(cq) == list(range(10))
+
+    def test_bounded_drain_counts_packed_doorbell_once(self):
+        # fused data plane: the whole doorbell is ONE wire message, so a
+        # drain limit admits all of its rows in one pass (DESIGN.md §13)
+        cl = LocalCluster(2, CommConfig(inject_max_bytes=64),
+                          attrs={"doorbell_fused": True})
+        r0, r1 = cl[0], cl[1]
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        r0.post_many([CommDesc(CommKind.AM, 1, np.zeros(8, np.uint8),
+                               tag=i, remote_comp=rc) for i in range(10)])
+        r1.engine.progress(r1.default_device, max_msgs=4)
+        assert len(cq) == 10
         cl.quiesce()
         assert _drain_tags(cq) == list(range(10))
 

@@ -24,6 +24,7 @@ Covered invariants:
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 
@@ -40,6 +41,7 @@ from repro.core import (LCQ, AtomicCounter, AtomicCredit, AtomicFlag,
                         HostMatchingEngine, HostPacketPool, LocalCluster,
                         MatchKind, ProgressWorkerPool,
                         ThreadSafeCompletionQueue, TryLock, done, post_am_x)
+from repro.core.concurrency.lcq import drain as lcq_drain
 from repro.core.packet_pool import init_pool, pool_get
 from repro.core.status import ErrorCode
 
@@ -250,6 +252,85 @@ class TestLCQ:
         flat = sorted(x for chunk in popped for x in chunk)
         assert flat == list(range(NP * PER)), (
             f"lost={NP * PER - len(flat)} or duplicated")
+
+    def test_push_many_pop_many_single_thread(self):
+        q = LCQ(8)
+        assert q.push_many(list(range(5))) == 5
+        assert q.pop_many(3) == [0, 1, 2]
+        assert q.push_many(list(range(5, 12))) == 6   # only 6 slots free
+        assert q.pop_many() == [3, 4, 5, 6, 7, 8, 9, 10]
+        assert q.pop_many() == []                     # empty
+        # scalar/batch interleave across wrap-around laps
+        for _ in range(5):
+            assert q.push(99)
+            assert q.push_many([1, 2]) == 2
+            assert q.pop() == (99, True)
+            assert q.pop_many() == [1, 2]
+
+    def test_push_many_full_accepts_zero(self):
+        q = LCQ(4)
+        assert q.push_many([0, 1, 2, 3]) == 4
+        assert q.push_many([9, 9]) == 0               # full, nothing lost
+        assert q.pop_many() == [0, 1, 2, 3]
+
+    def test_batch_mpmc_no_lost_no_dup(self):
+        """Mixed scalar/batch producers and consumers: every item popped
+        exactly once (the single-CAS bulk ticket claims must not double-
+        grant or skip slots under contention)."""
+        q = LCQ(64)
+        NP, NC, PER = 4, 4, 3000
+        popped = [[] for _ in range(NC)]
+        done_flag = AtomicFlag()
+
+        def producer(base):
+            rng = random.Random(base)
+            i = 0
+            while i < PER:
+                hi = min(i + rng.randint(1, 7), PER)
+                if rng.random() < 0.3:
+                    if q.push(base * PER + i):
+                        i += 1
+                else:
+                    i += q.push_many([base * PER + j
+                                      for j in range(i, hi)])
+                if i < PER:
+                    time.sleep(0)
+
+        def consumer(out):
+            rng = random.Random(id(out))
+            while True:
+                got = q.pop_many(rng.randint(1, 9))
+                if got:
+                    out.extend(got)
+                elif done_flag.is_set() and not len(q):
+                    out.extend(q.pop_many())          # final sweep
+                    if not len(q):
+                        return
+                else:
+                    time.sleep(1e-6)
+
+        cthreads = [threading.Thread(target=lambda o=o: consumer(o),
+                                     daemon=True) for o in popped]
+        for t in cthreads:
+            t.start()
+        run_threads([lambda b=b: producer(b) for b in range(NP)])
+        done_flag.test_and_set()
+        deadline = time.monotonic() + JOIN_TIMEOUT
+        for t in cthreads:
+            t.join(max(0.0, deadline - time.monotonic()))
+        assert not any(t.is_alive() for t in cthreads), "consumer stuck"
+        flat = sorted(x for chunk in popped for x in chunk)
+        assert flat == list(range(NP * PER)), (
+            f"lost={NP * PER - len(flat)} or duplicated")
+
+    def test_threadsafe_cq_signal_many_prefix(self):
+        cq = ThreadSafeCompletionQueue(capacity=16)
+        res = cq.signal_many([done(tag=i) for i in range(20)])
+        assert [r.is_retry() for r in res] == [False] * 16 + [True] * 4
+        assert all(r.code == ErrorCode.RETRY_QUEUE_FULL for r in res[16:])
+        assert [s.tag for s in cq.pop_many()] == list(range(16))
+        assert cq.pop_many() == []
+        assert lcq_drain(cq) == []                    # bulk drain path
 
     def test_threadsafe_cq_protocol(self):
         cq = ThreadSafeCompletionQueue(capacity=2)
@@ -492,14 +573,36 @@ class TestProgressWorkers:
 
     def test_try_progress_skips_held_device(self):
         cl = LocalCluster(2)
-        r0 = cl[0]
+        r0, r1 = cl[0], cl[1]
         dev = r0.default_device
+        # deliverable work on the device's incoming stream: an idle
+        # device short-circuits to False before consulting the lock,
+        # and this test is about the try-lock discipline
+        cq = r0.alloc_cq(threadsafe=True)
+        rc = r0.register_rcomp(cq)
+        while post_am_x(r1, 0, np.zeros(8, np.uint8), None, None,
+                        rc)().is_retry():
+            time.sleep(1e-5)
         dev.progress_lock.acquire()
         held = []
         run_threads([lambda: held.append(r0.engine.try_progress(dev))])
         dev.progress_lock.release()
         assert held == [None]            # moved on, did not block
         assert r0.engine.try_progress(dev) is not None
+
+    def test_try_progress_idle_fast_path(self):
+        """An idle device reports False without taking the progress
+        lock — even when another thread holds it."""
+        cl = LocalCluster(2)
+        r0 = cl[0]
+        dev = r0.default_device
+        dev.progress_lock.acquire()
+        try:
+            acqs = dev.progress_lock.stats()["acquisitions"]
+            assert r0.engine.try_progress(dev) is False
+            assert dev.progress_lock.stats()["acquisitions"] == acqs
+        finally:
+            dev.progress_lock.release()
 
     def test_endpoint_workers_spec(self):
         cfg = CommConfig(inject_max_bytes=1, packets_per_lane=64,
