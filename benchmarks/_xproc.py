@@ -1,0 +1,72 @@
+"""Cross-process benchmark plumbing shared by the message-rate scripts.
+
+``--fabric shm`` (or ``socket``) turns a benchmark into an SPMD job: the
+parent re-execs *itself* under :mod:`repro.launch.spmd` with the same
+CLI, each rank-child detects the launcher env, runs its cells against a
+:class:`ProcessCluster`, and drops a JSON *fragment* into a directory the
+parent owns.  The parent merges the fragments into backend-tagged rows
+that sit alongside the in-process ``sim`` rows in the same BENCH
+document, so ``compare.py`` can gate them independently (rows are keyed
+by ``(case, backend)``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+from typing import Dict, List, Sequence
+
+FRAGDIR_ENV = "REPRO_BENCH_FRAGDIR"
+
+
+def in_child() -> bool:
+    """True when this process is an SPMD rank-child of a benchmark."""
+    from repro.launch.spmd import RANK_ENV
+    return os.environ.get(RANK_ENV) is not None
+
+
+def write_fragment(payload: Dict) -> None:
+    """Publish this rank's results for the parent (atomic rename)."""
+    from repro.launch.spmd import RANK_ENV
+    rank = int(os.environ[RANK_ENV])
+    frag = os.path.join(os.environ[FRAGDIR_ENV], f"rank{rank}.json")
+    tmp = frag + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.rename(tmp, frag)
+
+
+def launch_self(argv: Sequence[str], fabric: str, ranks: int,
+                timeout: float = 300.0) -> List[Dict]:
+    """Re-exec the calling script as an N-rank SPMD job and collect the
+    per-rank fragments.  Raises on nonzero exit (a rank lost messages,
+    leaked, or wedged past the launcher's timeout)."""
+    from repro.launch import spmd
+
+    fragdir = tempfile.mkdtemp(prefix="repro-bench-frag-")
+    prev = os.environ.get(FRAGDIR_ENV)
+    os.environ[FRAGDIR_ENV] = fragdir
+    try:
+        cmd = [sys.executable, os.path.abspath(sys.argv[0])] + list(argv)
+        code = spmd.launch(cmd, ranks, backend=fabric, timeout=timeout)
+        if code != 0:
+            raise RuntimeError(
+                f"cross-process benchmark failed (exit {code}); see the "
+                f"rank output above")
+        frags = []
+        for r in range(ranks):
+            path = os.path.join(fragdir, f"rank{r}.json")
+            if not os.path.exists(path):
+                raise RuntimeError(f"rank {r} exited 0 but wrote no "
+                                   f"result fragment")
+            with open(path) as f:
+                frags.append(json.load(f))
+        return frags
+    finally:
+        if prev is None:
+            os.environ.pop(FRAGDIR_ENV, None)
+        else:
+            os.environ[FRAGDIR_ENV] = prev
+        shutil.rmtree(fragdir, ignore_errors=True)

@@ -5,8 +5,10 @@ the fresh ``us_per_call`` numbers against the repo-tracked baselines
 (BENCH_message_rate.json / BENCH_mt_message_rate.json, full-scale runs):
 any matched case whose per-call cost regresses by more than
 ``--max-regression`` (default 25%) fails the job.  Cases are matched by
-their ``case`` string; cases present on only one side are reported and
-skipped (sweep shapes legitimately differ between smoke and full runs).
+``(case, backend)`` — rows without a ``backend`` field are ``sim``, so
+pre-transport baselines keep matching — and cases present on only one
+side are reported and skipped (sweep shapes legitimately differ between
+smoke and full runs).
 
     python benchmarks/compare.py BENCH_message_rate.json fresh.json
     python benchmarks/compare.py base.json fresh.json --max-regression 0.25
@@ -25,7 +27,9 @@ def load_rows(path: str) -> dict:
     rows = {}
     for row in doc.get("rows", []):
         if "case" in row and "us_per_call" in row:
-            rows[row["case"]] = row
+            # backend-tagged rows (shm/socket cross-process sweeps) gate
+            # separately from the sim rows sharing a case prefix
+            rows[(row["case"], row.get("backend", "sim"))] = row
     return rows
 
 
@@ -40,20 +44,24 @@ def compare(baseline_path: str, fresh_path: str,
         failures.append(f"no common cases between {baseline_path} and "
                         f"{fresh_path} — the gate compared nothing")
         return report, failures
-    for case in matched:
-        b, f = base[case]["us_per_call"], fresh[case]["us_per_call"]
+    for key in matched:
+        case, backend = key
+        label = case if backend == "sim" else f"{case}[{backend}]"
+        b, f = base[key]["us_per_call"], fresh[key]["us_per_call"]
         ratio = f / b if b else float("inf")
         verdict = "ok"
         if ratio > 1.0 + max_regression:
             verdict = "REGRESSION"
             failures.append(
-                f"{case}: {f:.3f} us/call vs baseline {b:.3f} "
+                f"{label}: {f:.3f} us/call vs baseline {b:.3f} "
                 f"({ratio:.2f}x, limit {1.0 + max_regression:.2f}x)")
-        report.append(f"{case:32s} base={b:9.3f}  fresh={f:9.3f}  "
+        report.append(f"{label:32s} base={b:9.3f}  fresh={f:9.3f}  "
                       f"{ratio:5.2f}x  {verdict}")
-    for case in sorted(set(base) ^ set(fresh)):
-        side = "baseline" if case in base else "fresh"
-        report.append(f"{case:32s} ({side} only — skipped)")
+    for key in sorted(set(base) ^ set(fresh)):
+        case, backend = key
+        label = case if backend == "sim" else f"{case}[{backend}]"
+        side = "baseline" if key in base else "fresh"
+        report.append(f"{label:32s} ({side} only — skipped)")
     return report, failures
 
 

@@ -35,6 +35,14 @@ from repro.core import LocalCluster, post_am_x
 from repro.configs.paper import PAPER
 
 
+def _xproc():
+    try:
+        from . import _xproc as mod
+    except ImportError:
+        import _xproc as mod
+    return mod
+
+
 def _run_lanes(n_lanes: int, dedicated: bool, iters: int) -> float:
     cl = LocalCluster(2, attrs={"eager_max_bytes": 64,
                                 "packets_per_lane": 64,
@@ -130,6 +138,87 @@ def _run_endpoint(width: int, stripe: str, iters: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# cross-process mode (--fabric shm|socket): the paper's PROCESS mode for
+# real — one OS process per rank over a real transport backend
+# ---------------------------------------------------------------------------
+
+def _run_xproc_cell(ctx, iters: int, fabric: str) -> dict:
+    """One rank's half of the cross-process cell: post ``iters`` AMs to
+    the ring neighbor, drain the deliveries the neighbor posts to us."""
+    from repro.core import ProcessCluster, post_am
+
+    cl = ProcessCluster(ctx.n_ranks, ctx.rank, fabric_backend=fabric,
+                        session=os.path.join(ctx.session, "cell"),
+                        fabric_depth=1 << 16)
+    rt = cl.runtime
+    cq = rt.alloc_cq()
+    rc = rt.register_rcomp(cq)      # symmetric alloc: same index per rank
+    peer = (ctx.rank + 1) % ctx.n_ranks
+    payload = np.zeros(PAPER.msg_rate_size, np.uint8)
+    got = 0
+    ctx.barrier(timeout=60)
+    t0 = time.perf_counter()
+    sent = 0
+    while sent < iters:
+        st = post_am(rt, peer, payload, remote_comp=rc)
+        if not st.is_retry():
+            sent += 1
+        else:
+            rt.progress()
+        if sent % 64 == 0:
+            rt.progress()
+        while cq.pop().is_done():
+            got += 1
+    deadline = time.monotonic() + 60.0
+    while got < iters and time.monotonic() < deadline:
+        rt.progress()
+        while cq.pop().is_done():
+            got += 1
+    dt = time.perf_counter() - t0
+    ctx.barrier(timeout=60)
+    cell = {
+        "seconds": dt,
+        "total": iters,
+        "lost": int(iters - got),
+        "leaked": int(cl.fabric.in_flight()),
+        "resolved_attrs": cl.attrs_echo(),
+    }
+    cl.close()
+    return cell
+
+
+def _xproc_child(args, iters: int) -> int:
+    from repro.launch.spmd import bootstrap
+
+    ctx = bootstrap()
+    cell = _run_xproc_cell(ctx, iters, args.fabric)
+    echo = cell.pop("resolved_attrs")
+    _xproc().write_fragment({"rank": ctx.rank, "cell": cell,
+                             "resolved_attrs": echo})
+    ctx.close()
+    return 1 if (cell["lost"] or cell["leaked"]) else 0
+
+
+def _sweep_xproc(args, iters: int) -> tuple:
+    frags = _xproc().launch_self(sys.argv[1:], args.fabric, args.ranks,
+                                 timeout=args.xproc_timeout)
+    cells = [f["cell"] for f in frags]
+    total = sum(c["total"] for c in cells)
+    dt = max(c["seconds"] for c in cells)
+    row = {
+        "bench": "message_rate",
+        "case": f"xproc/{args.fabric}",
+        "backend": args.fabric,
+        "ranks": args.ranks,
+        "us_per_call": dt / total * 1e6,
+        "derived": f"{total / dt / 1e3:.1f} kmsg/s",
+        "lost": sum(c["lost"] for c in cells),
+        "leaked_packets": sum(c["leaked"] for c in cells),
+    }
+    return [row], frags[0]["resolved_attrs"]
+
+
 def run(quick: bool = True) -> List[dict]:
     iters = PAPER.msg_rate_iters // (4 if quick else 1)
     rows = []
@@ -185,13 +274,30 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=3,
                     help="runs per cell (interleaved); the median run "
                          "is reported")
+    ap.add_argument("--fabric", default="sim",
+                    choices=("sim", "shm", "socket"),
+                    help="transport backend; non-sim adds a cross-process "
+                         "row (N OS-process ranks) alongside the sim rows")
+    ap.add_argument("--ranks", type=int, default=2,
+                    help="OS-process ranks for the cross-process row")
+    ap.add_argument("--xproc-timeout", type=float, default=300.0,
+                    help="launcher wall-clock bound for the cross-process "
+                         "row")
     ap.add_argument("--json", default="BENCH_message_rate.json",
                     help="output JSON path ('' disables)")
     args = ap.parse_args()
     iters = args.iters or PAPER.msg_rate_iters // 4
 
+    if args.fabric != "sim" and _xproc().in_child():
+        sys.exit(_xproc_child(args, iters))
+
     rows = run_endpoint_sweep(args.devices, iters, args.stripe, args.burst,
                               args.repeats)
+    for r in rows:
+        r["backend"] = "sim"
+    xproc_extra = []
+    if args.fabric != "sim":
+        xproc_extra, xecho = _sweep_xproc(args, iters)
     # one echo block per document: the widest plain cell's resolved
     # attrs (per-cell differences — n_channels/width, the bf16 cell's
     # wire_bf16 — are already encoded in the row's case name)
@@ -201,6 +307,14 @@ def main() -> None:
         r.pop("_echo", None)
         print(f"{r['case']:33s} {r['us_per_call']:8.3f} us/msg  "
               f"{r['derived']:>14s}  pushes/device={r['device_pushes']}")
+    for r in xproc_extra:
+        print(f"{r['case']:33s} {r['us_per_call']:8.3f} us/msg  "
+              f"{r['derived']:>14s}  ranks={r['ranks']} lost={r['lost']} "
+              f"leaked={r['leaked_packets']}")
+        assert r["lost"] == 0 and r["leaked_packets"] == 0, r
+    if xproc_extra:
+        rows += xproc_extra
+        resolved_attrs = {**resolved_attrs, "xproc": xecho}
     widest = plain[-1]
     if args.stripe == "round_robin":
         # by_peer/by_size legitimately concentrate homogeneous traffic on
@@ -213,6 +327,8 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"bench": "message_rate", "iters": iters,
                        "stripe": args.stripe, "burst": args.burst,
+                       "fabric": args.fabric,
+                       "ranks": args.ranks if args.fabric != "sim" else 1,
                        "resolved_attrs": resolved_attrs,
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")

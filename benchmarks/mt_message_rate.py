@@ -41,6 +41,16 @@ import numpy as np
 from repro.core import (CommDesc, CommKind, LocalCluster,
                         aggregate_lock_stats)
 
+
+def _xproc():
+    """The cross-process plumbing, importable both as a package module
+    (benchmarks.run) and as a bare script (python benchmarks/...py)."""
+    try:
+        from . import _xproc as mod
+    except ImportError:
+        import _xproc as mod
+    return mod
+
 DEFAULT_PER_THREAD = 2000
 DEFAULT_WINDOW = 16
 DEFAULT_LATENCY = 1e-3          # 1 ms simulated wire
@@ -188,6 +198,139 @@ def _run_cell_inner(n_threads: int, per_thread: int, window: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# cross-process mode (--fabric shm|socket): N OS-process ranks, T threads
+# each, over a real transport backend instead of the in-process sim
+# ---------------------------------------------------------------------------
+
+def _run_cell_xproc(ctx, n_threads: int, per_thread: int, window: int,
+                    fabric: str) -> dict:
+    """One rank's share of a cross-process cell: T posters with
+    completion windows on this rank's runtime, posting to the ring
+    neighbor over the ``fabric`` backend.  Pacing is symmetric — each
+    thread windows on the deliveries arriving from its peer-rank twin —
+    so flow control is the transport's back-pressure, not lockstep."""
+    from repro.core import ProcessCluster
+
+    cl = ProcessCluster(ctx.n_ranks, ctx.rank,
+                        attrs={"n_channels": n_threads},
+                        fabric_depth=1 << 16, fabric_backend=fabric,
+                        session=os.path.join(ctx.session,
+                                             f"cell{n_threads}"))
+    rt = cl.runtime
+    devs = [rt.alloc_device() for _ in range(n_threads)]
+    # symmetric alloc: every rank registers T rcomps in the same order,
+    # so thread t's remote_comp index means "peer's cq t" everywhere
+    cqs = [rt.alloc_cq(threadsafe=True) for _ in range(n_threads)]
+    rcs = [rt.register_rcomp(cq) for cq in cqs]
+    peer = (ctx.rank + 1) % ctx.n_ranks
+    payload = np.zeros(8, np.uint8)
+    start = threading.Barrier(n_threads + 1)
+    errors: List[BaseException] = []
+
+    def poster(tid: int) -> None:
+        dev, cq, rc = devs[tid], cqs[tid], rcs[tid]
+        posted, comped = 0, 0
+        nap = _IDLE_NAP
+        try:
+            start.wait()
+            while posted < per_thread or comped < per_thread:
+                room = min(window - max(0, posted - comped),
+                           per_thread - posted)
+                accepted = 0
+                if room > 0:
+                    sts = rt.post_many(
+                        [CommDesc(CommKind.AM, peer, payload,
+                                  size=payload.nbytes, remote_comp=rc)
+                         for _ in range(room)], device=dev)
+                    accepted = sum(1 for s in sts if not s.is_retry())
+                    posted += accepted
+                rt.engine.try_progress(dev)
+                got = cq.pop_many()
+                comped += len(got)
+                if got or accepted:
+                    nap = _IDLE_NAP
+                else:
+                    time.sleep(nap)     # waiting on the peer process
+                    nap = min(nap * 2, _IDLE_NAP_CAP)
+        except BaseException as e:            # surfaced after join
+            errors.append(e)
+
+    threads = [threading.Thread(target=poster, args=(t,), daemon=True,
+                                name=f"xposter/{t}")
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    ctx.barrier(timeout=60)                   # ranks aligned, then go
+    start.wait()
+    t0 = time.perf_counter()
+    deadline = time.monotonic() + 120.0
+    for t in threads:
+        t.join(max(0.0, deadline - time.monotonic()))
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    stuck = [t.name for t in threads if t.is_alive()]
+    if stuck:
+        raise RuntimeError(f"xproc cell wedged (rank {ctx.rank}): {stuck}")
+    ctx.barrier(timeout=60)                   # peer finished receiving too
+    total = n_threads * per_thread
+    lost = total - sum(cq.pushes for cq in cqs)
+    leaked = cl.fabric.in_flight()
+    cell = {
+        "threads": n_threads,
+        "seconds": dt,
+        "total": total,
+        "lost": int(lost),
+        "leaked": int(leaked),
+        "resolved_attrs": cl.attrs_echo(),
+    }
+    cl.close()
+    return cell
+
+
+def _xproc_child(args) -> int:
+    """Rank-child entry: run every thread-count cell, publish a result
+    fragment, exit nonzero on any lost/leaked message."""
+    from repro.launch.spmd import bootstrap
+
+    ctx = bootstrap()
+    cells, echo = [], None
+    for n in args.threads:
+        cell = _run_cell_xproc(ctx, n, args.iters, args.window,
+                               args.fabric)
+        echo = cell.pop("resolved_attrs")
+        cells.append(cell)
+    _xproc().write_fragment({"rank": ctx.rank, "cells": cells,
+                             "resolved_attrs": echo})
+    ctx.close()
+    return 1 if any(c["lost"] or c["leaked"] for c in cells) else 0
+
+
+def _sweep_xproc(args) -> tuple:
+    """Parent side: re-exec self under the SPMD launcher, merge the
+    per-rank fragments into backend-tagged rows."""
+    frags = _xproc().launch_self(sys.argv[1:], args.fabric, args.ranks,
+                                 timeout=args.xproc_timeout)
+    rows = []
+    for i, n in enumerate(args.threads):
+        cells = [f["cells"][i] for f in frags]
+        total = sum(c["total"] for c in cells)
+        dt = max(c["seconds"] for c in cells)
+        rows.append({
+            "bench": "mt_message_rate",
+            "case": f"threads={n}/xproc/{args.fabric}",
+            "backend": args.fabric,
+            "ranks": args.ranks,
+            "us_per_call": dt / total * 1e6,
+            "derived": f"{total / dt / 1e3:.1f} kmsg/s",
+            "threads": n,
+            "lost": sum(c["lost"] for c in cells),
+            "leaked_packets": sum(c["leaked"] for c in cells),
+        })
+    return rows, frags[0]["resolved_attrs"]
+
+
 def sweep(thread_counts, per_thread: int, window: int, latency: float,
           baseline: bool = True) -> tuple:
     rows = []
@@ -244,20 +387,40 @@ def main() -> None:
                     help="simulated wire latency in microseconds")
     ap.add_argument("--no-baseline", action="store_true",
                     help="skip the sequential-runs baseline")
+    ap.add_argument("--fabric", default="sim",
+                    choices=("sim", "shm", "socket"),
+                    help="transport backend; non-sim adds a cross-process "
+                         "sweep (N OS-process ranks) alongside the sim "
+                         "baseline rows")
+    ap.add_argument("--ranks", type=int, default=2,
+                    help="OS-process ranks for the cross-process sweep")
+    ap.add_argument("--xproc-timeout", type=float, default=300.0,
+                    help="launcher wall-clock bound for the cross-process "
+                         "sweep")
     ap.add_argument("--json", default="BENCH_mt_message_rate.json",
                     help="output JSON path ('' disables)")
     args = ap.parse_args()
+
+    if args.fabric != "sim" and _xproc().in_child():
+        sys.exit(_xproc_child(args))
 
     rows, resolved_attrs = sweep(args.threads, args.iters, args.window,
                                  args.latency_us / 1e6,
                                  baseline=not args.no_baseline)
     for r in rows:
+        r["backend"] = "sim"
+    if args.fabric != "sim":
+        xrows, xecho = _sweep_xproc(args)
+        rows += xrows
+        resolved_attrs = {**resolved_attrs, "xproc": xecho}
+    for r in rows:
         speed = (f"  speedup={r['speedup_vs_sequential']:.2f}x"
                  if "speedup_vs_sequential" in r else "")
-        locks = r["contention"]["device_progress_locks"]
-        print(f"{r['case']:20s} {r['us_per_call']:8.2f} us/msg  "
-              f"{r['derived']:>12s}  lost={r['lost']}"
-              f"  lock_contentions={locks['contentions']}{speed}")
+        if "contention" in r:
+            locks = r["contention"]["device_progress_locks"]
+            speed += f"  lock_contentions={locks['contentions']}"
+        print(f"{r['case']:24s} {r['us_per_call']:8.2f} us/msg  "
+              f"{r['derived']:>12s}  lost={r['lost']}{speed}")
 
     # acceptance: zero lost completions, no leaked packets, and the
     # multithreaded runs beat their sequential aggregates (progress work
@@ -267,6 +430,8 @@ def main() -> None:
     # burst plane: >= 4x fewer pool-lane lock acquisitions per message
     # than the scalar plane's 2 (get + put per message)
     for r in rows:
+        if "pool_lock_acqs_per_msg" not in r:
+            continue                    # cross-process rows ride inject
         assert r["pool_lock_acqs_per_msg"] <= 2.0 / 4, (
             f"threads={r['threads']}: pool lock amortization regressed "
             f"({r['pool_lock_acqs_per_msg']:.3f} acquisitions/msg)")
@@ -285,6 +450,8 @@ def main() -> None:
                        "threads": args.threads,
                        "window": args.window,
                        "latency_us": args.latency_us,
+                       "fabric": args.fabric,
+                       "ranks": args.ranks if args.fabric != "sim" else 1,
                        "resolved_attrs": resolved_attrs,
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")

@@ -16,7 +16,9 @@ Walks the paper's core concepts end to end on CPU:
      migration table (DESIGN.md §12)
   9. fused doorbells: packed single-descriptor bursts + the bf16 wire
      compression toggle (DESIGN.md §13)
-  10. an in-graph ring collective under shard_map (the TPU adaptation)
+  10. pluggable transport backends: shm rings in-process, then a real
+      two-OS-process run via the SPMD launcher (DESIGN.md §14)
+  11. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -222,7 +224,37 @@ def main():
           f"with attrs={{'doorbell_fused': False}} or "
           f"REPRO_ATTR_DOORBELL_FUSED=0")
 
-    # -- 10. the in-graph layer: ring collectives (run under shard_map on
+    # -- 10. transport backends (DESIGN.md §14): the fabric is an attr.
+    #       "sim" (default) is the in-process deque fabric every section
+    #       above used; "shm" swaps in mmap'd SPSC ring buffers with a
+    #       stable wire codec — same API, real bytes. -------------------
+    tcl = LocalCluster(2, attrs={"fabric_backend": "shm"})
+    tcq = tcl[1].alloc_cq()
+    trc = tcl[1].register_rcomp(tcq)
+    post_am_x(tcl[0], 1, np.arange(8, dtype=np.uint8), None, None, trc)()
+    tcl.quiesce()
+    st = tcq.pop()
+    print(f"shm backend: backend={tcl.fabric.backend} "
+          f"(source={tcl.attr_source('fabric_backend')}), AM delivered "
+          f"through a {tcl.get_attr('shm_ring_bytes')}-byte ring: "
+          f"{st.is_done()}")
+    tcl.close()                       # unlinks the ring session dir
+    #       The same backend spans OS processes: the SPMD launcher forks
+    #       N ranks that meet in a shared ring session (the paper's
+    #       process mode, Figures 2/3).  Timeout-bounded — a wedged rank
+    #       is reaped, never hung on.
+    import subprocess
+    import sys as _sys
+    demo = subprocess.run(
+        [_sys.executable, "-m", "repro.launch.spmd", "--ranks", "2",
+         "--backend", "shm", "--iters", "10", "--timeout", "60"],
+        capture_output=True, text=True, timeout=90)
+    print(f"spmd 2-process shm demo: exit={demo.returncode}")
+    for line in demo.stdout.splitlines():
+        if "spmd-demo" in line:
+            print(f"  {line}")
+
+    # -- 11. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

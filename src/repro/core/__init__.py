@@ -34,8 +34,10 @@ from .protocol import Protocol, ProtocolStats, select_protocol
 from .progress import (Endpoint, EndpointSpec, Fabric, MemoryRegion,
                        PackedBurst, ProgressEngine, RendezvousManager,
                        WireKind, WireMsg, pack_payloads)
-from .runtime import (LocalCluster, Runtime, g_runtime, g_runtime_fina,
-                      g_runtime_init, progress, progress_x)
+from .runtime import (LocalCluster, ProcessCluster, Runtime, g_runtime,
+                      g_runtime_fina, g_runtime_init, progress, progress_x)
+from .transport import (Transport, backend_class, decode_msg, encode_msg,
+                        make_transport, msg_weight, register_backend)
 from .status import (ErrorCode, ErrorKind, FatalError, Status, done, posted,
                      retry)
 from . import collectives
@@ -72,6 +74,9 @@ __all__ = [
     "WireMsg", "g_runtime", "g_runtime_fina", "g_runtime_init", "progress",
     "progress_x", "Endpoint", "EndpointSpec", "ProgressEngine",
     "RendezvousManager",
+    # pluggable transport backends (DESIGN.md §14)
+    "Transport", "ProcessCluster", "backend_class", "decode_msg",
+    "encode_msg", "make_transport", "msg_weight", "register_backend",
     # modes & protocol
     "CommConfig", "CommMode", "parse_mode", "Protocol", "ProtocolStats",
     "select_protocol", "off", "OffBuilder",

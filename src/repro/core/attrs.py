@@ -243,6 +243,17 @@ register_attr("pool_lanes", int, 0, minimum=0, zero_means="derive",
               resources=("runtime", "cluster", "pool"),
               doc="packet-pool lanes; 0 derives max(1, n_channels)")
 # fabric / cluster
+register_attr("fabric_backend", str, "sim",
+              resources=("cluster", "fabric"),
+              choices=("sim", "shm", "socket"),
+              doc="transport backend behind the Fabric surface "
+                  "(DESIGN.md §14): sim = deterministic in-process "
+                  "deques, shm = shared-memory SPSC rings between OS "
+                  "processes, socket = Unix-domain stream fallback")
+register_attr("shm_ring_bytes", int, 1 << 20, minimum=4096,
+              resources=("cluster", "fabric"),
+              doc="data-region capacity of each shm ring buffer; "
+                  "payloads above half this spill to side files")
 register_attr("fabric_depth", int, 4096, minimum=1,
               resources=("cluster", "fabric"),
               doc="bounded per-(dst, device) wire-queue depth; a full "

@@ -2,8 +2,9 @@
 
 Layout (each file one concern; the paper's Figure-1 chain in engine.py):
 
-* :mod:`.fabric` — :class:`Fabric` (the simulated NIC/ICI), wire messages,
-  registered memory, pending-op records.
+* :mod:`.fabric` — registered memory, pending-op records, payload staging
+  (the wire types and the :class:`Fabric` implementation itself live in
+  :mod:`repro.core.transport`; re-exported here for compatibility).
 * :mod:`.engine` — :class:`ProgressEngine`: posting + the reaction chain
   (drain backlog -> source completions -> poll incoming -> react).
 * :mod:`.rendezvous` — :class:`RendezvousManager`: RTS/CTS/RDMA handshake

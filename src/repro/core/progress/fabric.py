@@ -1,71 +1,37 @@
-"""The simulated interconnect: wire messages, queues, registered memory.
+"""Fabric-facing state: pending ops, registered memory, payload staging.
 
-The :class:`Fabric` stands in for the NIC/ICI: per ``(dst-rank,
-device-stream)`` bounded FIFO queues.  A full queue surfaces ``retry`` —
-the same back-pressure path a full ibv send queue triggers in the paper
-(§4.4) — and the progress engine moves such requests through the backlog
-queue.  Messages are keyed by the *sender's* device index, so each device
-stream is an independent, ordered channel: replicating devices replicates
-streams, which is exactly the paper's resource-replication story (§3.2.3).
+The wire types (:class:`WireMsg`, :class:`PackedBurst`, :data:`WireKind`)
+and the fabric implementation itself now live in
+:mod:`repro.core.transport` (DESIGN.md §14) — the simulated in-process
+fabric is the ``sim`` backend of the pluggable :class:`Transport` ABC,
+and ``shm``/``socket`` backends carry the same messages between OS
+processes.  This module keeps the *progress-engine side* of the story —
+source-side pending state, memory registration (§3.3.1), and the payload
+staging helpers for doorbell fusion (§4.3) — and re-exports the moved
+names so every existing import keeps working.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import itertools
-import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import ml_dtypes
 import numpy as np
 
-from .. import attrs as _attrs
 from ..completion import CompletionObject
-from ..concurrency.atomics import AtomicCounter
-from ..matching import MatchingPolicy
 from ..post import CommKind
 from ..status import FatalError
+from ..transport import (FABRIC_ATTRS, PACKED_KINDS, PackedBurst, WireKind,
+                         WireMsg, msg_weight)
+from ..transport.sim import Fabric
 
-#: attrs the fabric resolves at alloc time
-FABRIC_ATTRS = ("fabric_depth", "link_latency")
-
-
-class WireKind:
-    EAGER_SEND = "eager_send"      # send-recv eager payload
-    EAGER_AM = "eager_am"          # active-message eager payload
-    # fused doorbells (DESIGN.md §13): ONE descriptor carries a whole
-    # burst's payloads as a packed 2-D byte array
-    EAGER_PACKED_SEND = "eager_packed_send"
-    EAGER_PACKED_AM = "eager_packed_am"
-    RTS = "rts"                    # rendezvous request-to-send
-    CTS = "cts"                    # rendezvous clear-to-send
-    RDMA_PAYLOAD = "rdma_payload"  # rendezvous data movement (zero-copy)
-    PUT = "put"                    # RMA put (optionally with signal)
-    GET_REQ = "get_req"            # RMA get request
-    GET_RESP = "get_resp"          # RMA get response
-
-
-#: packed wire kinds — each such message weighs ``payload.count`` toward
-#: the stream depth bound (and every message-counting telemetry)
-PACKED_KINDS = frozenset((WireKind.EAGER_PACKED_SEND,
-                          WireKind.EAGER_PACKED_AM))
-
-
-@dataclasses.dataclass
-class WireMsg:
-    kind: str
-    src: int
-    dst: int
-    tag: int = 0
-    payload: Any = None
-    size: int = 0
-    rcomp: Optional[int] = None
-    matching_policy: MatchingPolicy = MatchingPolicy.RANK_TAG
-    # rendezvous bookkeeping
-    op_id: int = -1                # source-side pending-op id
-    remote_buf: Any = None         # (region_id, offset) for RMA
-    device_index: int = 0          # which device stream this rides
-    ready_at: float = 0.0          # wire-latency model: drainable after this
+__all__ = [
+    "FABRIC_ATTRS", "PACKED_KINDS", "PackedBurst", "WireKind", "WireMsg",
+    "msg_weight", "Fabric", "PendingOp", "PendingBurst", "next_op_id",
+    "MemoryRegion", "as_bytes_view", "payload_to_bytes",
+    "payloads_to_bytes", "pack_payloads",
+]
 
 
 @dataclasses.dataclass
@@ -80,49 +46,6 @@ class PendingOp:
     packet: int = -1               # bufcopy: packet id to return to the pool
     lane: int = 0
     user_context: Any = None
-
-
-@dataclasses.dataclass
-class PackedBurst:
-    """One fused eager doorbell's wire image (DESIGN.md §13).
-
-    The whole burst rides a single :class:`WireMsg` whose payload is this
-    descriptor: ``data`` holds the K wire rows as one packed 2-D byte
-    array (one stacked copy staged them), ``sizes[i]`` is row *i*'s
-    delivered payload size in bytes, and ``tags[i]`` its message tag.
-    ``wire_dtype == "bf16"`` marks rows carrying bf16-compressed float32
-    payloads — :meth:`delivered_payloads` restores them to f32 bytes, so
-    receivers observe flat uint8 arrays exactly like the scalar path.
-    """
-
-    data: np.ndarray               # (count, row_bytes) uint8 wire bytes
-    sizes: np.ndarray              # (count,) delivered bytes per row
-    tags: List[int]                # per-row message tags
-    count: int
-    wire_dtype: Optional[str] = None
-
-    def prefix(self, n: int) -> "PackedBurst":
-        """The first ``n`` rows — a fabric prefix-accept split point."""
-        return PackedBurst(self.data[:n], self.sizes[:n], self.tags[:n],
-                           n, self.wire_dtype)
-
-    def delivered_payloads(self) -> List[np.ndarray]:
-        """Per-row payload byte arrays as the receiver must observe them
-        (bf16 rows decompressed back to float32 bytes in ONE vectorized
-        cast for the whole burst)."""
-        if self.wire_dtype == "bf16":
-            # order="C": astype's default order='K' keeps a broadcast
-            # row's degenerate strides, which the uint8 view rejects
-            rows = (self.data.view(ml_dtypes.bfloat16)
-                    .astype(np.float32, order="C").view(np.uint8))
-        else:
-            rows = self.data
-        width = rows.shape[1]
-        sizes = self.sizes
-        if sizes.size and int(sizes[0]) == width \
-                and bool((sizes == width).all()):
-            return list(rows)              # uniform full-width: row views
-        return [rows[i, :int(s)] for i, s in enumerate(sizes)]
 
 
 @dataclasses.dataclass
@@ -146,205 +69,6 @@ _op_ids = itertools.count()
 
 def next_op_id() -> int:
     return next(_op_ids)
-
-
-class Fabric(_attrs.AttrResource):
-    """Bounded per-(dst, device) FIFO queues; the NIC send-queue stand-in.
-
-    ``depth`` bounds each queue — a full queue is the paper's "underlying
-    network send queue is full" event and surfaces ``retry``.
-
-    ``latency`` (seconds) models the wire: a pushed message only becomes
-    drainable ``latency`` after its push.  The default (0) keeps the
-    historical instantly-visible behaviour; the multithreaded message-rate
-    benchmark uses a nonzero latency so that completion-window waits are
-    real and threads can overlap them — the paper's core asynchrony
-    argument.  Thread-safety note (DESIGN.md §10): streams are
-    single-consumer (the consumer device's progress try-lock serializes
-    ``drain``); concurrent producers ride the GIL-atomic deque append, so
-    the depth bound is approximate by at most the number of racing
-    posters — back-pressure, not an invariant.
-    """
-
-    def __init__(self, n_ranks: int, depth: int = 4096,
-                 latency: float = 0.0,
-                 resolved: Optional[_attrs.ResolvedAttrs] = None):
-        self.n_ranks = n_ranks
-        self.depth = depth
-        self.latency = latency
-        self._queues: Dict[Tuple[int, int], collections.deque] = {}
-        # per-stream weight beyond len(queue): a packed doorbell occupies
-        # one deque slot but weighs payload.count messages toward the
-        # depth bound, so _extra holds sum(count - 1) per stream.  Same
-        # approximate-under-races contract as the depth bound itself.
-        self._extra: Dict[Tuple[int, int], int] = {}
-        # atomic: producers on any thread bump these concurrently
-        self._pushes = AtomicCounter()
-        self._full_events = AtomicCounter()
-        self._init_attrs(resolved or _attrs.resolved_from_values(
-            {"fabric_depth": depth, "link_latency": latency}))
-        self._export_attr("in_flight", self.in_flight)
-        self._export_attr("pushes", lambda: self.pushes)
-        self._export_attr("full_events", lambda: self.full_events)
-
-    @property
-    def pushes(self) -> int:
-        return self._pushes.load()
-
-    @property
-    def full_events(self) -> int:
-        return self._full_events.load()
-
-    def _q(self, dst: int, device_index: int) -> collections.deque:
-        return self._queues.setdefault((dst, device_index),
-                                       collections.deque())
-
-    def try_push(self, msg: WireMsg) -> bool:
-        q = self._q(msg.dst, msg.device_index)
-        if len(q) + self._extra.get((msg.dst, msg.device_index), 0) \
-                >= self.depth:
-            self._full_events.fetch_add(1)
-            return False
-        if self.latency:
-            msg.ready_at = time.perf_counter() + self.latency
-        q.append(msg)
-        self._pushes.fetch_add(1)
-        return True
-
-    def push_burst(self, msgs: Sequence[WireMsg]) -> int:
-        """One doorbell: push a burst of messages bound for the SAME
-        ``(dst, device_index)`` stream.  Accepts the longest prefix that
-        fits under the depth bound (never a subsequence — accepting
-        message k+1 after rejecting k would break stream FIFO) and
-        returns how many were accepted.  Per-burst costs are paid once:
-        one queue lookup, one latency stamp, one deque extend, one
-        telemetry FAA — the paper's §4.3 amortization at the device
-        boundary."""
-        if not msgs:
-            return 0
-        dst, didx = msgs[0].dst, msgs[0].device_index
-        for m in msgs[1:]:
-            if m.dst != dst or m.device_index != didx:
-                raise FatalError("push_burst: a doorbell rides one "
-                                 "(dst, device) stream; got mixed streams")
-        q = self._q(dst, didx)
-        n = min(len(msgs), max(0, self.depth - len(q)
-                               - self._extra.get((dst, didx), 0)))
-        if n < len(msgs):
-            self._full_events.fetch_add(1)
-        if n == 0:
-            return 0
-        accepted = msgs[:n]
-        if self.latency:
-            ready = time.perf_counter() + self.latency
-            for m in accepted:
-                m.ready_at = ready
-        q.extend(accepted)
-        self._pushes.fetch_add(n)
-        return n
-
-    def push_packed(self, msg: WireMsg) -> int:
-        """Ring a fused doorbell: ONE descriptor whose :class:`PackedBurst`
-        payload carries the whole burst.  The burst weighs ``count``
-        messages toward the stream depth bound — split points are
-        identical to pushing the rows through :meth:`push_burst` — and
-        accepts the longest row prefix that fits (the rejected suffix is
-        the caller's to retry).  Per-doorbell costs collapse to one queue
-        lookup, one latency stamp, one append, one telemetry FAA.
-        Returns the number of rows accepted."""
-        burst: PackedBurst = msg.payload
-        key = (msg.dst, msg.device_index)
-        q = self._q(*key)
-        n = min(burst.count,
-                max(0, self.depth - len(q) - self._extra.get(key, 0)))
-        if n < burst.count:
-            self._full_events.fetch_add(1)
-        if n == 0:
-            return 0
-        if n < burst.count:                  # prefix-accept split
-            pb = burst.prefix(n)
-            msg = dataclasses.replace(msg, payload=pb,
-                                      size=int(pb.data.nbytes))
-        if self.latency:
-            msg.ready_at = time.perf_counter() + self.latency
-        q.append(msg)
-        if n > 1:
-            self._extra[key] = self._extra.get(key, 0) + n - 1
-        self._pushes.fetch_add(n)
-        return n
-
-    def ready(self, dst: int, device_index: int) -> bool:
-        """Cheap unlocked readiness probe: is at least one message on
-        this stream due for delivery?  The poll-before-lock doorbell
-        check — idle progress passes branch on this instead of paying
-        the lock + telemetry + drain machinery to discover nothing.
-        Safe without the stream lock: a stale True costs one full pass,
-        a stale False is indistinguishable from polling a hair earlier."""
-        q = self._queues.get((dst, device_index))
-        if not q:
-            return False
-        if not self.latency:
-            return True
-        try:
-            return q[0].ready_at <= time.perf_counter()
-        except IndexError:            # racing drain emptied the stream
-            return False
-
-    def drain(self, dst: int, device_index: int, limit: int = 0
-              ) -> List[WireMsg]:
-        """Pop ready messages from one stream.  ``limit`` bounds the
-        burst: ``limit == 0`` means "drain all" (every currently-ready
-        message), ``limit > 0`` caps the batch at that many messages per
-        call; ``limit < 0`` is an error."""
-        if limit < 0:
-            raise ValueError(f"drain: limit must be >= 0 (0 = drain all), "
-                             f"got {limit}")
-        q = self._q(dst, device_index)
-        n = len(q) if limit == 0 else min(limit, len(q))
-        if not self.latency:
-            out = [q.popleft() for _ in range(n)]
-        else:
-            # latency model: streams are FIFO, so stop at the first message
-            # still "on the wire"
-            now = time.perf_counter()
-            out = []
-            while len(out) < n and q and q[0].ready_at <= now:
-                out.append(q.popleft())
-        # settle the packed-weight surplus — only streams that actually
-        # carried fused doorbells pay the scan (scalar drains skip it)
-        key = (dst, device_index)
-        ex = self._extra.get(key)
-        if ex:
-            dec = sum(m.payload.count - 1 for m in out
-                      if m.kind in PACKED_KINDS)
-            if dec:
-                self._extra[key] = ex - dec
-        return out
-
-    def stream_depth(self, dst: int, device_index: int) -> int:
-        """Queued messages on one stream (including not-yet-drainable
-        ones; a packed doorbell counts its row count) — the lock-free
-        idle probe progress drivers use to skip a quiet device without
-        paying for a full locked pass."""
-        q = self._queues.get((dst, device_index))
-        if q is None:
-            return 0
-        return len(q) + self._extra.get((dst, device_index), 0)
-
-    def in_flight(self) -> int:
-        """Total queued messages (including not-yet-drainable ones);
-        packed doorbells count their row counts."""
-        return (sum(len(q) for q in self._queues.values())
-                + sum(self._extra.values()))
-
-    def pending_to(self, dst: int) -> int:
-        return sum(len(q) + self._extra.get(k, 0)
-                   for k, q in self._queues.items() if k[0] == dst)
-
-    def pending_streams(self, dst: int) -> List[int]:
-        """Device-stream indices with traffic queued toward ``dst``."""
-        return sorted(i for (d, i), q in self._queues.items()
-                      if d == dst and q)
 
 
 # ---------------------------------------------------------------------------

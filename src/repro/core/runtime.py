@@ -45,6 +45,7 @@ from .progress import (ENDPOINT_ATTRS, Endpoint, EndpointSpec, Fabric,
                        MemoryRegion,
                        PendingOp, ProgressEngine, RendezvousManager,
                        WireKind, WireMsg, as_bytes_view, payload_to_bytes)
+from .transport import FABRIC_ATTRS, Transport, make_transport
 
 # back-compat aliases for the old private helpers
 _as_bytes_view = as_bytes_view
@@ -362,7 +363,8 @@ class LocalCluster(_attrs.AttrResource):
     def __init__(self, n_ranks: int, config: Optional[CommConfig] = None,
                  fabric_depth: Optional[int] = None,
                  link_latency: Optional[float] = None,
-                 attrs: Optional[Mapping[str, Any]] = None):
+                 attrs: Optional[Mapping[str, Any]] = None,
+                 fabric_backend: Optional[str] = None):
         self.n_ranks = n_ranks
         config = config or CommConfig()
         # the runtime-level layer: explicit config fields, then the attrs
@@ -379,22 +381,49 @@ class LocalCluster(_attrs.AttrResource):
         self.config = CommConfig(**config_layer)
         fabric_overrides = {k: v for k, v in
                             (("fabric_depth", fabric_depth),
-                             ("link_latency", link_latency))
+                             ("link_latency", link_latency),
+                             ("fabric_backend", fabric_backend))
                             if v is not None}
-        fr = _attrs.resolve(("fabric_depth", "link_latency"),
-                            runtime=self._attr_layer,
+        # FABRIC_ATTRS includes fabric_backend: an unknown backend name
+        # raises AttrError right here, at alloc time
+        fr = _attrs.resolve(FABRIC_ATTRS, runtime=self._attr_layer,
                             overrides=fabric_overrides)
-        self.fabric = Fabric(n_ranks, depth=fr["fabric_depth"],
-                             latency=fr["link_latency"], resolved=fr)
+        self.fabric = make_transport(
+            fr["fabric_backend"], n_ranks, depth=fr["fabric_depth"],
+            latency=fr["link_latency"], resolved=fr,
+            ring_bytes=fr["shm_ring_bytes"], **self._transport_extra())
         self._init_attrs(
             fr.merged(_attrs.resolve(RUNTIME_ATTRS,
                                      runtime=self._attr_layer)))
         self._export_attr("rank_n", lambda: self.n_ranks)
         self._export_attr("in_flight", self.fabric.in_flight)
-        self.runtimes = [Runtime(r, self) for r in range(n_ranks)]
+        self.runtimes = [Runtime(r, self) for r in self._local_ranks()]
+
+    def _transport_extra(self) -> Dict[str, Any]:
+        """Extra make_transport kwargs; the base cluster is solo-mode (all
+        ranks in-process), so cross-process identity stays unset."""
+        return {}
+
+    def _local_ranks(self):
+        """Which ranks live in this process (all of them here)."""
+        return range(self.n_ranks)
+
+    def local_runtimes(self) -> List[Runtime]:
+        return list(self.runtimes)
 
     def __getitem__(self, rank: int) -> Runtime:
         return self.runtimes[rank]
+
+    def close(self) -> None:
+        """Release transport OS resources (idempotent; a no-op for the
+        in-process sim backend)."""
+        self.fabric.close()
+
+    def __enter__(self) -> "LocalCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def alloc_endpoint(self, n_devices: Optional[int] = None,
                        stripe: Optional[str] = None,
@@ -419,7 +448,7 @@ class LocalCluster(_attrs.AttrResource):
         """Drive every device of every rank; returns #work events."""
         n = 0
         for _ in range(rounds):
-            for rt in self.runtimes:
+            for rt in self.local_runtimes():
                 for dev in rt.devices:
                     n += bool(rt.progress(dev))
         return n
@@ -435,6 +464,60 @@ class LocalCluster(_attrs.AttrResource):
                 # them to become drainable rather than declaring quiet
                 _time.sleep(self.fabric.latency / 4 or 1e-5)
         raise FatalError("cluster failed to quiesce")
+
+
+class ProcessCluster(LocalCluster):
+    """One rank of an N-process SPMD job — the paper's *process mode*.
+
+    Each OS process holds exactly one :class:`Runtime` (its rank) and a
+    cross-process transport (``shm`` rings or ``socket`` frames) to its
+    peers.  Construction mirrors :class:`LocalCluster`; ``rank`` and the
+    shared ``session`` (a directory name both sides derive ring/socket
+    paths from) normally arrive from :mod:`repro.launch.spmd` via the
+    ``REPRO_SPMD_*`` environment, so benchmark code can build either
+    cluster shape from the same attrs.
+
+    ``runtimes`` maps rank → Runtime and holds only this process's rank;
+    ``cluster[r]`` for a remote rank raises — remote state is another
+    process's business.
+    """
+
+    def __init__(self, n_ranks: int, rank: int,
+                 config: Optional[CommConfig] = None,
+                 fabric_depth: Optional[int] = None,
+                 link_latency: Optional[float] = None,
+                 attrs: Optional[Mapping[str, Any]] = None,
+                 fabric_backend: Optional[str] = None,
+                 session: Optional[str] = None):
+        if not 0 <= rank < n_ranks:
+            raise FatalError(f"rank {rank} out of range for {n_ranks} ranks")
+        self.rank_me = rank
+        self._session = session
+        super().__init__(n_ranks, config, fabric_depth, link_latency,
+                         attrs, fabric_backend)
+        self.runtimes = {rt.rank: rt for rt in self.runtimes}
+        self._export_attr("rank_me", lambda: self.rank_me)
+
+    def _transport_extra(self) -> Dict[str, Any]:
+        return {"rank": self.rank_me, "session": self._session}
+
+    def _local_ranks(self):
+        return (self.rank_me,)
+
+    def local_runtimes(self) -> List[Runtime]:
+        return list(self.runtimes.values())
+
+    @property
+    def runtime(self) -> Runtime:
+        """This process's one runtime."""
+        return self.runtimes[self.rank_me]
+
+    def __getitem__(self, rank: int) -> Runtime:
+        if rank != self.rank_me:
+            raise FatalError(
+                f"rank {rank} lives in another process (this is rank "
+                f"{self.rank_me}); only the local runtime is addressable")
+        return self.runtimes[rank]
 
 
 # -- module-level convenience (paper's g_runtime) ---------------------------

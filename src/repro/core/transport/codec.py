@@ -1,0 +1,179 @@
+"""Stable binary wire codec for :class:`WireMsg` / :class:`PackedBurst`.
+
+The shm and socket backends move messages between OS processes, so the
+in-memory dataclasses need a stable byte encoding.  Pickle would work
+but pins the wire format to Python internals; instead the codec writes
+an explicit little-endian layout (struct header + raw numpy row bytes)
+that a reader in any process — or any language — can parse:
+
+    [u16 magic][u8 version][u8 kind-code]
+    [i32 src][i32 dst][i64 tag][i64 size][i64 op_id]
+    [i32 rcomp+1 (0 = None)][u8 matching-code][i32 device_index]
+    [f64 ready_at]
+    [u8 remote-buf-tag][i64 region_id][i64 offset]      (tag 0 = None)
+    [u8 payload-tag][...payload body...]
+
+Payload bodies by tag:
+
+* ``_P_NONE``   — empty;
+* ``_P_BYTES``  — ``[i64 nbytes][raw bytes]`` (flat uint8 eager payload);
+* ``_P_INTS``   — ``[i32 n][n × i64]`` (tuple-of-ints, e.g. the CTS
+  landing-count handshake payload);
+* ``_P_PACKED`` — a :class:`PackedBurst`: ``[i32 count][i32 row_bytes]``
+  ``[u8 wire-dtype-code][count × i64 sizes][count × i64 tags]``
+  ``[count*row_bytes raw row bytes]``.
+
+Round-tripping preserves delivered semantics exactly: flat uint8 views
+come back as flat uint8 arrays, packed bursts keep their per-row sizes,
+tags, and bf16 wire dtype (``delivered_payloads`` equality is the
+contract the property test pins).  Broadcast stride-0 rows are
+materialized on encode — the wire carries bytes, not strides.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, Tuple
+
+import numpy as np
+
+from ..matching import MatchingPolicy
+from ..status import FatalError
+from .wire import PackedBurst, WireKind, WireMsg
+
+_MAGIC = 0x5C17          # "LCI7"-ish; catches torn/foreign frames early
+_VERSION = 1
+
+# stable one-byte codes; append only — never renumber a released code
+_KIND_TO_CODE = {
+    WireKind.EAGER_SEND: 1,
+    WireKind.EAGER_AM: 2,
+    WireKind.EAGER_PACKED_SEND: 3,
+    WireKind.EAGER_PACKED_AM: 4,
+    WireKind.RTS: 5,
+    WireKind.CTS: 6,
+    WireKind.RDMA_PAYLOAD: 7,
+    WireKind.PUT: 8,
+    WireKind.GET_REQ: 9,
+    WireKind.GET_RESP: 10,
+}
+_CODE_TO_KIND = {v: k for k, v in _KIND_TO_CODE.items()}
+
+_POLICY_TO_CODE = {
+    MatchingPolicy.RANK_TAG: 1,
+    MatchingPolicy.RANK_ONLY: 2,
+    MatchingPolicy.TAG_ONLY: 3,
+}
+_CODE_TO_POLICY = {v: k for k, v in _POLICY_TO_CODE.items()}
+
+# payload body tags
+_P_NONE = 0
+_P_BYTES = 1
+_P_INTS = 2
+_P_PACKED = 3
+
+# packed-burst wire dtypes
+_WD_TO_CODE = {None: 0, "bf16": 1}
+_CODE_TO_WD = {v: k for k, v in _WD_TO_CODE.items()}
+
+_HDR = struct.Struct("<HBB iiqqq iBi d Bqq B")
+
+
+def _payload_bytes(payload: np.ndarray) -> bytes:
+    arr = np.ascontiguousarray(payload)
+    if arr.dtype != np.uint8:
+        arr = arr.view(np.uint8)
+    return arr.tobytes()
+
+
+def encode_msg(msg: WireMsg) -> bytes:
+    """Serialize one :class:`WireMsg` to a self-delimiting byte frame."""
+    kind_code = _KIND_TO_CODE.get(msg.kind)
+    if kind_code is None:
+        raise FatalError(f"codec: unknown wire kind {msg.kind!r}")
+    if msg.remote_buf is None:
+        rb_tag, rb0, rb1 = 0, 0, 0
+    else:
+        rb_tag, (rb0, rb1) = 1, msg.remote_buf
+
+    payload = msg.payload
+    if payload is None:
+        p_tag, body = _P_NONE, b""
+    elif isinstance(payload, PackedBurst):
+        p_tag = _P_PACKED
+        rows = np.ascontiguousarray(payload.data)   # materialize stride-0
+        if rows.dtype != np.uint8:
+            rows = rows.view(np.uint8)
+        count, row_bytes = (int(rows.shape[0]),
+                            int(rows.shape[1]) if rows.ndim > 1 else 0)
+        body = struct.pack("<iiB", count, row_bytes,
+                           _WD_TO_CODE[payload.wire_dtype])
+        body += np.asarray(payload.sizes, dtype="<i8").tobytes()
+        body += np.asarray(payload.tags, dtype="<i8").tobytes()
+        body += rows.tobytes()
+    elif isinstance(payload, tuple):
+        p_tag = _P_INTS
+        body = struct.pack("<i", len(payload))
+        body += np.asarray(payload, dtype="<i8").tobytes()
+    else:
+        p_tag = _P_BYTES
+        raw = _payload_bytes(payload)
+        body = struct.pack("<q", len(raw)) + raw
+
+    hdr = _HDR.pack(_MAGIC, _VERSION, kind_code,
+                    msg.src, msg.dst, msg.tag, msg.size, msg.op_id,
+                    0 if msg.rcomp is None else msg.rcomp + 1,
+                    _POLICY_TO_CODE[msg.matching_policy],
+                    msg.device_index, msg.ready_at,
+                    rb_tag, rb0, rb1, p_tag)
+    return hdr + body
+
+
+def decode_msg(buf: Any, offset: int = 0) -> Tuple[WireMsg, int]:
+    """Parse one frame from ``buf`` at ``offset``; returns the message
+    and the offset one past its last byte."""
+    view = memoryview(buf)
+    (magic, version, kind_code, src, dst, tag, size, op_id,
+     rcomp1, policy_code, device_index, ready_at,
+     rb_tag, rb0, rb1, p_tag) = _HDR.unpack_from(view, offset)
+    if magic != _MAGIC:
+        raise FatalError(f"codec: bad frame magic 0x{magic:04x}")
+    if version != _VERSION:
+        raise FatalError(f"codec: unsupported wire version {version}")
+    off = offset + _HDR.size
+
+    if p_tag == _P_NONE:
+        payload: Any = None
+    elif p_tag == _P_BYTES:
+        (nbytes,) = struct.unpack_from("<q", view, off)
+        off += 8
+        payload = np.frombuffer(view, np.uint8, nbytes, off).copy()
+        off += nbytes
+    elif p_tag == _P_INTS:
+        (n,) = struct.unpack_from("<i", view, off)
+        off += 4
+        payload = tuple(
+            int(v) for v in np.frombuffer(view, "<i8", n, off))
+        off += 8 * n
+    elif p_tag == _P_PACKED:
+        count, row_bytes, wd_code = struct.unpack_from("<iiB", view, off)
+        off += 9
+        sizes = np.frombuffer(view, "<i8", count, off).copy()
+        off += 8 * count
+        tags = [int(t) for t in np.frombuffer(view, "<i8", count, off)]
+        off += 8 * count
+        rows = (np.frombuffer(view, np.uint8, count * row_bytes, off)
+                .copy().reshape(count, row_bytes))
+        off += count * row_bytes
+        payload = PackedBurst(rows, sizes, tags, count,
+                              _CODE_TO_WD[wd_code])
+    else:
+        raise FatalError(f"codec: unknown payload tag {p_tag}")
+
+    msg = WireMsg(kind=_CODE_TO_KIND[kind_code], src=src, dst=dst,
+                  tag=tag, payload=payload, size=size,
+                  rcomp=None if rcomp1 == 0 else rcomp1 - 1,
+                  matching_policy=_CODE_TO_POLICY[policy_code],
+                  op_id=op_id,
+                  remote_buf=None if rb_tag == 0 else (rb0, rb1),
+                  device_index=device_index, ready_at=ready_at)
+    return msg, off

@@ -1,0 +1,342 @@
+"""SPMD launcher — N OS-process ranks over a cross-process transport.
+
+The paper's evaluation compares its multithreaded runtime against the
+traditional *multi-process* execution mode (Figures 2/3); this launcher
+provides that mode.  It forks N copies of a program (a built-in
+message-window demo by default, or any command after ``--``), wires the
+bootstrap exchange, and owns teardown:
+
+* **bootstrap** — rank / world-size / session discovery rides the
+  environment (``REPRO_SPMD_RANK`` / ``REPRO_SPMD_NRANKS`` /
+  ``REPRO_SPMD_SESSION``); the session is a directory both sides derive
+  ring-file and socket paths from, so no fd passing or port exchange is
+  needed.  :func:`bootstrap` reads it back in the child and returns the
+  :class:`SpmdContext`.
+* **barrier** — an mmap'd file of per-rank generation counters in the
+  session dir (one 64-byte line per rank, single-writer each — the same
+  SPSC discipline as the shm rings).  ``ctx.barrier()`` bumps my counter
+  and spins (with sleep backoff and a timeout) until every rank reaches
+  my generation.
+* **teardown** — every child runs in its own process group
+  (``start_new_session``); when any rank dies, the launcher SIGTERMs the
+  surviving groups, escalates to SIGKILL after a grace period, reaps
+  everything, removes the session dir, and exits nonzero.  Joins are
+  timeout-bounded — a wedged rank cannot hang the launcher.
+
+Usage::
+
+    python -m repro.launch.spmd --ranks 2 --backend shm
+    python -m repro.launch.spmd --ranks 2 --backend shm \\
+        --attr fabric_depth=1024 -- python my_rank_program.py
+"""
+from __future__ import annotations
+
+import argparse
+import mmap
+import os
+import shutil
+import signal
+import struct
+import subprocess
+import sys
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+RANK_ENV = "REPRO_SPMD_RANK"
+NRANKS_ENV = "REPRO_SPMD_NRANKS"
+SESSION_ENV = "REPRO_SPMD_SESSION"
+
+_SLOT = 64                       # one cache line per rank counter
+_BARRIER_FILE = "barrier"
+
+
+def _default_session_root(backend: str) -> str:
+    if backend == "shm" and os.path.isdir("/dev/shm"):
+        return "/dev/shm"
+    return tempfile.gettempdir()
+
+
+@dataclass
+class SpmdContext:
+    """One rank's view of the SPMD job (from :func:`bootstrap`)."""
+    rank: int
+    n_ranks: int
+    session: str                 # absolute session-dir path
+    _mm: Optional[mmap.mmap] = field(default=None, repr=False)
+    _gen: int = 0
+
+    def _barrier_mm(self) -> mmap.mmap:
+        if self._mm is None:
+            path = os.path.join(self.session, _BARRIER_FILE)
+            size = _SLOT * self.n_ranks
+            fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o600)
+            try:
+                os.ftruncate(fd, size)   # idempotent fixed size
+                self._mm = mmap.mmap(fd, size)
+            finally:
+                os.close(fd)
+        return self._mm
+
+    def barrier(self, timeout: float = 30.0) -> None:
+        """Block until every rank reaches this barrier (generation
+        counters: my slot is mine to write, peers' slots mine to read)."""
+        mm = self._barrier_mm()
+        self._gen += 1
+        struct.pack_into("<Q", mm, _SLOT * self.rank, self._gen)
+        deadline = time.monotonic() + timeout
+        nap = 1e-6
+        while True:
+            done = all(
+                struct.unpack_from("<Q", mm, _SLOT * r)[0] >= self._gen
+                for r in range(self.n_ranks))
+            if done:
+                return
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"rank {self.rank}: barrier generation {self._gen} "
+                    f"timed out after {timeout}s")
+            time.sleep(nap)
+            nap = min(nap * 2, 1e-3)
+
+    def close(self) -> None:
+        if self._mm is not None:
+            self._mm.close()
+            self._mm = None
+
+
+def bootstrap() -> SpmdContext:
+    """Child-side bootstrap: recover rank identity from the launcher's
+    environment.  Raises if not running under the launcher."""
+    rank = os.environ.get(RANK_ENV)
+    if rank is None:
+        raise RuntimeError(
+            "bootstrap(): not an SPMD child (REPRO_SPMD_RANK unset); "
+            "run under `python -m repro.launch.spmd`")
+    return SpmdContext(rank=int(rank),
+                       n_ranks=int(os.environ[NRANKS_ENV]),
+                       session=os.environ[SESSION_ENV])
+
+
+# ---------------------------------------------------------------------------
+# launcher (parent side)
+# ---------------------------------------------------------------------------
+
+def _child_env(rank: int, n_ranks: int, session: str, backend: str,
+               attr_overrides: Dict[str, str]) -> Dict[str, str]:
+    env = dict(os.environ)
+    env[RANK_ENV] = str(rank)
+    env[NRANKS_ENV] = str(n_ranks)
+    env[SESSION_ENV] = session
+    env["REPRO_ATTR_FABRIC_BACKEND"] = backend
+    for name, value in attr_overrides.items():
+        env[f"REPRO_ATTR_{name.upper()}"] = value
+    return env
+
+
+def _kill_group(proc: subprocess.Popen, sig: int) -> None:
+    try:
+        os.killpg(proc.pid, sig)     # child is its own session/group leader
+    except (ProcessLookupError, PermissionError):
+        pass
+
+
+def _reap(procs: Sequence[subprocess.Popen], grace: float = 5.0) -> None:
+    """Terminate every surviving process group; escalate to SIGKILL."""
+    for p in procs:
+        if p.poll() is None:
+            _kill_group(p, signal.SIGTERM)
+    deadline = time.monotonic() + grace
+    for p in procs:
+        if p.poll() is None:
+            try:
+                p.wait(timeout=max(0.0, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                pass
+    for p in procs:
+        if p.poll() is None:
+            _kill_group(p, signal.SIGKILL)
+            try:
+                p.wait(timeout=grace)
+            except subprocess.TimeoutExpired:
+                pass                 # unkillable (D-state); reported below
+
+
+def launch(cmd: List[str], n_ranks: int, backend: str = "shm",
+           attr_overrides: Optional[Dict[str, str]] = None,
+           timeout: float = 120.0, session: Optional[str] = None,
+           keep_session: bool = False) -> int:
+    """Fork ``cmd`` N times with SPMD bootstrap env; returns the exit
+    code (0 only if every rank exited 0 within ``timeout``)."""
+    owns_session = session is None
+    if owns_session:
+        session = tempfile.mkdtemp(prefix="repro-spmd-",
+                                   dir=_default_session_root(backend))
+    session = os.path.abspath(session)
+    os.makedirs(session, exist_ok=True)
+    procs: List[subprocess.Popen] = []
+    code = 0
+    try:
+        for rank in range(n_ranks):
+            procs.append(subprocess.Popen(
+                cmd, env=_child_env(rank, n_ranks, session, backend,
+                                    attr_overrides or {}),
+                start_new_session=True))
+        deadline = time.monotonic() + timeout
+        live = list(procs)
+        while live:
+            for p in list(live):
+                rc = p.poll()
+                if rc is None:
+                    continue
+                live.remove(p)
+                if rc != 0:
+                    rank = procs.index(p)
+                    print(f"spmd: rank {rank} exited with {rc}; "
+                          f"tearing down {len(live)} surviving ranks",
+                          file=sys.stderr)
+                    code = rc if rc > 0 else 1
+                    live = []
+                    break
+            if time.monotonic() >= deadline:
+                print(f"spmd: timeout after {timeout}s; killing all ranks",
+                      file=sys.stderr)
+                code = code or 124
+                break
+            if live:
+                time.sleep(0.02)
+    finally:
+        _reap(procs)
+        if owns_session and not keep_session:
+            shutil.rmtree(session, ignore_errors=True)
+    return code
+
+
+# ---------------------------------------------------------------------------
+# built-in demo program: a cross-process message-rate window
+# ---------------------------------------------------------------------------
+
+def _run_demo(window: int, iters: int, size: int) -> int:
+    """Each rank posts ``window`` eager AMs per iteration to its ring
+    neighbor and progresses until the window completes — the message-rate
+    kernel cross-process.  Exits nonzero on lost or leaked messages."""
+    import numpy as np
+
+    from repro.core import ProcessCluster, post_am
+
+    ctx = bootstrap()
+    backend = os.environ.get("REPRO_ATTR_FABRIC_BACKEND", "shm")
+    cluster = ProcessCluster(ctx.n_ranks, ctx.rank,
+                             fabric_backend=backend, session=ctx.session)
+    rt = cluster.runtime
+    cq = rt.alloc_cq()
+    rt.register_rcomp(cq)        # symmetric alloc: rcomp index 0 everywhere
+    peer = (ctx.rank + 1) % ctx.n_ranks
+    buf = np.arange(size, dtype=np.uint8)
+    got = 0
+
+    # a rank must never outlive its job: if the launcher is SIGKILLed its
+    # teardown cannot run, and a peer-less rank would spin in the posting
+    # retry loop forever.  Orphan check (reparented => launcher died) plus
+    # a hard wall-clock bound make every loop below self-terminating.
+    ppid0 = os.getppid()
+    hard_deadline = time.monotonic() + float(
+        os.environ.get("REPRO_SPMD_DEADLINE", "600"))
+
+    def check_alive() -> None:
+        if os.getppid() != ppid0:
+            print(f"spmd-demo rank {ctx.rank}: launcher died; exiting",
+                  file=sys.stderr)
+            os._exit(2)
+        if time.monotonic() > hard_deadline:
+            print(f"spmd-demo rank {ctx.rank}: hard deadline exceeded",
+                  file=sys.stderr)
+            os._exit(3)
+
+    ctx.barrier()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        posted = 0
+        while posted < window:
+            st = post_am(rt, peer, buf, remote_comp=0)
+            if not st.is_retry():
+                posted += 1
+            else:
+                check_alive()
+                rt.progress()
+            while cq.pop().is_done():
+                got += 1
+        # finish the iteration's own sends; peer deliveries keep landing
+        # (ring back-pressure — not peer lockstep — is the flow control)
+        spin_deadline = time.monotonic() + 10.0
+        while rt.pending_ops and time.monotonic() < spin_deadline:
+            check_alive()
+            rt.progress()
+            while cq.pop().is_done():
+                got += 1
+    # drain until every rank's deliveries arrived (peer may lag)
+    expect = window * iters
+    spin_deadline = time.monotonic() + 30.0
+    while got < expect and time.monotonic() < spin_deadline:
+        check_alive()
+        rt.progress()
+        while cq.pop().is_done():
+            got += 1
+    elapsed = time.perf_counter() - t0
+    ctx.barrier()
+    lost = expect - got
+    leaked = cluster.fabric.in_flight()
+    rate = expect / elapsed if elapsed > 0 else float("inf")
+    print(f"spmd-demo rank {ctx.rank}: {expect} msgs in {elapsed:.3f}s "
+          f"({rate:,.0f} msg/s) lost={lost} leaked={leaked}")
+    cluster.close()
+    ctx.close()
+    return 0 if lost == 0 and leaked == 0 else 1
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="SPMD launcher: N OS-process ranks over a "
+                    "cross-process transport backend")
+    ap.add_argument("--ranks", type=int, default=2)
+    ap.add_argument("--backend", default="shm",
+                    choices=("shm", "socket"))
+    ap.add_argument("--attr", action="append", default=[],
+                    metavar="NAME=VALUE",
+                    help="attr override exported as REPRO_ATTR_* to every "
+                         "rank (repeatable)")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="wall-clock bound; past it every rank is killed")
+    ap.add_argument("--window", type=int, default=64,
+                    help="demo: messages per completion window")
+    ap.add_argument("--iters", type=int, default=50,
+                    help="demo: windows per rank")
+    ap.add_argument("--size", type=int, default=64,
+                    help="demo: payload bytes")
+    ap.add_argument("cmd", nargs="*",
+                    help="rank program after `--` (default: built-in "
+                         "message-window demo)")
+    args = ap.parse_args(argv)
+
+    if os.environ.get(RANK_ENV) is not None and not args.cmd:
+        # child re-entry of the built-in demo
+        return _run_demo(args.window, args.iters, args.size)
+
+    overrides = {}
+    for item in args.attr:
+        name, eq, value = item.partition("=")
+        if not eq:
+            ap.error(f"--attr expects NAME=VALUE, got {item!r}")
+        overrides[name] = value
+    cmd = args.cmd or [sys.executable, "-m", "repro.launch.spmd",
+                       "--ranks", str(args.ranks),
+                       "--window", str(args.window),
+                       "--iters", str(args.iters),
+                       "--size", str(args.size)]
+    return launch(cmd, args.ranks, backend=args.backend,
+                  attr_overrides=overrides, timeout=args.timeout)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

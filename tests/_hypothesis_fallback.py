@@ -28,6 +28,11 @@ class strategies:  # noqa: N801 — mimics the `strategies` module
         return _Strategy(lambda r: r.random() < 0.5)
 
     @staticmethod
+    def sampled_from(seq):
+        elems = list(seq)
+        return _Strategy(lambda r: r.choice(elems))
+
+    @staticmethod
     def tuples(*parts):
         return _Strategy(lambda r: tuple(p.draw(r) for p in parts))
 

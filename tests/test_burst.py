@@ -22,7 +22,8 @@ from repro.core import (CommConfig, CommDesc, CommKind, HostMatchingEngine,
                         pool_get_n, post_am_x, post_many, post_recv_x,
                         post_send_x)
 from repro.core.completion import CompletionQueue
-from repro.core.progress.fabric import Fabric, WireMsg, payloads_to_bytes
+from repro.core.progress.fabric import (Fabric, PackedBurst, WireKind,
+                                        WireMsg, payloads_to_bytes)
 from repro.core.status import ErrorCode
 
 
@@ -85,6 +86,70 @@ class TestFabricBurst:
         rows = payloads_to_bytes([np.zeros(4, np.uint8),
                                   np.zeros(8, np.uint8)])
         assert [r.nbytes for r in rows] == [4, 8]
+
+
+class TestPackedDrainConsistency:
+    """Satellite regression: row-weighted ``stream_depth``, ``ready``,
+    and ``drain(limit=k)`` must agree on "quiet" when packed doorbells
+    sit in the stream — historically only scalar pushes were covered
+    here, and ``drain`` counted doorbells as one row."""
+
+    def _packed(self, k, tag=0):
+        data = np.arange(k * 8, dtype=np.uint8).reshape(k, 8)
+        return WireMsg(WireKind.EAGER_PACKED_AM, src=0, dst=1, tag=tag,
+                       payload=PackedBurst(data, np.full(k, 8, np.int64),
+                                           [tag] * k, k),
+                       size=int(data.nbytes), rcomp=0)
+
+    def _scalar(self, tag=0):
+        return WireMsg(WireKind.EAGER_AM, src=0, dst=1, tag=tag,
+                       payload=np.zeros(8, np.uint8), size=8, rcomp=0)
+
+    def test_drain_limit_is_row_weighted(self):
+        fab = Fabric(2, depth=64)
+        assert fab.try_push(self._scalar(tag=0))
+        assert fab.push_packed(self._packed(5, tag=1)) == 5
+        assert fab.try_push(self._scalar(tag=2))
+        assert fab.stream_depth(1, 0) == 7
+        # limit=2 admits the scalar then the WHOLE doorbell (doorbells
+        # pop atomically, so a limit may overshoot mid-doorbell) ...
+        out = fab.drain(1, 0, 2)
+        assert [m.kind for m in out] == [WireKind.EAGER_AM,
+                                         WireKind.EAGER_PACKED_AM]
+        # ... and the released weight is 6 rows, not 2 messages
+        assert fab.stream_depth(1, 0) == 1
+        assert [m.tag for m in fab.drain(1, 0)] == [2]
+
+    def test_limit_below_doorbell_weight_still_pops_it_whole(self):
+        fab = Fabric(2, depth=64)
+        fab.push_packed(self._packed(6))
+        out = fab.drain(1, 0, 1)
+        assert len(out) == 1 and out[0].payload.count == 6
+        assert fab.stream_depth(1, 0) == 0
+
+    def test_depth_ready_and_drain_agree_on_quiet(self):
+        fab = Fabric(2, depth=64)
+        assert not fab.ready(1, 0) and fab.stream_depth(1, 0) == 0
+        fab.push_packed(self._packed(4))
+        # the idle fast path and the depth probe agree: occupied
+        assert fab.ready(1, 0) and fab.stream_depth(1, 0) == 4
+        assert fab.in_flight() == 4 and fab.pending_to(1) == 4
+        assert len(fab.drain(1, 0, 4)) == 1
+        # all three views agree again: quiet
+        assert not fab.ready(1, 0)
+        assert fab.stream_depth(1, 0) == 0
+        assert fab.in_flight() == 0 and fab.pending_to(1) == 0
+        assert fab.drain(1, 0) == []
+
+    def test_partial_drain_keeps_views_consistent(self):
+        fab = Fabric(2, depth=64)
+        for t in range(3):
+            fab.push_packed(self._packed(3, tag=t))
+        assert fab.stream_depth(1, 0) == 9
+        assert len(fab.drain(1, 0, 3)) == 1       # exactly one doorbell
+        assert fab.stream_depth(1, 0) == 6 and fab.ready(1, 0)
+        assert len(fab.drain(1, 0, 4)) == 2       # 3 < 4, next fills it
+        assert fab.stream_depth(1, 0) == 0 and not fab.ready(1, 0)
 
 
 # ---------------------------------------------------------------------------
