@@ -19,12 +19,105 @@ import tempfile
 from typing import Dict, List, Sequence
 
 FRAGDIR_ENV = "REPRO_BENCH_FRAGDIR"
+ALLOW_DIRTY_ENV = "REPRO_BENCH_ALLOW_DIRTY"
+
+
+def assert_clean_host() -> Dict:
+    """Refuse to produce timing rows on a dirty host.
+
+    An orphaned SPMD rank (launcher SIGKILLed, rank reparented to init)
+    spins a full core; a stale ``repro-spmd-*`` session dir on /dev/shm
+    pins ring memory.  Either skews every wall-clock number measured
+    beside it, so benchmarks call this before their first timed cell and
+    abort with the finding list instead of publishing numbers that look
+    plausible but aren't.  ``REPRO_BENCH_ALLOW_DIRTY=1`` overrides (for
+    hosts where the leftovers are known-idle and someone else's).
+    """
+    from repro.launch.spmd import hygiene_report
+    rep = hygiene_report()
+    if rep["clean"] or os.environ.get(ALLOW_DIRTY_ENV) == "1":
+        return rep
+    lines = [f"  orphaned rank pid={p['pid']} session={p['session']}"
+             for p in rep["orphans"]]
+    lines += [f"  stale session dir {path}"
+              for path in rep["stale_sessions"]]
+    raise RuntimeError(
+        "refusing to run timed benchmark cells on a dirty host "
+        "(leftovers of a dead SPMD job skew wall-clock timing):\n"
+        + "\n".join(lines)
+        + f"\nkill the orphans / remove the dirs, or set "
+          f"{ALLOW_DIRTY_ENV}=1 to run anyway.")
 
 
 def in_child() -> bool:
     """True when this process is an SPMD rank-child of a benchmark."""
     from repro.launch.spmd import RANK_ENV
     return os.environ.get(RANK_ENV) is not None
+
+
+# ---------------------------------------------------------------------------
+# BENCH telemetry block (DESIGN.md §15): every BENCH_*.json documents the
+# run it measured — merged counters and, at timers level, per-stage span
+# summaries.  Rank fragments ship raw snapshots; the parent merges them
+# here, so SPMD rows aggregate the same way in-process cells do.
+# ---------------------------------------------------------------------------
+
+def timers_demo_snapshot(iters: int = 192) -> Dict:
+    """A small timers-level cell exercising every instrumented stage
+    class (scalar post, burst post, pool bufcopy, matching, progress
+    sub-stages, CQ pop) and returning its raw telemetry snapshot.
+
+    Benchmarks run their timed cells at level ``off`` (the overhead gate
+    pins that contract), so the committed BENCH documents would carry no
+    span summaries at all; this demo cell restores the observability
+    payload without taxing the timed rows.  Callers mark the result
+    ``spans_source: "demo"``.
+    """
+    import numpy as np
+
+    from repro.core import CommDesc, CommKind, LocalCluster, post_am
+
+    cl = LocalCluster(2, attrs={"telemetry_level": "timers",
+                                "eager_max_bytes": 1,   # bufcopy -> pool
+                                "packets_per_lane": 64},
+                      fabric_depth=1 << 12)
+    r0, r1 = cl[0], cl[1]
+    cq = r1.alloc_cq()
+    rc = r1.register_rcomp(cq)
+    payload = np.zeros(8, np.uint8)
+    descs = [CommDesc(CommKind.AM, 1, payload, size=payload.nbytes,
+                      remote_comp=rc) for _ in range(4)]
+    for i in range(iters):
+        if i % 2:
+            post_am(r0, 1, payload, remote_comp=rc)
+        else:
+            r0.post_many(descs)
+        r1.progress()
+        r0.progress()
+        while cq.pop().is_done():
+            pass
+    cl.quiesce()
+    while cq.pop().is_done():
+        pass
+    return cl.telemetry_snapshot()
+
+
+def telemetry_block(snapshots: Sequence[Dict],
+                    demo_when_off: bool = True) -> Dict:
+    """Merge raw per-cell/per-rank snapshots into the BENCH ``telemetry``
+    block.  ``spans_source`` says where the stage summaries came from:
+    ``"run"`` when the timed cells themselves ran at timers level,
+    ``"demo"`` when they ran at ``off`` and the summaries come from
+    :func:`timers_demo_snapshot` instead."""
+    from repro.core import merge_snapshots, render_block
+
+    block = render_block(merge_snapshots([s for s in snapshots if s]))
+    block["spans_source"] = "run"
+    if not block["spans"] and demo_when_off:
+        demo = render_block(timers_demo_snapshot())
+        block["spans"] = demo["spans"]
+        block["spans_source"] = "demo"
+    return block
 
 
 def write_fragment(payload: Dict) -> None:

@@ -35,6 +35,16 @@ import numpy as np
 
 from repro.core import (LocalCluster, post_recv_x, post_send_x)
 
+
+def _xproc():
+    """Shared benchmark plumbing (hygiene preflight, telemetry block),
+    importable as a package module and as a bare script."""
+    try:
+        from . import _xproc as mod
+    except ImportError:
+        import _xproc as mod
+    return mod
+
 _ATTRS = {"eager_max_bytes": 64, "packets_per_lane": 64}
 _DEPTH = 1 << 14
 
@@ -53,7 +63,7 @@ def _attrs_echo() -> dict:
                      overrides={"fabric_depth": _DEPTH}).echo()
 
 
-def run_reaction_chain(n_hops: int, size: int) -> float:
+def run_reaction_chain(n_hops: int, size: int, snaps=None) -> float:
     """Figure-1 baseline: hop i+1 posted from hop i's completion."""
     cl = _cluster()
     payload = np.zeros(size, np.uint8)
@@ -67,11 +77,14 @@ def run_reaction_chain(n_hops: int, size: int) -> float:
         post_send_x(cl[src], dst, payload, size, i)()
         while not landed:                     # explicit progress (§3.2.6)
             cl.progress_all()
-    return (time.perf_counter() - t0) / n_hops * 1e6
+    us = (time.perf_counter() - t0) / n_hops * 1e6
+    if snaps is not None:
+        snaps.append(cl.telemetry_snapshot())
+    return us
 
 
-def run_async_graph(n_hops: int, size: int, use_endpoint: bool = True
-                    ) -> tuple[float, "object"]:
+def run_async_graph(n_hops: int, size: int, use_endpoint: bool = True,
+                    snaps=None) -> tuple[float, "object"]:
     """The same chain as ONE completion graph of comm nodes."""
     cl = _cluster()
     eps = cl.alloc_endpoint(n_devices=1, name="graph") if use_endpoint \
@@ -98,6 +111,8 @@ def run_async_graph(n_hops: int, size: int, use_endpoint: bool = True
     g.wait()                                  # drives the cluster's progress
     us = (time.perf_counter() - t0) / n_hops * 1e6
     g.assert_partial_order()
+    if snaps is not None:
+        snaps.append(cl.telemetry_snapshot())
     return us, g
 
 
@@ -113,19 +128,20 @@ def run_host_graph(n_nodes: int) -> float:
     return (time.perf_counter() - t0) / n_nodes * 1e6
 
 
-def run(quick: bool = True, n_hops: int = 0, size: int = 8) -> List[dict]:
+def run(quick: bool = True, n_hops: int = 0, size: int = 8,
+        snaps=None) -> List[dict]:
     n_hops = n_hops or (64 if quick else 256)
     rows = []
     host_us = run_host_graph(n_hops)
     rows.append({"bench": "graph_latency", "case": f"host_graph/{n_hops}n",
                  "us_per_call": host_us,
                  "derived": f"{host_us:.2f} us/node dispatch"})
-    chain_us = run_reaction_chain(n_hops, size)
+    chain_us = run_reaction_chain(n_hops, size, snaps=snaps)
     rows.append({"bench": "graph_latency",
                  "case": f"reaction_chain/{n_hops}hop/{size}B",
                  "us_per_call": chain_us,
                  "derived": f"{chain_us:.2f} us/hop (Figure-1 baseline)"})
-    graph_us, g = run_async_graph(n_hops, size)
+    graph_us, g = run_async_graph(n_hops, size, snaps=snaps)
     rows.append({"bench": "graph_latency",
                  "case": f"async_graph/{n_hops}hop/{size}B",
                  "us_per_call": graph_us,
@@ -146,7 +162,9 @@ def main() -> None:
                     help="output JSON path ('' disables)")
     args = ap.parse_args()
 
-    rows = run(n_hops=args.nodes, size=args.size)
+    _xproc().assert_clean_host()     # leftover SPMD jobs skew timing
+    snaps: list = []
+    rows = run(n_hops=args.nodes, size=args.size, snaps=snaps)
     for r in rows:
         print(f"{r['case']:34s} {r['us_per_call']:9.3f} us  {r['derived']}")
     if args.json:
@@ -154,6 +172,7 @@ def main() -> None:
             json.dump({"bench": "graph_latency", "nodes": args.nodes,
                        "size": args.size,
                        "resolved_attrs": _attrs_echo(),
+                       "telemetry": _xproc().telemetry_block(snaps),
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 

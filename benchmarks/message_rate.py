@@ -122,6 +122,7 @@ def _run_endpoint(width: int, stripe: str, iters: int,
     dt = time.perf_counter() - t0
     counters = ep0.counters()
     return {
+        "_tele": cl.telemetry_snapshot(),
         "bench": "message_rate",
         "case": f"endpoint_width={width}/{stripe}"
                 + ("/bf16" if wire_bf16 else ""),
@@ -182,6 +183,7 @@ def _run_xproc_cell(ctx, iters: int, fabric: str) -> dict:
         "total": iters,
         "lost": int(iters - got),
         "leaked": int(cl.fabric.in_flight()),
+        "telemetry": cl.telemetry_snapshot(),
         "resolved_attrs": cl.attrs_echo(),
     }
     cl.close()
@@ -204,6 +206,7 @@ def _sweep_xproc(args, iters: int) -> tuple:
     frags = _xproc().launch_self(sys.argv[1:], args.fabric, args.ranks,
                                  timeout=args.xproc_timeout)
     cells = [f["cell"] for f in frags]
+    snaps = [c.pop("telemetry", None) for c in cells]
     total = sum(c["total"] for c in cells)
     dt = max(c["seconds"] for c in cells)
     row = {
@@ -216,7 +219,7 @@ def _sweep_xproc(args, iters: int) -> tuple:
         "lost": sum(c["lost"] for c in cells),
         "leaked_packets": sum(c["leaked"] for c in cells),
     }
-    return [row], frags[0]["resolved_attrs"]
+    return [row], frags[0]["resolved_attrs"], snaps
 
 
 def run(quick: bool = True) -> List[dict]:
@@ -291,13 +294,16 @@ def main() -> None:
     if args.fabric != "sim" and _xproc().in_child():
         sys.exit(_xproc_child(args, iters))
 
+    _xproc().assert_clean_host()     # leftover SPMD jobs skew timing
     rows = run_endpoint_sweep(args.devices, iters, args.stripe, args.burst,
                               args.repeats)
     for r in rows:
         r["backend"] = "sim"
+    snaps = [r.pop("_tele", None) for r in rows]
     xproc_extra = []
     if args.fabric != "sim":
-        xproc_extra, xecho = _sweep_xproc(args, iters)
+        xproc_extra, xecho, xsnaps = _sweep_xproc(args, iters)
+        snaps += xsnaps
     # one echo block per document: the widest plain cell's resolved
     # attrs (per-cell differences — n_channels/width, the bf16 cell's
     # wire_bf16 — are already encoded in the row's case name)
@@ -330,6 +336,7 @@ def main() -> None:
                        "fabric": args.fabric,
                        "ranks": args.ranks if args.fabric != "sim" else 1,
                        "resolved_attrs": resolved_attrs,
+                       "telemetry": _xproc().telemetry_block(snaps),
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 

@@ -194,6 +194,7 @@ def _run_cell_inner(n_threads: int, per_thread: int, window: int,
         "leaked_packets": leaked,
         "hot_pool_acqs": hot_pool_acqs,
         "contention": contention,
+        "telemetry": cl.telemetry_snapshot(),
         "resolved_attrs": cl.attrs_echo(),
     }
 
@@ -283,6 +284,7 @@ def _run_cell_xproc(ctx, n_threads: int, per_thread: int, window: int,
         "total": total,
         "lost": int(lost),
         "leaked": int(leaked),
+        "telemetry": cl.telemetry_snapshot(),
         "resolved_attrs": cl.attrs_echo(),
     }
     cl.close()
@@ -312,9 +314,10 @@ def _sweep_xproc(args) -> tuple:
     per-rank fragments into backend-tagged rows."""
     frags = _xproc().launch_self(sys.argv[1:], args.fabric, args.ranks,
                                  timeout=args.xproc_timeout)
-    rows = []
+    rows, snaps = [], []
     for i, n in enumerate(args.threads):
         cells = [f["cells"][i] for f in frags]
+        snaps += [c.pop("telemetry", None) for c in cells]
         total = sum(c["total"] for c in cells)
         dt = max(c["seconds"] for c in cells)
         rows.append({
@@ -328,16 +331,18 @@ def _sweep_xproc(args) -> tuple:
             "lost": sum(c["lost"] for c in cells),
             "leaked_packets": sum(c["leaked"] for c in cells),
         })
-    return rows, frags[0]["resolved_attrs"]
+    return rows, frags[0]["resolved_attrs"], snaps
 
 
 def sweep(thread_counts, per_thread: int, window: int, latency: float,
           baseline: bool = True) -> tuple:
     rows = []
     echo = None
+    snaps = []
     for n in thread_counts:
         cell = _run_cell(n, per_thread, window, latency)
         echo = cell["resolved_attrs"]
+        snaps.append(cell["telemetry"])
         total = n * per_thread
         row = {
             "bench": "mt_message_rate",
@@ -364,14 +369,14 @@ def sweep(thread_counts, per_thread: int, window: int, latency: float,
         rows.append(row)
     # one echo block for the sweep (the widest cell's resolved attrs;
     # the per-cell n_channels difference is already the threads field)
-    return rows, echo
+    return rows, echo, snaps
 
 
 def run(quick: bool = True) -> List[dict]:
     """benchmarks.run entry point."""
     counts = (1, 2) if quick else (1, 2, 4, 8)
     per = DEFAULT_PER_THREAD // (8 if quick else 1)
-    rows, _ = sweep(counts, per, DEFAULT_WINDOW, DEFAULT_LATENCY)
+    rows, _, _ = sweep(counts, per, DEFAULT_WINDOW, DEFAULT_LATENCY)
     return rows
 
 
@@ -404,14 +409,16 @@ def main() -> None:
     if args.fabric != "sim" and _xproc().in_child():
         sys.exit(_xproc_child(args))
 
-    rows, resolved_attrs = sweep(args.threads, args.iters, args.window,
-                                 args.latency_us / 1e6,
-                                 baseline=not args.no_baseline)
+    _xproc().assert_clean_host()     # leftover SPMD jobs skew timing
+    rows, resolved_attrs, snaps = sweep(args.threads, args.iters,
+                                        args.window, args.latency_us / 1e6,
+                                        baseline=not args.no_baseline)
     for r in rows:
         r["backend"] = "sim"
     if args.fabric != "sim":
-        xrows, xecho = _sweep_xproc(args)
+        xrows, xecho, xsnaps = _sweep_xproc(args)
         rows += xrows
+        snaps += xsnaps
         resolved_attrs = {**resolved_attrs, "xproc": xecho}
     for r in rows:
         speed = (f"  speedup={r['speedup_vs_sequential']:.2f}x"
@@ -453,6 +460,7 @@ def main() -> None:
                        "fabric": args.fabric,
                        "ranks": args.ranks if args.fabric != "sim" else 1,
                        "resolved_attrs": resolved_attrs,
+                       "telemetry": _xproc().telemetry_block(snaps),
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 

@@ -28,6 +28,16 @@ if __package__ in (None, ""):                 # `python benchmarks/...py`
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
 
 
+def _xproc():
+    """Shared benchmark plumbing (hygiene preflight, telemetry block),
+    importable as a package module and as a bare script."""
+    try:
+        from . import _xproc as mod
+    except ImportError:
+        import _xproc as mod
+    return mod
+
+
 def load_cells(mesh: Optional[str] = None, mode: Optional[str] = None
                ) -> List[Dict]:
     rows = []
@@ -157,6 +167,7 @@ def main() -> None:
                     help="write the roofline rows to this BENCH-JSON "
                          "('' prints only)")
     args = ap.parse_args()
+    _xproc().assert_clean_host()     # the wire bound is a timed cell too
     print(table())
     row = message_rate_vs_wire(args.bench)
     if row is not None:
@@ -164,8 +175,12 @@ def main() -> None:
               f"{row['derived']}")
     if args.json:
         rows = ([row] if row is not None else []) + run()
+        # the wire-bound cells run on a bare Fabric (no cluster), so the
+        # stage summaries come from the shared timers-level demo cell
         with open(args.json, "w") as f:
-            json.dump({"bench": "roofline", "rows": rows}, f, indent=2)
+            json.dump({"bench": "roofline",
+                       "telemetry": _xproc().telemetry_block([]),
+                       "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
 
 

@@ -18,7 +18,9 @@ Walks the paper's core concepts end to end on CPU:
      compression toggle (DESIGN.md §13)
   10. pluggable transport backends: shm rings in-process, then a real
       two-OS-process run via the SPMD launcher (DESIGN.md §14)
-  11. an in-graph ring collective under shard_map (the TPU adaptation)
+  11. the telemetry plane: attr-controlled stage timers, the unified
+      counter snapshot, and Chrome trace export (DESIGN.md §15)
+  12. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -254,7 +256,43 @@ def main():
         if "spmd-demo" in line:
             print(f"  {line}")
 
-    # -- 11. the in-graph layer: ring collectives (run under shard_map on
+    # -- 11. the telemetry plane (DESIGN.md §15): observability is an
+    #       attr.  telemetry_level=off (default) is a one-branch no-op
+    #       on every hot path; "counters" unifies every legacy counter
+    #       into one snapshot; "timers" adds per-stage span histograms;
+    #       "trace" adds a Chrome-loadable timeline. -------------------
+    import json as _json
+    import tempfile as _tempfile
+    ocl = LocalCluster(2, attrs={"telemetry_level": "trace",
+                                 "eager_max_bytes": 1})  # bufcopy -> pool
+    ocq = ocl[1].alloc_cq()
+    orc = ocl[1].register_rcomp(ocq)
+    for _ in range(32):
+        post_am_x(ocl[0], 1, np.zeros(8, np.uint8), None, None, orc)()
+        ocl.progress_all()
+        while ocq.pop().is_done():
+            pass
+    ocl.quiesce()
+    snap = ocl.telemetry_snapshot()   # mergeable across ranks/processes
+    stages = sorted(snap["spans"])
+    print(f"telemetry: level={ocl.get_attr('telemetry_level')} "
+          f"({len(stages)} stages timed): {', '.join(stages[:6])}, ...")
+    post_us = snap["spans"]["post"]["sum"] / 1e3
+    print(f"telemetry: post count={snap['spans']['post']['count']} "
+          f"total={post_us:.1f}us; counters: "
+          f"device.posts={snap['counters']['device.posts']} "
+          f"pool.gets={snap['counters']['pool.gets']}")
+    # every resource carries its slice as a readonly attr
+    print(f"telemetry: device attr block -> "
+          f"{ocl[0].default_device.get_attr('telemetry')['counters']}")
+    with _tempfile.TemporaryDirectory() as td:
+        path = ocl.export_trace(f"{td}/trace.json")
+        n_ev = len(_json.load(open(path))["traceEvents"])
+        print(f"telemetry: exported {n_ev} Chrome trace_event slices "
+              f"(load at chrome://tracing); try "
+              f"REPRO_ATTR_TELEMETRY_LEVEL=timers on any benchmark")
+
+    # -- 12. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

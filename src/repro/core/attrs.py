@@ -291,6 +291,18 @@ register_attr("worker_burst", int, 64, minimum=0, zero_means="unbounded",
               resources=("endpoint", "workers"),
               doc="wire messages drained per progress-lock acquisition "
                   "(paper §4.3 burst progress)")
+# observability (DESIGN.md §15)
+register_attr("telemetry_level", str, "off",
+              resources=("runtime", "cluster"),
+              choices=("off", "counters", "timers", "trace"),
+              doc="observability depth: counters = sharded metric "
+                  "registry, timers = stage-scoped spans on every hot "
+                  "path, trace = ring-buffer event trace with Chrome "
+                  "export; off compiles the whole plane away")
+register_attr("trace_capacity", int, 4096, minimum=1,
+              resources=("runtime", "cluster"),
+              doc="per-thread event capacity of the trace ring buffer "
+                  "(old events are overwritten FIFO)")
 # lock tuning — process-wide (read at lock construction): env mutability
 register_attr("lock_spin_count", int, 4, minimum=0, mutability="env",
               resources=("lock",),
@@ -321,6 +333,11 @@ register_attr("rank_me", int, None, mutability="readonly",
 register_attr("rank_n", int, None, mutability="readonly",
               resources=("runtime", "cluster"),
               doc="total ranks in the cluster")
+register_attr("telemetry", dict, None, mutability="readonly",
+              resources=("runtime", "cluster", "device", "endpoint",
+                         "pool", "matching", "comp", "workers", "fabric"),
+              doc="live telemetry snapshot for this resource (merged "
+                  "counters; runtimes/clusters add stage-span histograms)")
 
 
 # ---------------------------------------------------------------------------

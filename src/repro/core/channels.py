@@ -37,6 +37,7 @@ from .completion import CompletionQueue
 from .concurrency.atomics import AtomicCounter
 from .concurrency.locks import TryLock
 from .modes import CommConfig, CommMode
+from .telemetry import NULL_TELEMETRY
 
 #: attrs a device resolves at alloc time (n_channels may be overridden
 #: per device; 0-capacities mean unbounded)
@@ -73,7 +74,8 @@ class Device(_attrs.AttrResource):
 
     def __init__(self, config: CommConfig, lane: int,
                  cq: Optional[CompletionQueue] = None,
-                 resolved: Optional[_attrs.ResolvedAttrs] = None):
+                 resolved: Optional[_attrs.ResolvedAttrs] = None,
+                 tele=None):
         self.did = next(_device_ids)
         self.lane = lane                       # packet-pool lane this device owns
         self.config = config
@@ -104,6 +106,8 @@ class Device(_attrs.AttrResource):
         self._export_attr("progresses", lambda: self.progresses)
         self._export_attr("progress_lock_stats",
                           lambda: self.progress_lock.stats())
+        self.tele = tele if tele is not None else NULL_TELEMETRY
+        self._export_attr("telemetry", self._telemetry_block)
         self.index = 0                         # position in the owner's device list
         self.pending_tx = collections.deque()  # ops awaiting source completion
         # per-device progress try-lock (paper §4.2.3): any number of
@@ -140,6 +144,17 @@ class Device(_attrs.AttrResource):
 
     def count_progress(self) -> None:
         self._progresses.fetch_add(1)
+
+    def _telemetry_block(self) -> dict:
+        """This device's contribution to the unified snapshot
+        (DESIGN.md §15): its legacy counters under dotted names."""
+        ls = self.progress_lock.stats()
+        return {"level": self.tele.level,
+                "counters": {"device.posts": self.posts,
+                             "device.pushes": self.pushes,
+                             "device.progresses": self.progresses,
+                             "device.lock_acquisitions": ls["acquisitions"],
+                             "device.lock_contentions": ls["contentions"]}}
 
     @property
     def n_channels(self) -> int:

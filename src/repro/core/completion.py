@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from . import attrs as _attrs
 from .status import ErrorCode, FatalError, Status, done, retry
+from .telemetry import NULL_TELEMETRY
 
 # shared signal ack: Status is immutable and signalers only branch on
 # is_retry()/code, so one object serves every accepted delivery (statuses
@@ -157,16 +158,25 @@ class CompletionQueue(CompletionObject):
     """
 
     def __init__(self, capacity: Optional[int] = None,
-                 resolved: Optional[_attrs.ResolvedAttrs] = None):
+                 resolved: Optional[_attrs.ResolvedAttrs] = None,
+                 tele=None):
         self._q: collections.deque = collections.deque()
         self.capacity = capacity
         self.pushes = 0
         self.pops = 0
+        self.tele = tele if tele is not None else NULL_TELEMETRY
         self._init_attrs(resolved or _attrs.resolved_from_values(
             {"cq_capacity": capacity or 0}))
         self._export_attr("depth", lambda: len(self._q))
         self._export_attr("pushes", lambda: self.pushes)
         self._export_attr("pops", lambda: self.pops)
+        self._export_attr("telemetry", self._telemetry_block)
+
+    def _telemetry_block(self) -> dict:
+        return {"level": self.tele.level,
+                "counters": {"cq.pushes": self.pushes,
+                             "cq.pops": self.pops,
+                             "cq.depth": len(self._q)}}
 
     def signal(self, status: Status) -> Status:
         if self.capacity is not None and len(self._q) >= self.capacity:
@@ -188,6 +198,13 @@ class CompletionQueue(CompletionObject):
 
     def pop(self) -> Status:
         """``cq_pop``: done-status with payload, or retry when empty."""
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("cq.pop"):
+                return self._pop()
+        return self._pop()
+
+    def _pop(self) -> Status:
         if not self._q:
             return retry(ErrorCode.RETRY_LOCKED)
         self.pops += 1

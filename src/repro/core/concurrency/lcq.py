@@ -205,16 +205,30 @@ class ThreadSafeCompletionQueue(CompletionObject):
     object.
     """
 
-    def __init__(self, capacity: Optional[int] = None, resolved=None):
+    def __init__(self, capacity: Optional[int] = None, resolved=None,
+                 tele=None):
         self._q = LCQ(capacity or 4096)
         self.capacity = capacity
         self._pop_yields = AtomicCounter()
         from .. import attrs as _attrs
+        from ..telemetry import NULL_TELEMETRY
+        self.tele = tele if tele is not None else NULL_TELEMETRY
         self._init_attrs(resolved or _attrs.resolved_from_values(
             {"cq_capacity": capacity or 0}))
         self._export_attr("depth", lambda: len(self._q))
         self._export_attr("pop_yields", lambda: self.pop_yields)
         self._export_attr("threadsafe", lambda: True)
+        self._export_attr("telemetry", self._telemetry_block)
+
+    def _telemetry_block(self) -> dict:
+        races = self.races()
+        return {"level": self.tele.level,
+                "counters": {"cq.pushes": self.pushes,
+                             "cq.pops": self.pops,
+                             "cq.depth": len(self._q),
+                             "cq.pop_yields": self.pop_yields,
+                             "cq.push_races": races["push_races"],
+                             "cq.pop_races": races["pop_races"]}}
 
     def signal(self, status: Status) -> Status:
         if self._q.push(status):
@@ -234,6 +248,13 @@ class ThreadSafeCompletionQueue(CompletionObject):
                 + [retry(ErrorCode.RETRY_QUEUE_FULL)] * (len(statuses) - n))
 
     def pop(self) -> Status:
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("cq.pop"):
+                return self._pop()
+        return self._pop()
+
+    def _pop(self) -> Status:
         item, ok = self._q.pop()
         if not ok:
             return retry(ErrorCode.RETRY_LOCKED)

@@ -26,6 +26,8 @@ from typing import List, Optional, Sequence, Tuple
 from .. import attrs as _attrs
 from ..attrs import AttrError
 from ..status import FatalError
+from ..telemetry import NULL_SPAN as _NO_SPAN
+from ..telemetry import NULL_TELEMETRY
 from .atomics import AtomicCounter, AtomicFlag
 from .locks import aggregate_lock_stats
 
@@ -47,7 +49,8 @@ class ProgressWorkerPool(_attrs.AttrResource):
     def __init__(self, targets: Sequence[Tuple[object, object]],
                  n_workers: int = 2, name: str = "workers",
                  burst: Optional[int] = None,
-                 resolved: Optional[_attrs.ResolvedAttrs] = None):
+                 resolved: Optional[_attrs.ResolvedAttrs] = None,
+                 tele=None):
         if burst is None:
             burst = _attrs.resolve_one("worker_burst")
         if n_workers < 1:
@@ -63,6 +66,7 @@ class ProgressWorkerPool(_attrs.AttrResource):
         self.targets = list(targets)
         self.n_workers = n_workers
         self.name = name
+        self.tele = tele if tele is not None else NULL_TELEMETRY
         self._init_attrs(resolved or _attrs.resolved_from_values(
             {"n_workers": n_workers, "worker_burst": burst}))
         self._export_attr("n_targets", lambda: len(self.targets))
@@ -71,6 +75,7 @@ class ProgressWorkerPool(_attrs.AttrResource):
         self._export_attr("idle_naps", lambda: self.idle_naps.load())
         self._export_attr("contention", lambda: aggregate_lock_stats(
             dev.progress_lock for _, dev in self.targets))
+        self._export_attr("telemetry", self._telemetry_block)
         # wire messages drained per try-lock acquisition: bounds how long
         # one worker holds a device's progress lock (a busy stream is
         # swept in bursts, not monopolized), while still amortizing the
@@ -91,7 +96,7 @@ class ProgressWorkerPool(_attrs.AttrResource):
         """Workers over every device of one runtime, via its shared engine."""
         return cls([(runtime.engine, d) for d in runtime.devices],
                    n_workers, name or f"rank{runtime.rank}/workers",
-                   burst=burst)
+                   burst=burst, tele=getattr(runtime, "tele", None))
 
     @classmethod
     def for_cluster(cls, cluster, n_workers: int = 2,
@@ -100,7 +105,8 @@ class ProgressWorkerPool(_attrs.AttrResource):
         """Workers over every device of every rank (thread-mode testbed)."""
         targets = [(rt.engine, d) for rt in cluster.runtimes
                    for d in rt.devices]
-        return cls(targets, n_workers, name, burst=burst)
+        return cls(targets, n_workers, name, burst=burst,
+                   tele=getattr(cluster, "tele", None))
 
     # -- lifecycle -----------------------------------------------------------
     @property
@@ -147,28 +153,40 @@ class ProgressWorkerPool(_attrs.AttrResource):
         targets = self.targets
         n = len(targets)
         passes = self.worker_passes[wid]
+        tele = self.tele
         delay = _IDLE_SLEEP_MIN
         while not self._stop.is_set():
             did = False
             # rotation offset decorrelates workers: worker w starts its
             # sweep w targets in, so two workers rarely hit the same
             # device's try-lock back to back
-            for i in range(n):
-                eng, dev = targets[(i + wid) % n]
-                r = eng.try_progress(dev, self.burst)
-                if r is None:
-                    self.lock_skips.fetch_add(1)   # contended: move on
-                elif r:
-                    passes.fetch_add(1)
-                    did = True
+            with tele.span("worker.sweep") if tele.timers_on else _NO_SPAN:
+                for i in range(n):
+                    eng, dev = targets[(i + wid) % n]
+                    r = eng.try_progress(dev, self.burst)
+                    if r is None:
+                        self.lock_skips.fetch_add(1)   # contended: move on
+                    elif r:
+                        passes.fetch_add(1)
+                        did = True
             if did:
                 delay = _IDLE_SLEEP_MIN
             else:
                 self.idle_naps.fetch_add(1)
-                time.sleep(delay)                  # quiet fabric: back off
+                with (tele.span("worker.nap") if tele.timers_on
+                      else _NO_SPAN):
+                    time.sleep(delay)              # quiet fabric: back off
                 delay = min(delay * 2, _IDLE_SLEEP_MAX)
 
     # -- telemetry -----------------------------------------------------------
+    def _telemetry_block(self) -> dict:
+        return {"level": self.tele.level,
+                "counters": {
+                    "workers.passes": sum(c.load()
+                                          for c in self.worker_passes),
+                    "workers.lock_skips": self.lock_skips.load(),
+                    "workers.idle_naps": self.idle_naps.load()}}
+
     def counters(self) -> dict:
         """Worker passes + the per-device progress-lock contention map."""
         return {

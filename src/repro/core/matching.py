@@ -42,6 +42,7 @@ import numpy as np
 from . import attrs as _attrs
 from .concurrency.atomics import AtomicCounter
 from .concurrency.locks import TryLock, aggregate_lock_stats
+from .telemetry import NULL_TELEMETRY
 
 
 class MatchKind(enum.IntEnum):
@@ -92,8 +93,9 @@ class HostMatchingEngine(_attrs.AttrResource):
     """
 
     def __init__(self, n_buckets: int = 65536, n_locks: int = 64,
-                 resolved=None):
+                 resolved=None, tele=None):
         self.n_buckets = n_buckets
+        self.tele = tele if tele is not None else NULL_TELEMETRY
         self._buckets: dict[Hashable, dict[MatchKind, collections.deque]] = {}
         self.locks = [TryLock(name=f"match/bucket{i}")
                       for i in range(n_locks)]
@@ -107,6 +109,7 @@ class HostMatchingEngine(_attrs.AttrResource):
         self._export_attr("fast_matches", lambda: self.fast_matches)
         self._export_attr("contention",
                           lambda: aggregate_lock_stats(self.locks))
+        self._export_attr("telemetry", self._telemetry_block)
 
     @property
     def inserts(self) -> int:
@@ -137,6 +140,13 @@ class HostMatchingEngine(_attrs.AttrResource):
         matched value, or ``None`` when no complement is posted — in
         which case the caller falls back to the locked :meth:`insert`
         (which stores into the unexpected queue)."""
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("match.now"):
+                return self._match_now_probe(key, kind)
+        return self._match_now_probe(key, kind)
+
+    def _match_now_probe(self, key: Hashable, kind: MatchKind):
         bucket = self._buckets.get(key)
         if bucket is None:
             return None
@@ -196,6 +206,13 @@ class HostMatchingEngine(_attrs.AttrResource):
         return out
 
     def insert(self, key: Hashable, kind: MatchKind, value: Any):
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("match.insert"):
+                return self._insert_locked(key, kind, value)
+        return self._insert_locked(key, kind, value)
+
+    def _insert_locked(self, key: Hashable, kind: MatchKind, value: Any):
         self._inserts.fetch_add(1)
         with self._lock_of(key):
             bucket = self._buckets.setdefault(
@@ -221,6 +238,19 @@ class HostMatchingEngine(_attrs.AttrResource):
     def lock_stats(self) -> list[dict]:
         """Per-bucket-stripe lock telemetry."""
         return [lk.stats() for lk in self.locks]
+
+    def telemetry_counters(self) -> dict:
+        """This engine's legacy counters for the unified snapshot (the
+        owning runtime attaches this under the ``matching.`` prefix)."""
+        locks = aggregate_lock_stats(self.locks)
+        return {"inserts": self.inserts, "matches": self.matches,
+                "fast_matches": self.fast_matches,
+                "lock_contentions": locks["contentions"]}
+
+    def _telemetry_block(self) -> dict:
+        return {"level": self.tele.level,
+                "counters": {f"matching.{k}": v
+                             for k, v in self.telemetry_counters().items()}}
 
 
 # ---------------------------------------------------------------------------

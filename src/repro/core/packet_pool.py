@@ -46,6 +46,7 @@ from . import attrs as _attrs
 from .concurrency.atomics import AtomicCounter
 from .concurrency.locks import TryLock, aggregate_lock_stats
 from .status import ErrorCode, Status, done, retry
+from .telemetry import NULL_TELEMETRY
 
 #: attrs the host pool resolves at alloc time
 POOL_ATTRS = ("pool_lanes", "packets_per_lane", "packet_bytes")
@@ -64,9 +65,11 @@ class HostPacketPool(_attrs.AttrResource):
 
     def __init__(self, n_lanes: int, packets_per_lane: int,
                  packet_bytes: int = 8192, seed: int = 0,
-                 resolved: Optional[_attrs.ResolvedAttrs] = None):
+                 resolved: Optional[_attrs.ResolvedAttrs] = None,
+                 tele=None):
         self.n_lanes = n_lanes
         self.packet_bytes = packet_bytes
+        self.tele = tele if tele is not None else NULL_TELEMETRY
         self._init_attrs(resolved or _attrs.resolved_from_values(
             {"pool_lanes": n_lanes, "packets_per_lane": packets_per_lane,
              "packet_bytes": packet_bytes}))
@@ -77,6 +80,7 @@ class HostPacketPool(_attrs.AttrResource):
                           lambda: self.steal_lock_failures)
         self._export_attr("contention",
                           lambda: aggregate_lock_stats(self.locks))
+        self._export_attr("telemetry", self._telemetry_block)
         self.n_packets = n_lanes * packets_per_lane
         self._deques = [
             collections.deque(range(i * packets_per_lane,
@@ -161,6 +165,13 @@ class HostPacketPool(_attrs.AttrResource):
         try-lock-guarded steal attempt is made."""
         if n <= 0:
             return [], done()
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("pool.get"):
+                return self._get_n_locked(lane, n)
+        return self._get_n_locked(lane, n)
+
+    def _get_n_locked(self, lane: int, n: int) -> tuple[list[int], Status]:
         self._gets.fetch_add(1)
         dq = self._deques[lane]
         out: list[int] = []
@@ -178,6 +189,13 @@ class HostPacketPool(_attrs.AttrResource):
             return out, retry(ErrorCode.RETRY_NOPACKET)
 
     def put(self, lane: int, packet: int) -> Status:
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("pool.put"):
+                return self._put_locked(lane, packet)
+        return self._put_locked(lane, packet)
+
+    def _put_locked(self, lane: int, packet: int) -> Status:
         self._puts.fetch_add(1)
         with self.locks[lane]:
             self._deques[lane].append(packet)    # tail end
@@ -189,6 +207,13 @@ class HostPacketPool(_attrs.AttrResource):
         sweep returns a whole drain's packets at once)."""
         if not packets:
             return done()
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("pool.put"):
+                return self._put_n_locked(lane, packets)
+        return self._put_n_locked(lane, packets)
+
+    def _put_n_locked(self, lane: int, packets: Sequence[int]) -> Status:
         self._puts.fetch_add(1)
         with self.locks[lane]:
             self._deques[lane].extend(packets)   # tail end, post order
@@ -200,6 +225,21 @@ class HostPacketPool(_attrs.AttrResource):
     def lock_stats(self) -> list[dict]:
         """Per-lane lock telemetry (contention evidence for benchmarks)."""
         return [lk.stats() for lk in self.locks]
+
+    def telemetry_counters(self) -> dict:
+        """This pool's legacy counters, for the unified snapshot (the
+        owning runtime attaches this under the ``pool.`` prefix)."""
+        locks = aggregate_lock_stats(self.locks)
+        return {"gets": self.gets, "puts": self.puts,
+                "steals": self.steals,
+                "steal_lock_failures": self.steal_lock_failures,
+                "lock_contentions": locks["contentions"],
+                "free_packets": self.free_packets()}
+
+    def _telemetry_block(self) -> dict:
+        return {"level": self.tele.level,
+                "counters": {f"pool.{k}": v
+                             for k, v in self.telemetry_counters().items()}}
 
 
 # ---------------------------------------------------------------------------

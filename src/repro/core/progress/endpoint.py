@@ -143,7 +143,8 @@ class Endpoint(_attrs.AttrResource):
             self.workers = ProgressWorkerPool(
                 list(zip(self.engines, self.devices)),
                 n_workers=spec.n_workers or spec.n_devices,
-                name=f"{spec.name}/workers", burst=spec.worker_burst)
+                name=f"{spec.name}/workers", burst=spec.worker_burst,
+                tele=getattr(runtime, "tele", None))
         self._rr = 0
         if spec.size_boundaries is not None:
             self._boundaries = list(spec.size_boundaries)
@@ -160,6 +161,20 @@ class Endpoint(_attrs.AttrResource):
         self._export_attr("device_indices",
                           lambda: [d.index for d in self.devices])
         self._export_attr("contention", self._contention)
+        self._export_attr("telemetry", self._telemetry_block)
+
+    def _telemetry_block(self) -> dict:
+        """This endpoint's contribution to the unified snapshot: its
+        devices' counters plus the bundle's progress-lock contention."""
+        tele = getattr(self.runtime, "tele", None)
+        counters = {"endpoint.posts": sum(d.posts for d in self.devices),
+                    "endpoint.pushes": sum(d.pushes for d in self.devices),
+                    "endpoint.progresses": sum(d.progresses
+                                               for d in self.devices)}
+        counters.update({f"endpoint.lock_{k}": v
+                         for k, v in self._contention().items()})
+        return {"level": tele.level if tele is not None else "off",
+                "counters": counters}
 
     def _contention(self) -> dict:
         """Aggregate progress-lock telemetry across the bundle (the
@@ -296,6 +311,13 @@ class Endpoint(_attrs.AttrResource):
             or self.select_device(rank=rank, size=nb)
         eng = rt.engine
         eng._burst_posts.fetch_add(1)
+        tele = eng.tele
+        if tele.timers_on:
+            with tele.span("post_burst"):
+                return eng._post_fused_run(kind, rank, bufs, tags, nb,
+                                           (proto,) * k, local_comp,
+                                           remote_comp,
+                                           MatchingPolicy.RANK_TAG, dev)
         return eng._post_fused_run(kind, rank, bufs, tags, nb, (proto,) * k,
                                    local_comp, remote_comp,
                                    MatchingPolicy.RANK_TAG, dev)

@@ -24,6 +24,7 @@ from ..matching import MatchKind, MatchingPolicy, make_key
 from ..post import CommKind
 from ..protocol import Protocol, select_protocol
 from ..status import ErrorCode, FatalError, Status, done, posted, retry
+from ..telemetry import NULL_TELEMETRY, record_burst_mix
 from .fabric import (PackedBurst, PendingBurst, PendingOp, WireKind, WireMsg,
                      as_bytes_view, next_op_id, pack_payloads,
                      payload_to_bytes, payloads_to_bytes)
@@ -32,14 +33,6 @@ from .fabric import (PackedBurst, PendingBurst, PendingOp, WireKind, WireMsg,
 _EAGER_KINDS = frozenset((WireKind.EAGER_AM, WireKind.EAGER_SEND,
                           WireKind.EAGER_PACKED_AM,
                           WireKind.EAGER_PACKED_SEND))
-
-
-def _sum_sizes(sizes, a: int, b: int) -> int:
-    """Total declared bytes of rows [a, b) — ``sizes`` is an int
-    (uniform burst) or a per-row list."""
-    if isinstance(sizes, int):
-        return sizes * (b - a)
-    return sum(sizes[a:b])
 
 
 class _SignalBatch:
@@ -93,6 +86,9 @@ class ProgressEngine:
         self.rt = runtime
         self._devices = devices
         self.name = name
+        # the owning runtime's telemetry hub (stage spans + registry);
+        # directly-constructed runtest doubles fall back to the null hub
+        self.tele = getattr(runtime, "tele", None) or NULL_TELEMETRY
         # telemetry (paper's do_background_work counters) — atomic: a
         # shared engine is driven from many threads at once
         self._passes = AtomicCounter()
@@ -126,6 +122,21 @@ class ProgressEngine:
              size: int, local_comp, remote_buf, remote_comp, device,
              matching_policy: MatchingPolicy, allow_retry: bool,
              user_context) -> Status:
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("post"):
+                return self._post_scalar(
+                    kind, rank, buf, tag, size, local_comp, remote_buf,
+                    remote_comp, device, matching_policy, allow_retry,
+                    user_context)
+        return self._post_scalar(
+            kind, rank, buf, tag, size, local_comp, remote_buf,
+            remote_comp, device, matching_policy, allow_retry, user_context)
+
+    def _post_scalar(self, kind: CommKind, rank: int, buf, tag: int,
+                     size: int, local_comp, remote_buf, remote_comp, device,
+                     matching_policy: MatchingPolicy, allow_retry: bool,
+                     user_context) -> Status:
         rt = self.rt
         dev = device or rt.default_device
         dev.count_post()
@@ -202,7 +213,13 @@ class ProgressEngine:
     def submit(self, msg: WireMsg, dev, allow_retry: bool) -> Status:
         """Push to the fabric; full queue -> retry or backlog."""
         rt = self.rt
-        if rt.fabric.try_push(msg):
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("transport.push"):
+                ok = rt.fabric.try_push(msg)
+        else:
+            ok = rt.fabric.try_push(msg)
+        if ok:
             dev.count_push()
             # source completion for bufcopy/zerocopy is deferred to progress
             if msg.op_id >= 0:
@@ -237,6 +254,13 @@ class ProgressEngine:
         failed would let it overtake on the stream and break FIFO.  The
         caller re-posts the failed suffix after driving progress (that is
         the doorbell split the burst-ordering tests exercise)."""
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("post_burst"):
+                return self._post_burst_runs(ops, dev)
+        return self._post_burst_runs(ops, dev)
+
+    def _post_burst_runs(self, ops: Sequence, dev) -> List[Status]:
         rt = self.rt
         n = len(ops)
         statuses: List[Optional[Status]] = [None] * n
@@ -386,7 +410,12 @@ class ProgressEngine:
                           size=int(data.nbytes), rcomp=remote_comp,
                           matching_policy=policy, op_id=-1,
                           device_index=dev.index)
-            pushed = rt.fabric.push_packed(msg)
+            tele = self.tele
+            if tele.timers_on:
+                with tele.span("transport.push"):
+                    pushed = rt.fabric.push_packed(msg)
+            else:
+                pushed = rt.fabric.push_packed(msg)
             dev.count_push(pushed)
             if pushed < cut:
                 rt.stats.retries += cut - pushed
@@ -420,22 +449,13 @@ class ProgressEngine:
                     else [tags[i] for i in bidx], comps)
                 dev.pending_tx.append(op_id)
 
-        # burst telemetry: one stats bump per protocol class
+        # burst telemetry: ONE shared helper does the per-protocol-class
+        # accounting for the accepted prefix (identical arithmetic to the
+        # scalar-burst path, so the two can never drift)
         if pushed:
-            if uniform_proto is not None:
-                rt.stats.record_many(uniform_proto, pushed,
-                                     _sum_sizes(sizes, 0, pushed))
-            else:
-                inj_bytes = sum(sizes[i] for i in range(pushed)
-                                if protos[i] == Protocol.INJECT)
-                buf_bytes = sum(sizes[i] for i in range(pushed)
-                                if protos[i] == Protocol.BUFCOPY)
-                inj = pushed - (len(bidx) if n_buf else 0)
-                if inj:
-                    rt.stats.record_many(Protocol.INJECT, inj, inj_bytes)
-                if pushed - inj:
-                    rt.stats.record_many(Protocol.BUFCOPY, pushed - inj,
-                                         buf_bytes)
+            record_burst_mix(rt.stats, protos, sizes, pushed,
+                             registry=(self.tele.registry
+                                       if self.tele.counters_on else None))
 
         # statuses: identical codes to the scalar burst; identical rows
         # share ONE immutable status object instead of K constructions
@@ -519,13 +539,18 @@ class ProgressEngine:
                                 op_id=op_id, device_index=dev.index))
 
         # ring one doorbell per consecutive (peer, device) stream
+        tele = self.tele
         pushed = cut
         j = 0
         while j < len(msgs):
             k = j
             while k < len(msgs) and msgs[k].dst == msgs[j].dst:
                 k += 1
-            acc = rt.fabric.push_burst(msgs[j:k])
+            if tele.timers_on:
+                with tele.span("transport.push"):
+                    acc = rt.fabric.push_burst(msgs[j:k])
+            else:
+                acc = rt.fabric.push_burst(msgs[j:k])
             for m in msgs[j:j + acc]:
                 if m.op_id >= 0:
                     dev.pending_tx.append(m.op_id)
@@ -544,16 +569,13 @@ class ProgressEngine:
                 del rt.pending_ops[oid]
             rt.stats.retries += cut - pushed
 
-        # burst telemetry: one stats bump per protocol class
-        inj = sum(1 for p in protos[:pushed] if p == Protocol.INJECT)
-        if inj:
-            rt.stats.record_many(Protocol.INJECT, inj, sum(
-                op.size for op, p in zip(ops[:pushed], protos[:pushed])
-                if p == Protocol.INJECT))
-        if pushed - inj:
-            rt.stats.record_many(Protocol.BUFCOPY, pushed - inj, sum(
-                op.size for op, p in zip(ops[:pushed], protos[:pushed])
-                if p == Protocol.BUFCOPY))
+        # burst telemetry: the same shared helper as the fused path does
+        # the per-protocol-class accounting for the accepted prefix
+        if pushed:
+            record_burst_mix(rt.stats, protos, [op.size for op in ops],
+                             pushed,
+                             registry=(tele.registry if tele.counters_on
+                                       else None))
 
         out: List[Status] = []
         for idx, (op, proto) in enumerate(zip(ops, protos)):
@@ -630,12 +652,44 @@ class ProgressEngine:
             dev.progress_lock.release()
 
     def _progress_locked(self, dev, max_msgs: int = 0) -> bool:
-        rt = self.rt
+        """One pass of the Figure-1 reaction chain, split into its three
+        stages (backlog redelivery, source-completion sweep, drain+react)
+        so the timers level can attribute the pass's time per stage.  At
+        lower levels the stages are called directly — no span machinery
+        touches the off-level hot path."""
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("progress"):
+                return self._progress_stages(dev, max_msgs, tele)
+        return self._progress_stages(dev, max_msgs, None)
+
+    def _progress_stages(self, dev, max_msgs: int, tele) -> bool:
         dev.count_progress()
         self._passes.fetch_add(1)
         did = False
+        if not dev.backlog.empty_flag:
+            if tele is not None:
+                with tele.span("progress.backlog"):
+                    did = self._stage_backlog(dev)
+            else:
+                did = self._stage_backlog(dev)
+        if dev.pending_tx:
+            if tele is not None:
+                with tele.span("progress.tx_sweep"):
+                    did |= self._stage_tx_sweep(dev)
+            else:
+                did |= self._stage_tx_sweep(dev)
+        if tele is not None:
+            with tele.span("progress.drain"):
+                did |= self._stage_drain(dev, max_msgs)
+        else:
+            did |= self._stage_drain(dev, max_msgs)
+        return did
 
-        # (3) retry backlogged requests first
+    def _stage_backlog(self, dev) -> bool:
+        """Stage (3): retry backlogged requests first."""
+        rt = self.rt
+        did = False
         while not dev.backlog.empty_flag:
             item, st = dev.backlog.pop()
             if st.is_retry():
@@ -676,10 +730,14 @@ class ProgressEngine:
                     dev.backlog.push_front(item)
                     break
                 did = True
+        return did
 
-        # source-side completions (bufcopy send done on the wire) — the
-        # whole sweep batches its pool returns (one put_n per lane) and
-        # its completion signals (one signal_many per comp object)
+    def _stage_tx_sweep(self, dev) -> bool:
+        """Source-side completions (bufcopy send done on the wire) — the
+        whole sweep batches its pool returns (one put_n per lane) and
+        its completion signals (one signal_many per comp object)."""
+        rt = self.rt
+        did = False
         if dev.pending_tx:
             batch = _SignalBatch()
             puts: Dict[int, List[int]] = {}
@@ -725,14 +783,24 @@ class ProgressEngine:
             for lane, pkts in puts.items():
                 rt.packet_pool.put_n(lane, pkts)
             batch.flush(self, dev)
+        return did
 
-        # (4) poll incoming for this device stream and react: drain is one
-        # bounded burst per lock acquisition; eager completions accumulate
-        # into one signal batch flushed per contiguous eager run — a
-        # rendezvous/RMA reaction signals comps immediately inside
-        # _react, so the batch must flush BEFORE it runs or a deferred
-        # eager completion would overtake it on the same comp
-        msgs = rt.fabric.drain(rt.rank, dev.index, max_msgs)
+    def _stage_drain(self, dev, max_msgs: int) -> bool:
+        """Stage (4): poll incoming for this device stream and react:
+        drain is one bounded burst per lock acquisition; eager
+        completions accumulate into one signal batch flushed per
+        contiguous eager run — a rendezvous/RMA reaction signals comps
+        immediately inside _react, so the batch must flush BEFORE it runs
+        or a deferred eager completion would overtake it on the same
+        comp."""
+        rt = self.rt
+        tele = self.tele
+        did = False
+        if tele.timers_on:
+            with tele.span("transport.drain"):
+                msgs = rt.fabric.drain(rt.rank, dev.index, max_msgs)
+        else:
+            msgs = rt.fabric.drain(rt.rank, dev.index, max_msgs)
         if msgs:
             batch = _SignalBatch()
             for msg in msgs:
@@ -878,7 +946,12 @@ class ProgressEngine:
         in-order redelivery, exactly like scalar :meth:`signal`."""
         if comp is None or not statuses:
             return
-        results = comp.signal_many(statuses)
+        tele = self.tele
+        if tele.timers_on:
+            with tele.span("signal"):
+                results = comp.signal_many(statuses)
+        else:
+            results = comp.signal_many(statuses)
         last = results[-1] if results else None
         if not (isinstance(last, Status) and last.is_retry()):
             return          # rejects are a suffix: clean last = clean burst

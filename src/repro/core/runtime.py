@@ -34,12 +34,14 @@ from .off import off
 from .packet_pool import POOL_ATTRS, HostPacketPool
 from .protocol import ProtocolStats
 from .status import FatalError, Status
+from .telemetry import Telemetry, merge_snapshots
 
 #: runtime-level attrs one Runtime resolves at construction
 RUNTIME_ATTRS = ("mode", "n_channels", "eager_max_bytes", "rdv_threshold",
                  "wire_bf16", "doorbell_fused", "fused_min_burst",
                  "matching_buckets", "matching_locks",
-                 "packets_per_lane", "packet_bytes", "pool_lanes")
+                 "packets_per_lane", "packet_bytes", "pool_lanes",
+                 "telemetry_level", "trace_capacity")
 # Re-exported names that historically lived here (public API compatibility).
 from .progress import (ENDPOINT_ATTRS, Endpoint, EndpointSpec, Fabric,
                        MemoryRegion,
@@ -102,16 +104,26 @@ class Runtime(_attrs.AttrResource):
         self.doorbell_fused: bool = resolved["doorbell_fused"]
         self.fused_min_burst: int = resolved["fused_min_burst"]
         self.wire_bf16: bool = resolved["wire_bf16"]
+        # observability hub (DESIGN.md §15): share the cluster's telemetry
+        # unless this rank's resolved level differs (per-rank override)
+        ctele = getattr(cluster, "tele", None)
+        if ctele is not None and ctele.level == resolved["telemetry_level"]:
+            self.tele = ctele
+        else:
+            self.tele = Telemetry(resolved["telemetry_level"],
+                                  resolved["trace_capacity"])
         # resources (all replicable; these are the process-default set)
         self.matching = HostMatchingEngine(
             resolved["matching_buckets"], resolved["matching_locks"],
             resolved=resolved.subset(("matching_buckets",
-                                      "matching_locks")))
+                                      "matching_locks")),
+            tele=self.tele)
         self.packet_pool = HostPacketPool(
             n_lanes=resolved["pool_lanes"] or max(1, resolved["n_channels"]),
             packets_per_lane=resolved["packets_per_lane"],
             packet_bytes=resolved["packet_bytes"],
-            resolved=resolved.subset(POOL_ATTRS))
+            resolved=resolved.subset(POOL_ATTRS),
+            tele=self.tele)
         self.rcomp_registry = MPMCArray()      # paper §4.1.1 MPMC array
         self.memory_regions = MPMCArray()
         self.devices: List[Device] = []
@@ -123,12 +135,39 @@ class Runtime(_attrs.AttrResource):
         self.engine = ProgressEngine(self, name=f"rank{rank}/shared")
         self.endpoints: List[Endpoint] = []
         self.default_device = self.alloc_device(lane=0)
+        # fold this rank's long-standing counters into the unified
+        # telemetry snapshot (DESIGN.md §15: the registry is the one
+        # read surface; the legacy accessors keep their storage)
+        self.tele.attach("protocol", self._protocol_counters)
+        self.tele.attach("device", self._device_counters)
+        self.tele.attach("engine", lambda: {
+            "passes": self.engine.passes,
+            "reactions": self.engine.reactions,
+            "burst_posts": self.engine.burst_posts})
+        self.tele.attach("pool", self.packet_pool.telemetry_counters)
+        self.tele.attach("matching", self.matching.telemetry_counters)
         # read-only discovered attributes (LCI get_attr_* mirror)
         self._export_attr("rank_me", lambda: self.rank)
         self._export_attr("rank_n", lambda: self.cluster.n_ranks)
         self._export_attr("n_devices", lambda: len(self.devices))
         self._export_attr("n_endpoints", lambda: len(self.endpoints))
         self._export_attr("free_packets", self.packet_pool.free_packets)
+        self._export_attr("telemetry", self.tele.snapshot)
+
+    def _protocol_counters(self) -> Dict[str, int]:
+        import dataclasses as _dc
+        return _dc.asdict(self.stats)
+
+    def _device_counters(self) -> Dict[str, int]:
+        out = {"posts": 0, "pushes": 0, "progresses": 0,
+               "lock_acquisitions": 0, "lock_contentions": 0}
+        for dev in self.devices:
+            out["posts"] += dev.posts
+            out["pushes"] += dev.pushes
+            out["progresses"] += dev.progresses
+            out["lock_acquisitions"] += dev.progress_lock.acquisitions
+            out["lock_contentions"] += dev.progress_lock.contentions
+        return out
 
     # -- rank / fabric queries ----------------------------------------------
     def get_rank_me(self) -> int:
@@ -156,7 +195,7 @@ class Runtime(_attrs.AttrResource):
         dev = Device(self.config,
                      lane=(lane if lane is not None
                            else len(self.devices) % self.packet_pool.n_lanes),
-                     resolved=resolved)
+                     resolved=resolved, tele=self.tele)
         # indices are never reused: a fabric stream keyed by a freed
         # device's index must not silently alias a later allocation
         dev.index = self._next_device_index
@@ -272,8 +311,9 @@ class Runtime(_attrs.AttrResource):
                                   overrides=overrides)
         cap = resolved["cq_capacity"] or None
         if threadsafe:
-            return ThreadSafeCompletionQueue(cap, resolved=resolved)
-        return CompletionQueue(cap, resolved=resolved)
+            return ThreadSafeCompletionQueue(cap, resolved=resolved,
+                                             tele=self.tele)
+        return CompletionQueue(cap, resolved=resolved, tele=self.tele)
 
     def alloc_handler(self, fn: Callable[[Status], None]) -> CompletionHandler:
         return CompletionHandler(fn)
@@ -388,15 +428,19 @@ class LocalCluster(_attrs.AttrResource):
         # raises AttrError right here, at alloc time
         fr = _attrs.resolve(FABRIC_ATTRS, runtime=self._attr_layer,
                             overrides=fabric_overrides)
+        rr = _attrs.resolve(RUNTIME_ATTRS, runtime=self._attr_layer)
+        # the cluster-wide telemetry hub: every rank's runtime shares it
+        # unless a per-rank config resolves a different level
+        self.tele = Telemetry(rr["telemetry_level"], rr["trace_capacity"])
         self.fabric = make_transport(
             fr["fabric_backend"], n_ranks, depth=fr["fabric_depth"],
             latency=fr["link_latency"], resolved=fr,
             ring_bytes=fr["shm_ring_bytes"], **self._transport_extra())
-        self._init_attrs(
-            fr.merged(_attrs.resolve(RUNTIME_ATTRS,
-                                     runtime=self._attr_layer)))
+        self.fabric.set_telemetry(self.tele)
+        self._init_attrs(fr.merged(rr))
         self._export_attr("rank_n", lambda: self.n_ranks)
         self._export_attr("in_flight", self.fabric.in_flight)
+        self._export_attr("telemetry", self.telemetry_snapshot)
         self.runtimes = [Runtime(r, self) for r in self._local_ranks()]
 
     def _transport_extra(self) -> Dict[str, Any]:
@@ -443,6 +487,21 @@ class LocalCluster(_attrs.AttrResource):
         thread-mode testbed with real threads driving all progress."""
         n, b = _resolve_worker_args(self._attr_layer, n_workers, burst)
         return ProgressWorkerPool.for_cluster(self, n, burst=b)
+
+    def telemetry_snapshot(self) -> Dict:
+        """The cluster-wide telemetry document: every distinct hub across
+        the local runtimes (ranks overriding ``telemetry_level`` own their
+        own), merged elementwise — the same shape
+        :func:`repro.core.telemetry.merge_snapshots` gives an SPMD
+        aggregation, so local and multi-process reads are uniform."""
+        teles = {id(self.tele): self.tele}
+        for rt in self.local_runtimes():
+            teles.setdefault(id(rt.tele), rt.tele)
+        return merge_snapshots([t.snapshot() for t in teles.values()])
+
+    def export_trace(self, path: str) -> str:
+        """Dump the Chrome trace (``telemetry_level=trace`` runs)."""
+        return self.tele.export_trace(path)
 
     def progress_all(self, rounds: int = 1) -> int:
         """Drive every device of every rank; returns #work events."""

@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 from .. import attrs as _attrs
 from ..concurrency.atomics import AtomicCounter
 from ..status import FatalError
+from ..telemetry import NULL_TELEMETRY
 from .wire import WireMsg
 
 #: attrs a transport resolves at alloc time (the fabric's registry slice)
@@ -73,9 +74,11 @@ class Transport(_attrs.AttrResource, abc.ABC):
         self._init_attrs(resolved or _attrs.resolved_from_values(
             {"fabric_backend": self.backend, "fabric_depth": depth,
              "link_latency": latency}))
+        self.tele = NULL_TELEMETRY
         self._export_attr("in_flight", self.in_flight)
         self._export_attr("pushes", lambda: self.pushes)
         self._export_attr("full_events", lambda: self.full_events)
+        self._export_attr("telemetry", self._telemetry_block)
 
     # -- telemetry -----------------------------------------------------------
     @property
@@ -85,6 +88,19 @@ class Transport(_attrs.AttrResource, abc.ABC):
     @property
     def full_events(self) -> int:
         return self._full_events.load()
+
+    def set_telemetry(self, tele) -> None:
+        """Attach the owning cluster's hub (transport spans are timed at
+        the engine call sites; the hub folds these counters in)."""
+        self.tele = tele
+        tele.attach("fabric", lambda: {"pushes": self.pushes,
+                                       "full_events": self.full_events})
+
+    def _telemetry_block(self) -> dict:
+        return {"level": self.tele.level,
+                "counters": {"fabric.pushes": self.pushes,
+                             "fabric.full_events": self.full_events,
+                             "fabric.in_flight": self.in_flight()}}
 
     # -- producer side -------------------------------------------------------
     @abc.abstractmethod

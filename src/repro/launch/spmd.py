@@ -50,6 +50,7 @@ SESSION_ENV = "REPRO_SPMD_SESSION"
 
 _SLOT = 64                       # one cache line per rank counter
 _BARRIER_FILE = "barrier"
+ALLOW_DIRTY_ENV = "REPRO_SPMD_ALLOW_DIRTY"
 
 
 def _default_session_root(backend: str) -> str:
@@ -120,6 +121,117 @@ def bootstrap() -> SpmdContext:
 
 
 # ---------------------------------------------------------------------------
+# host hygiene: leftovers of dead SPMD jobs skew every timing they share
+# a machine with (an orphaned rank spins a core; a stale /dev/shm session
+# holds ring memory).  The launcher warns; benchmarks refuse timing rows.
+# ---------------------------------------------------------------------------
+
+def _spmd_procs() -> List[Dict]:
+    """Live processes bootstrapped by this launcher: any process whose
+    environment carries ``REPRO_SPMD_SESSION`` (Linux /proc scan; empty
+    elsewhere).  Returns ``{pid, ppid, session}`` per process."""
+    procs: List[Dict] = []
+    try:
+        pids = [int(p) for p in os.listdir("/proc") if p.isdigit()]
+    except OSError:
+        return procs
+    needle = (SESSION_ENV + "=").encode()
+    me = os.getpid()
+    for pid in pids:
+        if pid == me:
+            continue
+        try:
+            with open(f"/proc/{pid}/environ", "rb") as f:
+                env = f.read()
+        except OSError:
+            continue                 # exited, or not ours to read
+        session = None
+        for chunk in env.split(b"\0"):
+            if chunk.startswith(needle):
+                session = chunk[len(needle):].decode("utf-8", "replace")
+                break
+        if session is None:
+            continue
+        ppid = -1
+        try:
+            with open(f"/proc/{pid}/stat") as f:
+                stat = f.read()
+            # comm (field 2) may embed spaces/parens; ppid is the second
+            # field after the closing paren
+            ppid = int(stat.rsplit(")", 1)[1].split()[1])
+        except (OSError, IndexError, ValueError):
+            pass
+        procs.append({"pid": pid, "ppid": ppid, "session": session})
+    return procs
+
+
+def hygiene_report(roots: Optional[Sequence[str]] = None) -> Dict:
+    """Audit the host for leftovers of dead SPMD jobs.
+
+    * **orphans** — rank processes whose launcher died (reparented to
+      init, ``ppid == 1``).  They spin in posting/progress loops and eat
+      a core each, skewing any wall-clock measured beside them.
+    * **stale sessions** — ``repro-spmd-*`` dirs under ``roots``
+      (default: /dev/shm and the tempdir) referenced by no live rank;
+      teardown was skipped (SIGKILLed launcher), and on /dev/shm the
+      ring files pin memory.
+
+    Returns ``{"clean": bool, "orphans": [...], "stale_sessions":
+    [...]}``.  Sessions of live non-orphan jobs are neither — a
+    concurrent healthy run is not a hygiene problem.
+    """
+    procs = _spmd_procs()
+    orphans = [p for p in procs if p["ppid"] == 1]
+    referenced = {os.path.abspath(p["session"]) for p in procs}
+    if roots is None:
+        roots = ("/dev/shm", tempfile.gettempdir())
+    stale: List[str] = []
+    seen_roots = set()
+    for root in roots:
+        root = os.path.abspath(root)
+        if root in seen_roots or not os.path.isdir(root):
+            continue
+        seen_roots.add(root)
+        try:
+            names = os.listdir(root)
+        except OSError:
+            continue
+        for name in names:
+            if not name.startswith("repro-spmd-"):
+                continue
+            path = os.path.join(root, name)
+            if os.path.isdir(path) and path not in referenced:
+                stale.append(path)
+    return {"clean": not orphans and not stale,
+            "orphans": orphans,
+            "stale_sessions": sorted(stale)}
+
+
+def preflight(strict: bool = False,
+              roots: Optional[Sequence[str]] = None) -> Dict:
+    """Hygiene gate run before launching (or timing).  Prints one line
+    per finding; with ``strict`` raises instead of proceeding.  Setting
+    ``REPRO_SPMD_ALLOW_DIRTY=1`` downgrades strict to warn (for hosts
+    where the leftovers are someone else's and known-idle)."""
+    rep = hygiene_report(roots)
+    if rep["clean"]:
+        return rep
+    for p in rep["orphans"]:
+        print(f"spmd: orphaned rank pid={p['pid']} "
+              f"(launcher dead, session {p['session']})", file=sys.stderr)
+    for path in rep["stale_sessions"]:
+        print(f"spmd: stale session dir {path} (no live ranks; teardown "
+              f"was skipped)", file=sys.stderr)
+    if strict and os.environ.get(ALLOW_DIRTY_ENV) != "1":
+        raise RuntimeError(
+            f"SPMD hygiene preflight failed: {len(rep['orphans'])} "
+            f"orphaned rank(s), {len(rep['stale_sessions'])} stale "
+            f"session dir(s).  Kill the orphans / remove the dirs, or "
+            f"set {ALLOW_DIRTY_ENV}=1 to proceed anyway.")
+    return rep
+
+
+# ---------------------------------------------------------------------------
 # launcher (parent side)
 # ---------------------------------------------------------------------------
 
@@ -169,6 +281,7 @@ def launch(cmd: List[str], n_ranks: int, backend: str = "shm",
            keep_session: bool = False) -> int:
     """Fork ``cmd`` N times with SPMD bootstrap env; returns the exit
     code (0 only if every rank exited 0 within ``timeout``)."""
+    preflight(strict=False)          # warn about leftovers of dead jobs
     owns_session = session is None
     if owns_session:
         session = tempfile.mkdtemp(prefix="repro-spmd-",
