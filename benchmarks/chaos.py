@@ -1,0 +1,218 @@
+"""What faults cost: message rate under injected loss, and rank-death
+recovery latency (DESIGN.md §16).
+
+Two cell families:
+
+* ``drop_sweep`` — the message-rate kernel (tagged eager AMs rank 0 →
+  rank 1, quiesced) at drop = dup = reorder = {0, 2, 5, 10}%.  The 0%
+  row runs chaos-free (no wrapper, no reliability layer) and is the
+  baseline; every faulted row reports its slowdown against it plus the
+  retransmit/dup/resequence work the reliability plane did to keep
+  delivery exactly-once and in order.
+* ``rank_death`` — a stream toward a peer that dies mid-run: measures
+  the time from ``mark_peer_dead`` until every outstanding post has
+  completed as ``ERR_PEER_DEAD`` (the no-hang guarantee's latency).
+
+Emits ``BENCH_chaos.json`` (same row schema as the other benchmarks).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List
+
+if __package__ in (None, ""):                 # `python benchmarks/...py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import ErrorCode, LocalCluster, post_am
+
+
+def _xproc():
+    try:
+        from . import _xproc as mod
+    except ImportError:
+        import _xproc as mod
+    return mod
+
+_ATTRS = {"eager_max_bytes": 64, "packets_per_lane": 64}
+_DEPTH = 1 << 14
+_SEED = 42
+
+
+def _cluster(fault: float) -> LocalCluster:
+    attrs = dict(_ATTRS)
+    if fault > 0:
+        attrs.update({"chaos_drop": fault, "chaos_dup": fault,
+                      "chaos_reorder": fault, "chaos_seed": _SEED})
+    return LocalCluster(2, attrs=attrs, fabric_depth=_DEPTH)
+
+
+def _attrs_echo() -> dict:
+    from repro.core import attrs as A
+    from repro.core.progress.reliability import RELIABILITY_ATTRS
+    from repro.core.runtime import RUNTIME_ATTRS
+    from repro.core.transport.chaos import CHAOS_ATTRS
+    return A.resolve((*RUNTIME_ATTRS, *CHAOS_ATTRS, *RELIABILITY_ATTRS,
+                      "fabric_depth"),
+                     runtime=_ATTRS,
+                     overrides={"fabric_depth": _DEPTH}).echo()
+
+
+def run_drop_cell(fault: float, n_msgs: int, size: int,
+                  snaps=None) -> dict:
+    """Message rate at one fault level; asserts exactly-once delivery."""
+    cl = _cluster(fault)
+    try:
+        r0, r1 = cl[0], cl[1]
+        cq = r1.alloc_cq()
+        rc = r1.register_rcomp(cq)
+        buf = np.zeros(size, np.uint8)
+        got = 0
+        t0 = time.perf_counter()
+        for i in range(n_msgs):
+            st = post_am(r0, 1, buf, remote_comp=rc, tag=i)
+            while st.is_retry():
+                r0.progress()
+                r1.progress()
+                while cq.pop().is_done():
+                    got += 1
+                st = post_am(r0, 1, buf, remote_comp=rc, tag=i)
+        cl.quiesce()
+        while cq.pop().is_done():
+            got += 1
+        elapsed = time.perf_counter() - t0
+        if got != n_msgs:
+            raise RuntimeError(
+                f"drop_sweep fault={fault}: delivered {got}/{n_msgs} — "
+                f"the reliability plane failed its exactly-once contract")
+        # sender holds the retransmit counters, receiver the dedup /
+        # resequence ones — merge both ranks' views
+        rel: dict = {}
+        for rt in (r0, r1):
+            if rt.rel is not None:
+                for k, v in rt.rel.counters().items():
+                    rel[k] = rel.get(k, 0) + v
+        fab = (cl.fabric.fault_counters()
+               if hasattr(cl.fabric, "fault_counters") else {})
+        if snaps is not None:
+            snaps.append(cl.telemetry_snapshot())
+        return {"rate": n_msgs / elapsed,
+                "us": elapsed / n_msgs * 1e6,
+                "retransmits": rel.get("retransmits", 0),
+                "dups_dropped": rel.get("dups_dropped", 0),
+                "resequenced": rel.get("resequenced", 0),
+                "faults": {k: v for k, v in fab.items()
+                           if k != "dead_ranks"}}
+    finally:
+        cl.close()
+
+
+def run_rank_death(n_outstanding: int, size: int, snaps=None) -> dict:
+    """Time from peer-death declaration to every outstanding post
+    completing ERR_PEER_DEAD (eager_max_bytes=0: every send is
+    bufcopy-class so its completion is observable)."""
+    cl = LocalCluster(2, attrs={**_ATTRS, "eager_max_bytes": 0,
+                                "chaos_drop": 1.0, "chaos_seed": _SEED,
+                                "retry_limit": 1_000_000})
+    try:
+        r0 = cl[0]
+        scq = r0.alloc_cq()
+        cq = cl[1].alloc_cq()
+        rc = cl[1].register_rcomp(cq)
+        buf = np.zeros(size, np.uint8)
+        for i in range(n_outstanding):
+            st = post_am(r0, 1, buf, local_comp=scq, remote_comp=rc, tag=i)
+            while st.is_retry():
+                r0.progress()
+                st = post_am(r0, 1, buf, local_comp=scq, remote_comp=rc,
+                             tag=i)
+        assert r0.pending_ops
+        t0 = time.perf_counter()
+        r0.mark_peer_dead(1)
+        dead = 0
+        deadline = time.monotonic() + 30.0
+        while dead < n_outstanding and time.monotonic() < deadline:
+            r0.progress()
+            st = scq.pop()
+            if not st.is_retry():
+                if st.code != ErrorCode.ERR_PEER_DEAD:
+                    raise RuntimeError(f"unexpected completion {st.code!r}")
+                dead += 1
+        ms = (time.perf_counter() - t0) * 1e3
+        if dead != n_outstanding or r0.pending_ops:
+            raise RuntimeError(
+                f"rank_death: {dead}/{n_outstanding} completed, "
+                f"{len(r0.pending_ops)} ops leaked — the no-hang "
+                f"guarantee broke")
+        if snaps is not None:
+            snaps.append(cl.telemetry_snapshot())
+        return {"ms": ms, "n": n_outstanding}
+    finally:
+        cl.close()
+
+
+def run(quick: bool = True, n_msgs: int = 0, size: int = 32,
+        snaps=None) -> List[dict]:
+    n_msgs = n_msgs or (400 if quick else 2000)
+    rows = []
+    base_rate = None
+    for fault in (0.0, 0.02, 0.05, 0.10):
+        cell = run_drop_cell(fault, n_msgs, size, snaps=snaps)
+        if base_rate is None:
+            base_rate = cell["rate"]
+            derived = f"{cell['rate']:,.0f} msg/s chaos-free baseline"
+        else:
+            derived = (f"{cell['rate']:,.0f} msg/s "
+                       f"({cell['rate'] / base_rate:.2f}x baseline), "
+                       f"{cell['retransmits']} retransmits, "
+                       f"{cell['dups_dropped']} dups dropped, "
+                       f"{cell['resequenced']} resequenced")
+        rows.append({"bench": "chaos",
+                     "case": f"drop_sweep/{fault:.2f}/{n_msgs}x{size}B",
+                     "us_per_call": cell["us"],
+                     "derived": derived,
+                     "reliability": {k: cell[k] for k in
+                                     ("retransmits", "dups_dropped",
+                                      "resequenced")},
+                     "faults": cell["faults"]})
+    death = run_rank_death(64 if quick else 256, size, snaps=snaps)
+    rows.append({"bench": "chaos",
+                 "case": f"rank_death/{death['n']}outstanding",
+                 "us_per_call": death["ms"] * 1e3 / death["n"],
+                 "derived": f"{death['ms']:.2f} ms to fail "
+                            f"{death['n']} posts ERR_PEER_DEAD (no hang)"})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--msgs", type=int, default=400,
+                    help="messages per drop-sweep cell")
+    ap.add_argument("--size", type=int, default=32,
+                    help="payload bytes per message")
+    ap.add_argument("--json", default="BENCH_chaos.json",
+                    help="output JSON path ('' disables)")
+    args = ap.parse_args()
+
+    _xproc().assert_clean_host()     # leftover SPMD jobs skew timing
+    snaps: list = []
+    rows = run(n_msgs=args.msgs, size=args.size, snaps=snaps)
+    for r in rows:
+        print(f"{r['case']:36s} {r['us_per_call']:9.3f} us  {r['derived']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "chaos", "msgs": args.msgs,
+                       "size": args.size,
+                       "resolved_attrs": _attrs_echo(),
+                       "telemetry": _xproc().telemetry_block(snaps),
+                       "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ Prints ``name,case,us_per_call,derived`` CSV rows:
     kmer          -> paper Fig 6  (HipMer k-mer stage, strong scaling)
     amt_pipeline  -> paper Fig 7  (AMT DAG: BSP barrier vs LCI async)
     graph_latency -> §3.2.5 async graph tax vs the Figure-1 chain
+    chaos         -> DESIGN.md §16 fault-injection cost + rank-death
     roofline      -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -29,7 +30,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (amt_pipeline, bandwidth, graph_latency, kmer,
+    from . import (amt_pipeline, bandwidth, chaos, graph_latency, kmer,
                    message_rate, mt_message_rate, resources, roofline)
     suites = {
         "message_rate": message_rate.run,
@@ -39,6 +40,7 @@ def main() -> None:
         "kmer": kmer.run,
         "amt_pipeline": amt_pipeline.run,
         "graph_latency": graph_latency.run,
+        "chaos": chaos.run,
         "roofline": roofline.run,
     }
     if args.only:

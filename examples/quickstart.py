@@ -20,7 +20,9 @@ Walks the paper's core concepts end to end on CPU:
       two-OS-process run via the SPMD launcher (DESIGN.md §14)
   11. the telemetry plane: attr-controlled stage timers, the unified
       counter snapshot, and Chrome trace export (DESIGN.md §15)
-  12. an in-graph ring collective under shard_map (the TPU adaptation)
+  12. the chaos plane: attr-driven fault injection healed by the
+      reliability protocol, and the rank-death fail-fast (DESIGN.md §16)
+  13. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -292,7 +294,51 @@ def main():
               f"(load at chrome://tracing); try "
               f"REPRO_ATTR_TELEMETRY_LEVEL=timers on any benchmark")
 
-    # -- 12. the in-graph layer: ring collectives (run under shard_map on
+    # -- 12. the chaos plane (DESIGN.md §16): faults are attrs too.
+    #       Non-zero chaos_* wraps the fabric in a fault-injecting
+    #       transport; reliability="auto" arms seq-stamping, cumulative
+    #       acks, and retransmit — so 5% drop + dup + reorder still
+    #       delivers exactly-once, in order.  REPRO_ATTR_CHAOS_DROP=0.05
+    #       does the same to any run from the environment. -------------
+    ccl = LocalCluster(2, attrs={"chaos_drop": 0.05, "chaos_dup": 0.05,
+                                 "chaos_reorder": 0.05, "chaos_seed": 7})
+    ccq = ccl[1].alloc_cq()
+    crc = ccl[1].register_rcomp(ccq)
+    for i in range(200):
+        st = post_am_x(ccl[0], 1, np.full(32, i % 256, np.uint8), None,
+                       None, crc).tag(i)()
+        while st.is_retry():
+            ccl.progress_all()
+            st = post_am_x(ccl[0], 1, np.full(32, i % 256, np.uint8),
+                           None, None, crc).tag(i)()
+    ccl.quiesce()                     # drives retransmits until healed
+    ctags = []
+    while True:
+        st = ccq.pop()
+        if st.is_retry():
+            break
+        ctags.append(st.tag)
+    faults = ccl.fabric.fault_counters()
+    rel = ccl[0].rel.counters()
+    assert ctags == list(range(200)), "chaos beat the reliability plane"
+    print(f"chaos: 200/200 delivered in order despite "
+          f"{faults['dropped']} drops, {faults['duped']} dups, "
+          f"{faults['reordered']} reorders "
+          f"({rel['retransmits']} retransmits, "
+          f"{ccl[1].rel.counters()['dups_dropped']} dups swallowed); "
+          f"try REPRO_ATTR_CHAOS_DROP=0.05 on the whole test suite")
+    # rank death is the fault the protocol can't heal — it fails fast
+    # instead: posts toward a dead peer err ERR_PEER_DEAD at post time,
+    # outstanding ones complete ERR_PEER_DEAD on the next sweep (the
+    # no-hang guarantee).  The SPMD launcher's --chaos-kill drives the
+    # full recovery: heartbeat detection -> shrink_mesh -> resharded
+    # restore (see python -m repro.launch.spmd --help).
+    ccl[0].mark_peer_dead(1)
+    st = post_am_x(ccl[0], 1, np.zeros(8, np.uint8), None, None, crc)()
+    print(f"chaos: post to dead peer -> {st.code.name} at post time")
+    ccl.close()
+
+    # -- 13. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

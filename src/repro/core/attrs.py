@@ -261,6 +261,57 @@ register_attr("fabric_depth", int, 4096, minimum=1,
 register_attr("link_latency", float, 0.0, minimum=0.0,
               resources=("cluster", "fabric"),
               doc="simulated wire latency in seconds (0 = instant fabric)")
+# chaos plane (DESIGN.md §16): fault injection on the drain side of any
+# transport backend — all zero/off by default (no ChaosTransport wrap)
+register_attr("chaos_seed", int, 0, minimum=0,
+              resources=("cluster", "fabric"),
+              doc="base seed for the per-stream fault RNGs — same seed, "
+                  "same fault decision sequence per (dst, device)")
+register_attr("chaos_drop", float, 0.0, minimum=0.0,
+              resources=("cluster", "fabric"),
+              doc="probability a retransmittable (seq-stamped) eager "
+                  "message is dropped at drain time")
+register_attr("chaos_dup", float, 0.0, minimum=0.0,
+              resources=("cluster", "fabric"),
+              doc="probability a drained eager message is delivered twice")
+register_attr("chaos_reorder", float, 0.0, minimum=0.0,
+              resources=("cluster", "fabric"),
+              doc="probability a drained eager message is held back and "
+                  "delivered after the following drain batch")
+register_attr("chaos_delay_p", float, 0.0, minimum=0.0,
+              resources=("cluster", "fabric"),
+              doc="probability a drained message takes a latency spike "
+                  "of chaos_delay_us before delivery")
+register_attr("chaos_delay_us", float, 1000.0, minimum=0.0,
+              resources=("cluster", "fabric"),
+              doc="latency-spike magnitude (microseconds) for messages "
+                  "selected by chaos_delay_p")
+register_attr("chaos_kill_rank", int, -1, minimum=-1,
+              resources=("cluster", "fabric"),
+              doc="declare this rank dead at the transport: all traffic "
+                  "from/to it is dropped (-1 = nobody dies)")
+# reliability protocol (DESIGN.md §16): seq/epoch stamping, unacked
+# windows, retransmit — 'auto' turns it on exactly when chaos faults are
+# active, so the default data plane pays nothing
+register_attr("reliability", str, "auto",
+              resources=("runtime", "cluster"),
+              choices=("auto", "on", "off"),
+              doc="eager-send retransmit protocol: on = stamp (seq, "
+                  "epoch), ack cumulatively, retransmit on timeout; "
+                  "auto = on only when chaos fault attrs are nonzero")
+register_attr("post_deadline_us", float, 0.0, minimum=0.0,
+              zero_means="no deadline",
+              resources=("runtime", "cluster"),
+              doc="deadline for tracked posts (send ack / recv match): "
+                  "past it the op completes with err(ERR_TIMEOUT)")
+register_attr("retry_limit", int, 16, minimum=1,
+              resources=("runtime", "cluster"),
+              doc="retransmits per unacked send before it completes "
+                  "with err(ERR_TIMEOUT)")
+register_attr("retry_backoff", float, 2e-3, minimum=1e-6,
+              resources=("runtime", "cluster"),
+              doc="base seconds between retransmits of one unacked "
+                  "send (doubles per retry, capped at 16x)")
 # per-device queues
 register_attr("backlog_capacity", int, 0, minimum=0, zero_means="unbounded",
               resources=("device",),

@@ -229,6 +229,44 @@ class HostMatchingEngine(_attrs.AttrResource):
             self._matches.fetch_add(1)
             return matched
 
+    def remove(self, key: Hashable, kind: MatchKind, value: Any) -> bool:
+        """Withdraw a previously inserted entry (identity match) — the
+        recv-deadline expiry path (DESIGN.md §16).  Returns True when the
+        entry was still queued and is now gone; False means it already
+        matched (or was never inserted), so the caller must NOT fail the
+        op — its completion is coming through the normal path."""
+        with self._lock_of(key):
+            bucket = self._buckets.get(key)
+            if bucket is None:
+                return False
+            dq = bucket[kind]
+            for v in dq:
+                if v is value:
+                    dq.remove(v)
+                    return True
+            return False
+
+    def extract_recvs_for_rank(self, rank: int) -> list:
+        """Withdraw every queued RECV whose key names ``rank`` — the
+        dead-peer sweep (DESIGN.md §16).  Wildcard-rank keys stay: a
+        TAG_ONLY recv can still match a living sender.  Returns the
+        extracted values."""
+        out: list = []
+        for key in list(self._buckets.keys()):
+            if not (isinstance(key, tuple) and key and key[0] == rank):
+                continue
+            with self._lock_of(key):
+                bucket = self._buckets.get(key)
+                if bucket is None:
+                    continue
+                dq = bucket[MatchKind.RECV]
+                while dq:
+                    try:
+                        out.append(dq.popleft())
+                    except IndexError:
+                        break
+        return out
+
     def pending(self) -> int:
         # snapshot the bucket list in one C-level call (GIL-atomic) so a
         # concurrent insert growing the dict cannot break the iteration

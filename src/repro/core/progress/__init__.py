@@ -19,12 +19,14 @@ from .fabric import (Fabric, MemoryRegion, PackedBurst, PendingBurst,
                      PendingOp, WireKind, WireMsg, as_bytes_view,
                      next_op_id, pack_payloads, payload_to_bytes,
                      payloads_to_bytes)
+from .reliability import RELIABILITY_ATTRS, ReliabilityManager
 from .rendezvous import RendezvousManager
 
 __all__ = [
     "ENDPOINT_ATTRS", "Endpoint", "EndpointSpec", "Fabric", "MemoryRegion", "PendingOp",
     "PackedBurst", "PendingBurst", "pack_payloads",
-    "ProgressEngine", "RendezvousManager", "WireKind", "WireMsg",
+    "ProgressEngine", "RELIABILITY_ATTRS", "ReliabilityManager",
+    "RendezvousManager", "WireKind", "WireMsg",
     "PROGRESS_POLICIES", "STRIPE_POLICIES", "as_bytes_view", "next_op_id",
     "payload_to_bytes", "payloads_to_bytes",
 ]

@@ -368,13 +368,17 @@ class Endpoint(_attrs.AttrResource):
     # -- progress ------------------------------------------------------------
     def _idle(self, dev) -> bool:
         """Lock-free probe: nothing for a pass on ``dev`` to do — no
-        incoming traffic, no backlog, no pending source completions.  A
-        burst that landed on one stripe leaves the other devices idle;
-        skipping their locked passes keeps a wide endpoint's progress
-        cost proportional to traffic, not to width."""
+        incoming traffic, no backlog, no pending source completions, and
+        no armed reliability timers (a dropped message's retransmit is
+        work even when every queue is empty).  A burst that landed on one
+        stripe leaves the other devices idle; skipping their locked
+        passes keeps a wide endpoint's progress cost proportional to
+        traffic, not to width."""
+        rel = self.runtime.rel
         return (not dev.pending_tx and dev.backlog.empty_flag
                 and not self.runtime.fabric.stream_depth(
-                    self.runtime.rank, dev.index))
+                    self.runtime.rank, dev.index)
+                and (rel is None or not rel.armed()))
 
     def progress(self, rounds: int = 1, max_msgs: int = 0) -> int:
         """Drive this endpoint's devices with its engine(s).

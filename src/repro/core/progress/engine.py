@@ -23,7 +23,7 @@ from ..concurrency.atomics import AtomicCounter
 from ..matching import MatchKind, MatchingPolicy, make_key
 from ..post import CommKind
 from ..protocol import Protocol, select_protocol
-from ..status import ErrorCode, FatalError, Status, done, posted, retry
+from ..status import ErrorCode, FatalError, Status, done, err, posted, retry
 from ..telemetry import NULL_TELEMETRY, record_burst_mix
 from .fabric import (PackedBurst, PendingBurst, PendingOp, WireKind, WireMsg,
                      as_bytes_view, next_op_id, pack_payloads,
@@ -142,6 +142,13 @@ class ProgressEngine:
         dev.count_post()
         if rank < 0 or rank >= rt.n_ranks:
             raise FatalError(f"bad target rank {rank}")
+        if rt.dead_peers and rank in rt.dead_peers \
+                and kind != CommKind.RECV:
+            # the peer is declared dead (DESIGN.md §16): the op can never
+            # complete, so it fails at post time — comps are NOT signaled
+            # (the err status is returned directly, like done)
+            return err(ErrorCode.ERR_PEER_DEAD, rank=rank, tag=tag,
+                       ctx=user_context)
 
         if kind == CommKind.RECV:
             return self._post_recv(rank, buf, tag, size, local_comp, dev,
@@ -210,19 +217,31 @@ class ProgressEngine:
             return done(code=ErrorCode.DONE_INLINE, rank=rank, tag=tag)
         return posted(ctx=op_id)
 
+    def _push_one(self, msg: WireMsg) -> bool:
+        """Push one message, routing eager kinds through the reliability
+        layer when armed — rel stamps a stream seq on acceptance (the
+        ack then completes the op instead of the tx sweep)."""
+        rt = self.rt
+        rel = rt.rel
+        if rel is not None and msg.kind in _EAGER_KINDS:
+            return rel.send(rt.fabric, msg)
+        return rt.fabric.try_push(msg)
+
     def submit(self, msg: WireMsg, dev, allow_retry: bool) -> Status:
         """Push to the fabric; full queue -> retry or backlog."""
         rt = self.rt
         tele = self.tele
         if tele.timers_on:
             with tele.span("transport.push"):
-                ok = rt.fabric.try_push(msg)
+                ok = self._push_one(msg)
         else:
-            ok = rt.fabric.try_push(msg)
+            ok = self._push_one(msg)
         if ok:
             dev.count_push()
-            # source completion for bufcopy/zerocopy is deferred to progress
-            if msg.op_id >= 0:
+            # source completion for bufcopy/zerocopy is deferred to
+            # progress; a rel-stamped message (seq >= 0) completes on its
+            # ack instead of the tx sweep
+            if msg.op_id >= 0 and msg.seq < 0:
                 dev.pending_tx.append(msg.op_id)
             return posted()
         rt.stats.retries += 1
@@ -363,6 +382,9 @@ class ProgressEngine:
         dev.count_post(n)
         if rank < 0 or rank >= rt.n_ranks:
             raise FatalError(f"bad target rank {rank}")
+        if rt.dead_peers and rank in rt.dead_peers:
+            return [err(ErrorCode.ERR_PEER_DEAD, rank=rank, tag=t)
+                    for t in tags]
 
         # ONE pool round-trip covers the whole run's packet demand
         n_buf = protos.count(Protocol.BUFCOPY) if hasattr(protos, "count") \
@@ -410,12 +432,17 @@ class ProgressEngine:
                           size=int(data.nbytes), rcomp=remote_comp,
                           matching_policy=policy, op_id=-1,
                           device_index=dev.index)
+            rel = rt.rel
             tele = self.tele
             if tele.timers_on:
                 with tele.span("transport.push"):
-                    pushed = rt.fabric.push_packed(msg)
+                    pushed = (rel.send_packed(rt.fabric, msg)
+                              if rel is not None
+                              else rt.fabric.push_packed(msg))
             else:
-                pushed = rt.fabric.push_packed(msg)
+                pushed = (rel.send_packed(rt.fabric, msg)
+                          if rel is not None
+                          else rt.fabric.push_packed(msg))
             dev.count_push(pushed)
             if pushed < cut:
                 rt.stats.retries += cut - pushed
@@ -447,7 +474,13 @@ class ProgressEngine:
                     kind, rank, dev.lane, packets[:used],
                     tags[:pushed] if used == pushed
                     else [tags[i] for i in bidx], comps)
-                dev.pending_tx.append(op_id)
+                # a rel-stamped doorbell (msg.seq >= 0) binds its op to
+                # the recorded entry and completes on the cumulative ack
+                # instead of the tx sweep
+                if not (msg.seq >= 0 and rt.rel is not None
+                        and rt.rel.bind_op(rank, dev.index, msg.seq,
+                                           op_id)):
+                    dev.pending_tx.append(op_id)
 
         # burst telemetry: ONE shared helper does the per-protocol-class
         # accounting for the accepted prefix (identical arithmetic to the
@@ -493,6 +526,24 @@ class ProgressEngine:
         for op in ops:
             if op.rank < 0 or op.rank >= rt.n_ranks:
                 raise FatalError(f"bad target rank {op.rank}")
+        if rt.dead_peers and any(op.rank in rt.dead_peers for op in ops):
+            # rare path: a burst touching a dead peer degrades to scalar
+            # posts so each op gets its own err/posted verdict in order
+            dev.count_post(-n)     # the scalar path re-counts each post
+            out: List[Status] = []
+            for i, op in enumerate(ops):
+                st = self.post(kind=op.kind, rank=op.rank, buf=op.buf,
+                               tag=op.tag, size=op.size,
+                               local_comp=op.local_comp, remote_buf=None,
+                               remote_comp=op.remote_comp, device=dev,
+                               matching_policy=op.matching_policy,
+                               allow_retry=True,
+                               user_context=op.user_context)
+                out.append(st)
+                if st.is_retry():
+                    out.extend(retry(st.code) for _ in ops[i + 1:])
+                    break
+            return out
 
         # ONE pool round-trip covers the whole run's packet demand
         n_buf = sum(1 for p in protos if p == Protocol.BUFCOPY)
@@ -540,6 +591,7 @@ class ProgressEngine:
 
         # ring one doorbell per consecutive (peer, device) stream
         tele = self.tele
+        rel = rt.rel
         pushed = cut
         j = 0
         while j < len(msgs):
@@ -548,11 +600,15 @@ class ProgressEngine:
                 k += 1
             if tele.timers_on:
                 with tele.span("transport.push"):
-                    acc = rt.fabric.push_burst(msgs[j:k])
+                    acc = (rel.send_burst(rt.fabric, msgs[j:k])
+                           if rel is not None
+                           else rt.fabric.push_burst(msgs[j:k]))
             else:
-                acc = rt.fabric.push_burst(msgs[j:k])
+                acc = (rel.send_burst(rt.fabric, msgs[j:k])
+                       if rel is not None
+                       else rt.fabric.push_burst(msgs[j:k]))
             for m in msgs[j:j + acc]:
-                if m.op_id >= 0:
+                if m.op_id >= 0 and m.seq < 0:
                     dev.pending_tx.append(m.op_id)
             if acc < k - j:                  # fabric full: cut here
                 pushed = j + acc
@@ -591,10 +647,18 @@ class ProgressEngine:
 
     def _post_recv(self, rank: int, buf, tag: int, size: int,
                    local_comp, dev, policy: MatchingPolicy) -> Status:
+        rt = self.rt
+        if rt.dead_peers and rank in rt.dead_peers \
+                and policy is not MatchingPolicy.TAG_ONLY:
+            # a recv naming a dead source can never match (wildcard-rank
+            # recvs stay postable: a living sender may still satisfy them)
+            return err(ErrorCode.ERR_PEER_DEAD, rank=rank, tag=tag)
         key = make_key(rank, tag, policy)
-        match = self.rt.matching.insert(key, MatchKind.RECV,
-                                        ("recv", buf, local_comp, dev))
+        value = ("recv", buf, local_comp, dev)
+        match = self.rt.matching.insert(key, MatchKind.RECV, value)
         if match is None:
+            if rt.rel is not None:
+                rt.rel.track_recv(key, value, local_comp, rank, tag, dev)
             return posted(code=ErrorCode.POSTED_UNMATCHED)
         mkind, *rest = match
         if mkind == "eager":
@@ -642,7 +706,8 @@ class ProgressEngine:
         # Unlocked reads are safe: a stale miss is just an earlier poll,
         # and new work re-arms all three signals.
         if dev.backlog.empty_flag and not dev.pending_tx \
-                and not rt.fabric.ready(rt.rank, dev.index):
+                and not rt.fabric.ready(rt.rank, dev.index) \
+                and (rt.rel is None or not rt.rel.armed()):
             return False
         if not dev.progress_lock.try_acquire():
             return None
@@ -684,6 +749,15 @@ class ProgressEngine:
                 did |= self._stage_drain(dev, max_msgs)
         else:
             did |= self._stage_drain(dev, max_msgs)
+        rel = self.rt.rel
+        if rel is not None and rel.armed():
+            # reliability timers (DESIGN.md §16): retransmit overdue
+            # entries, expire post deadlines, flush stuck acks
+            if tele is not None:
+                with tele.span("progress.rel"):
+                    did |= rel.sweep(self, dev)
+            else:
+                did |= rel.sweep(self, dev)
         return did
 
     def _stage_backlog(self, dev) -> bool:
@@ -697,14 +771,14 @@ class ProgressEngine:
             tag0 = item[0]
             if tag0 == "wire":
                 msg = item[1]
-                if not rt.fabric.try_push(msg):
+                if not self._push_one(msg):
                     # requeue at the HEAD: a tail push would let a later
                     # same-stream message overtake this one once the
                     # fabric frees up (push_front never fails)
                     dev.backlog.push_front(item)
                     break
                 dev.count_push()
-                if msg.op_id >= 0:
+                if msg.op_id >= 0 and msg.seq < 0:
                     dev.pending_tx.append(msg.op_id)
                 did = True
             elif tag0 == "post":
@@ -785,6 +859,46 @@ class ProgressEngine:
             batch.flush(self, dev)
         return did
 
+    # -- reliability completions (DESIGN.md §16) -----------------------------
+    def complete_tx_op(self, op_id: int, dev) -> None:
+        """Retire one rel-tracked pending op whose cumulative ack
+        arrived — packets back to the pool, comps signaled done, exactly
+        the per-op semantics of :meth:`_stage_tx_sweep`.  Idempotent: a
+        second call (or a call after a deadline failure already popped
+        the op) is a no-op, keeping comp signals exactly-once."""
+        self._finish_tx_op(op_id, dev, None)
+
+    def fail_tx_op(self, op_id: int, dev, code: ErrorCode) -> None:
+        """Terminally fail one rel-tracked pending op: packets still
+        return to the pool, but comps are signaled ``err(code)`` so
+        waiters never hang (ERR_TIMEOUT / ERR_PEER_DEAD)."""
+        self._finish_tx_op(op_id, dev, code)
+
+    def _finish_tx_op(self, op_id: int, dev,
+                      code: Optional[ErrorCode]) -> None:
+        rt = self.rt
+        op = rt.pending_ops.pop(op_id, None)
+        if op is None:
+            return
+        if code is None:
+            mk = lambda t: done(rank=op.peer, tag=t)   # noqa: E731
+        else:
+            mk = lambda t: err(code, rank=op.peer, tag=t)  # noqa: E731
+        if type(op) is PendingBurst:
+            rt.packet_pool.put_n(op.lane, op.packets)
+            if isinstance(op.comps, list):
+                for c, t in zip(op.comps, op.tags):
+                    self.signal(c, mk(t), dev)
+            elif op.comps is not None:
+                self.signal_many(op.comps, [mk(t) for t in op.tags], dev)
+            return
+        if op.kind in (CommKind.SEND, CommKind.AM):
+            if op.packet >= 0:
+                rt.packet_pool.put(op.lane, op.packet)
+                self.signal(op.local_comp, mk(op.tag), dev)
+        elif op.kind in (CommKind.PUT, CommKind.PUT_SIGNAL):
+            self.signal(op.local_comp, mk(op.tag), dev)
+
     def _stage_drain(self, dev, max_msgs: int) -> bool:
         """Stage (4): poll incoming for this device stream and react:
         drain is one bounded burst per lock acquisition; eager
@@ -801,6 +915,10 @@ class ProgressEngine:
                 msgs = rt.fabric.drain(rt.rank, dev.index, max_msgs)
         else:
             msgs = rt.fabric.drain(rt.rank, dev.index, max_msgs)
+        if msgs and rt.rel is not None:
+            # reliability filter: consume acks, drop dups/stale epochs,
+            # resequence held-back runs into exact per-stream seq order
+            msgs = rt.rel.on_incoming(msgs, self, dev)
         if msgs:
             batch = _SignalBatch()
             for msg in msgs:
@@ -910,6 +1028,11 @@ class ProgressEngine:
             rt.rdv.on_get_req(self, msg, dev)
         elif k == WireKind.GET_RESP:
             rt.rdv.on_get_resp(self, msg, dev)
+        elif k == WireKind.ACK:
+            # normally consumed by rel.on_incoming before reaction; a
+            # straggler ack with reliability disabled is just dropped
+            if rt.rel is not None:
+                rt.rel._on_ack(msg, self, dev)
         else:
             raise FatalError(f"unknown wire kind {k}")
 

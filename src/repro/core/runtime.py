@@ -33,7 +33,7 @@ from .modes import _FIELD_TO_ATTR, CommConfig
 from .off import off
 from .packet_pool import POOL_ATTRS, HostPacketPool
 from .protocol import ProtocolStats
-from .status import FatalError, Status
+from .status import ErrorCode, FatalError, Status, err
 from .telemetry import Telemetry, merge_snapshots
 
 #: runtime-level attrs one Runtime resolves at construction
@@ -43,11 +43,13 @@ RUNTIME_ATTRS = ("mode", "n_channels", "eager_max_bytes", "rdv_threshold",
                  "packets_per_lane", "packet_bytes", "pool_lanes",
                  "telemetry_level", "trace_capacity")
 # Re-exported names that historically lived here (public API compatibility).
-from .progress import (ENDPOINT_ATTRS, Endpoint, EndpointSpec, Fabric,
-                       MemoryRegion,
-                       PendingOp, ProgressEngine, RendezvousManager,
+from .progress import (ENDPOINT_ATTRS, RELIABILITY_ATTRS, Endpoint,
+                       EndpointSpec, Fabric, MemoryRegion,
+                       PendingOp, ProgressEngine, ReliabilityManager,
+                       RendezvousManager,
                        WireKind, WireMsg, as_bytes_view, payload_to_bytes)
-from .transport import FABRIC_ATTRS, Transport, make_transport
+from .transport import (CHAOS_ATTRS, FABRIC_ATTRS, ChaosTransport, Transport,
+                        make_transport, maybe_wrap_chaos)
 
 # back-compat aliases for the old private helpers
 _as_bytes_view = as_bytes_view
@@ -132,6 +134,19 @@ class Runtime(_attrs.AttrResource):
         # shared per-rank op state the engines operate on
         self.pending_ops: Dict[int, PendingOp] = {}
         self.rdv = RendezvousManager(self)
+        # reliability plane (DESIGN.md §16): armed explicitly via the
+        # ``reliability`` attr, or automatically when the cluster fabric
+        # is a message-faulting chaos transport — the zero-fault default
+        # stays rel-free and byte-identical to the pre-chaos engine
+        self.dead_peers: set = set()
+        relr = _attrs.resolve(RELIABILITY_ATTRS, runtime=self._attr_layer)
+        fabric = cluster.fabric
+        chaos_faults = (isinstance(fabric, ChaosTransport)
+                        and fabric.cfg.faults_messages)
+        mode = relr["reliability"]
+        self.rel = (ReliabilityManager(self, relr)
+                    if mode == "on" or (mode == "auto" and chaos_faults)
+                    else None)
         self.engine = ProgressEngine(self, name=f"rank{rank}/shared")
         self.endpoints: List[Endpoint] = []
         self.default_device = self.alloc_device(lane=0)
@@ -146,6 +161,8 @@ class Runtime(_attrs.AttrResource):
             "burst_posts": self.engine.burst_posts})
         self.tele.attach("pool", self.packet_pool.telemetry_counters)
         self.tele.attach("matching", self.matching.telemetry_counters)
+        if self.rel is not None:
+            self.tele.attach("reliability", self.rel.counters)
         # read-only discovered attributes (LCI get_attr_* mirror)
         self._export_attr("rank_me", lambda: self.rank)
         self._export_attr("rank_n", lambda: self.cluster.n_ranks)
@@ -168,6 +185,27 @@ class Runtime(_attrs.AttrResource):
             out["lock_acquisitions"] += dev.progress_lock.acquisitions
             out["lock_contentions"] += dev.progress_lock.contentions
         return out
+
+    # -- rank death (DESIGN.md §16) ------------------------------------------
+    def mark_peer_dead(self, rank: int) -> None:
+        """Declare ``rank`` dead: future posts toward it fail at post
+        time with ``err(ERR_PEER_DEAD)``, queued recvs naming it are
+        withdrawn and err-signaled, and the reliability layer (when
+        armed) fails its unacked window on the next sweep.  Idempotent;
+        typically driven by the spmd heartbeat watchdog."""
+        if rank == self.rank:
+            raise FatalError("a rank cannot declare itself dead")
+        if not 0 <= rank < self.n_ranks:
+            raise FatalError(f"bad rank {rank}")
+        if rank in self.dead_peers:
+            return
+        self.dead_peers.add(rank)
+        for value in self.matching.extract_recvs_for_rank(rank):
+            _, buf, comp, rdev = value
+            self.engine.signal(
+                comp, err(ErrorCode.ERR_PEER_DEAD, rank=rank), rdev)
+        if self.rel is not None:
+            self.rel.kill_peer(rank)
 
     # -- rank / fabric queries ----------------------------------------------
     def get_rank_me(self) -> int:
@@ -436,8 +474,13 @@ class LocalCluster(_attrs.AttrResource):
             fr["fabric_backend"], n_ranks, depth=fr["fabric_depth"],
             latency=fr["link_latency"], resolved=fr,
             ring_bytes=fr["shm_ring_bytes"], **self._transport_extra())
+        # chaos plane (DESIGN.md §16): an active chaos_* config wraps the
+        # backend in the fault-injecting transport; the zero-fault
+        # default returns the backend untouched
+        cr = _attrs.resolve(CHAOS_ATTRS, runtime=self._attr_layer)
+        self.fabric = maybe_wrap_chaos(self.fabric, cr)
         self.fabric.set_telemetry(self.tele)
-        self._init_attrs(fr.merged(rr))
+        self._init_attrs(fr.merged(rr).merged(cr))
         self._export_attr("rank_n", lambda: self.n_ranks)
         self._export_attr("in_flight", self.fabric.in_flight)
         self._export_attr("telemetry", self.telemetry_snapshot)
@@ -515,13 +558,19 @@ class LocalCluster(_attrs.AttrResource):
     def quiesce(self, max_rounds: int = 10_000) -> None:
         """Progress until no work remains (test/benchmark helper)."""
         import time as _time
+        rels = [rt.rel for rt in self.local_runtimes()
+                if rt.rel is not None]
         for _ in range(max_rounds):
             if not self.progress_all():
-                if self.fabric.in_flight() == 0:
+                if self.fabric.in_flight() == 0 \
+                        and not any(r.busy() for r in rels):
                     return
-                # messages still on the (latency-modeled) wire: wait for
-                # them to become drainable rather than declaring quiet
-                _time.sleep(self.fabric.latency / 4 or 1e-5)
+                # messages still on the (latency-modeled) wire, held by
+                # the chaos stash, or waiting out a reliability backoff
+                # timer: sleep rather than declaring quiet — rel backoff
+                # needs a coarser tick than the latency model
+                _time.sleep(max(self.fabric.latency / 4,
+                                1e-4 if rels else 1e-5))
         raise FatalError("cluster failed to quiesce")
 
 

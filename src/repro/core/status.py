@@ -27,6 +27,7 @@ class ErrorKind(enum.IntEnum):
     DONE = 0
     POSTED = 1
     RETRY = 2
+    ERR = 3                    # terminal failure (chaos plane, DESIGN.md §16)
 
 
 class ErrorCode(enum.IntEnum):
@@ -46,6 +47,10 @@ class ErrorCode(enum.IntEnum):
     RETRY_LOCKED = 22          # try-lock analogue: resource busy
     RETRY_BACKLOG_FULL = 23
     RETRY_QUEUE_FULL = 24      # completion queue ring full
+    # err — terminal: the op will never complete; comps ARE signaled
+    # (exactly once) with the error status so callers never hang
+    ERR_TIMEOUT = 30           # post deadline / retry budget exhausted
+    ERR_PEER_DEAD = 31         # peer rank declared dead (heartbeat/chaos)
 
 
 class FatalError(RuntimeError):
@@ -80,6 +85,9 @@ class Status:
     def is_retry(self) -> bool:
         return self.kind == ErrorKind.RETRY
 
+    def is_err(self) -> bool:
+        return self.kind == ErrorKind.ERR
+
     def get_buffer(self):
         if not self.is_done():
             raise FatalError("status payload only valid when done")
@@ -97,6 +105,14 @@ def posted(*, code: ErrorCode = ErrorCode.POSTED_OK, ctx: Any = None) -> Status:
 
 def retry(code: ErrorCode = ErrorCode.RETRY_LOCKED) -> Status:
     return Status(ErrorKind.RETRY, code)
+
+
+def err(code: ErrorCode = ErrorCode.ERR_TIMEOUT, *,
+        rank: int | None = None, tag: int | None = None,
+        ctx: Any = None) -> Status:
+    """Terminal failure status — signaled to comps exactly once in place
+    of the ``done`` the op would have delivered (DESIGN.md §16)."""
+    return Status(ErrorKind.ERR, code, rank=rank, tag=tag, user_context=ctx)
 
 
 # Integer encodings for *in-graph* (traced) status values. Functional

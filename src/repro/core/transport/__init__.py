@@ -16,7 +16,9 @@ socket machinery until a backend is actually constructed.
 """
 from .base import (FABRIC_ATTRS, Transport, backend_class, make_transport,
                    register_backend)
-from .codec import decode_msg, encode_msg
+from .chaos import (CHAOS_ATTRS, ChaosConfig, ChaosTransport,
+                    maybe_wrap_chaos)
+from .codec import CodecError, decode_msg, encode_msg
 from .wire import PACKED_KINDS, PackedBurst, WireKind, WireMsg, msg_weight
 
 __all__ = [
@@ -25,6 +27,11 @@ __all__ = [
     "backend_class",
     "make_transport",
     "register_backend",
+    "CHAOS_ATTRS",
+    "ChaosConfig",
+    "ChaosTransport",
+    "maybe_wrap_chaos",
+    "CodecError",
     "decode_msg",
     "encode_msg",
     "PACKED_KINDS",

@@ -11,6 +11,7 @@ that a reader in any process — or any language — can parse:
     [i32 rcomp+1 (0 = None)][u8 matching-code][i32 device_index]
     [f64 ready_at]
     [u8 remote-buf-tag][i64 region_id][i64 offset]      (tag 0 = None)
+    [i64 seq][i32 epoch][u32 body-crc32]
     [u8 payload-tag][...payload body...]
 
 Payload bodies by tag:
@@ -28,10 +29,18 @@ come back as flat uint8 arrays, packed bursts keep their per-row sizes,
 tags, and bf16 wire dtype (``delivered_payloads`` equality is the
 contract the property test pins).  Broadcast stride-0 rows are
 materialized on encode — the wire carries bytes, not strides.
+
+Version 2 hardens the decoder for the chaos plane (DESIGN.md §16): the
+header carries the reliability (seq, epoch) stamp plus a CRC32 over the
+payload body, and every malformed input — truncated header or body, bad
+magic, wrong version, unknown codes, negative lengths, bit-flipped
+bytes — raises the typed :class:`CodecError` instead of leaking a bare
+``struct.error`` / ``IndexError`` out of the parser.
 """
 from __future__ import annotations
 
 import struct
+import zlib
 from typing import Any, Tuple
 
 import numpy as np
@@ -40,8 +49,15 @@ from ..matching import MatchingPolicy
 from ..status import FatalError
 from .wire import PackedBurst, WireKind, WireMsg
 
+
+class CodecError(FatalError):
+    """A wire frame failed to parse or verify — torn, foreign, or
+    corrupted bytes.  Typed so transports can fail the *stream* (not the
+    process) and the chaos tests can assert on it."""
+
+
 _MAGIC = 0x5C17          # "LCI7"-ish; catches torn/foreign frames early
-_VERSION = 1
+_VERSION = 2             # v2: (seq, epoch) stamp + body crc32
 
 # stable one-byte codes; append only — never renumber a released code
 _KIND_TO_CODE = {
@@ -55,6 +71,7 @@ _KIND_TO_CODE = {
     WireKind.PUT: 8,
     WireKind.GET_REQ: 9,
     WireKind.GET_RESP: 10,
+    WireKind.ACK: 11,
 }
 _CODE_TO_KIND = {v: k for k, v in _KIND_TO_CODE.items()}
 
@@ -75,7 +92,7 @@ _P_PACKED = 3
 _WD_TO_CODE = {None: 0, "bf16": 1}
 _CODE_TO_WD = {v: k for k, v in _WD_TO_CODE.items()}
 
-_HDR = struct.Struct("<HBB iiqqq iBi d Bqq B")
+_HDR = struct.Struct("<HBB iiqqq iBi d Bqq qiI B")
 
 
 def _payload_bytes(payload: np.ndarray) -> bytes:
@@ -124,39 +141,67 @@ def encode_msg(msg: WireMsg) -> bytes:
                     0 if msg.rcomp is None else msg.rcomp + 1,
                     _POLICY_TO_CODE[msg.matching_policy],
                     msg.device_index, msg.ready_at,
-                    rb_tag, rb0, rb1, p_tag)
+                    rb_tag, rb0, rb1,
+                    msg.seq, msg.epoch, zlib.crc32(body) & 0xFFFFFFFF,
+                    p_tag)
     return hdr + body
+
+
+def _need(view: memoryview, off: int, n: int, what: str) -> None:
+    if n < 0 or off + n > len(view):
+        raise CodecError(f"codec: truncated frame ({what}: need {n} bytes "
+                         f"at offset {off}, have {len(view) - off})")
 
 
 def decode_msg(buf: Any, offset: int = 0) -> Tuple[WireMsg, int]:
     """Parse one frame from ``buf`` at ``offset``; returns the message
-    and the offset one past its last byte."""
+    and the offset one past its last byte.  Malformed or corrupted
+    frames raise :class:`CodecError` — never a bare struct/IndexError."""
     view = memoryview(buf)
+    _need(view, offset, _HDR.size, "header")
     (magic, version, kind_code, src, dst, tag, size, op_id,
      rcomp1, policy_code, device_index, ready_at,
-     rb_tag, rb0, rb1, p_tag) = _HDR.unpack_from(view, offset)
+     rb_tag, rb0, rb1, seq, epoch, crc, p_tag) = \
+        _HDR.unpack_from(view, offset)
     if magic != _MAGIC:
-        raise FatalError(f"codec: bad frame magic 0x{magic:04x}")
+        raise CodecError(f"codec: bad frame magic 0x{magic:04x}")
     if version != _VERSION:
-        raise FatalError(f"codec: unsupported wire version {version}")
-    off = offset + _HDR.size
+        raise CodecError(f"codec: unsupported wire version {version}")
+    kind = _CODE_TO_KIND.get(kind_code)
+    if kind is None:
+        raise CodecError(f"codec: unknown wire kind code {kind_code}")
+    policy = _CODE_TO_POLICY.get(policy_code)
+    if policy is None:
+        raise CodecError(f"codec: unknown matching code {policy_code}")
+    off = body_start = offset + _HDR.size
 
     if p_tag == _P_NONE:
         payload: Any = None
     elif p_tag == _P_BYTES:
+        _need(view, off, 8, "bytes length")
         (nbytes,) = struct.unpack_from("<q", view, off)
         off += 8
+        _need(view, off, nbytes, "bytes body")
         payload = np.frombuffer(view, np.uint8, nbytes, off).copy()
         off += nbytes
     elif p_tag == _P_INTS:
+        _need(view, off, 4, "ints count")
         (n,) = struct.unpack_from("<i", view, off)
         off += 4
+        _need(view, off, 8 * n if n >= 0 else -1, "ints body")
         payload = tuple(
             int(v) for v in np.frombuffer(view, "<i8", n, off))
         off += 8 * n
     elif p_tag == _P_PACKED:
+        _need(view, off, 9, "packed header")
         count, row_bytes, wd_code = struct.unpack_from("<iiB", view, off)
         off += 9
+        if count < 0 or row_bytes < 0:
+            raise CodecError(f"codec: negative packed dims "
+                             f"({count}, {row_bytes})")
+        if wd_code not in _CODE_TO_WD:
+            raise CodecError(f"codec: unknown wire dtype code {wd_code}")
+        _need(view, off, 16 * count + count * row_bytes, "packed body")
         sizes = np.frombuffer(view, "<i8", count, off).copy()
         off += 8 * count
         tags = [int(t) for t in np.frombuffer(view, "<i8", count, off)]
@@ -167,13 +212,19 @@ def decode_msg(buf: Any, offset: int = 0) -> Tuple[WireMsg, int]:
         payload = PackedBurst(rows, sizes, tags, count,
                               _CODE_TO_WD[wd_code])
     else:
-        raise FatalError(f"codec: unknown payload tag {p_tag}")
+        raise CodecError(f"codec: unknown payload tag {p_tag}")
 
-    msg = WireMsg(kind=_CODE_TO_KIND[kind_code], src=src, dst=dst,
+    body_crc = zlib.crc32(view[body_start:off]) & 0xFFFFFFFF
+    if body_crc != crc:
+        raise CodecError(f"codec: payload crc mismatch "
+                         f"(frame 0x{crc:08x} != body 0x{body_crc:08x})")
+
+    msg = WireMsg(kind=kind, src=src, dst=dst,
                   tag=tag, payload=payload, size=size,
                   rcomp=None if rcomp1 == 0 else rcomp1 - 1,
-                  matching_policy=_CODE_TO_POLICY[policy_code],
+                  matching_policy=policy,
                   op_id=op_id,
                   remote_buf=None if rb_tag == 0 else (rb0, rb1),
-                  device_index=device_index, ready_at=ready_at)
+                  device_index=device_index, ready_at=ready_at,
+                  seq=seq, epoch=epoch)
     return msg, off

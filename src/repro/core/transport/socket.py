@@ -89,7 +89,10 @@ class SocketTransport(Transport):
         # consumer-side inbox per (dst, device) stream
         self._inbox: Dict[Tuple[int, int], collections.deque] = {}
         self._closed = False
+        self._dead_dsts: set = set()
         self._export_attr("socket_session_dir", lambda: self._dir)
+        self._export_attr("socket_dead_dsts",
+                          lambda: sorted(self._dead_dsts))
 
     def _sock_path(self, rank: int) -> str:
         return os.path.join(self._dir, f"rank{rank}.sock")
@@ -117,13 +120,36 @@ class SocketTransport(Transport):
         self._out[dst] = sock
         return sock
 
+    def _mark_dst_dead(self, dst: int) -> None:
+        """A hard socket error (EPIPE/ECONNRESET/refused) means the peer
+        process is gone: its frames can never be delivered.  Drop the
+        stream instead of wedging or crashing the survivor — rank-death
+        *semantics* (ERR_PEER_DEAD on outstanding ops) belong to the
+        failure detector and reliability layer above (DESIGN.md §16);
+        the transport's job is merely to stay alive."""
+        self._dead_dsts.add(dst)
+        q = self._txq.pop(dst, None)
+        if q:
+            for _frame, key, weight in q:
+                self._tx_weight[key] = self._tx_weight.get(key, 0) - weight
+        sock = self._out.pop(dst, None)
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
     def _flush(self, dst: int) -> None:
         """Push buffered frames into the kernel; stops when it would
         block (the kernel buffer is the real back-pressure)."""
         q = self._txq.get(dst)
         if not q:
             return
-        sock = self._connect(dst)
+        try:
+            sock = self._connect(dst)
+        except FatalError:
+            self._mark_dst_dead(dst)     # connect refused past the grace
+            return
         while q:
             frame, key, weight = q[0]
             try:
@@ -131,7 +157,8 @@ class SocketTransport(Transport):
             except OSError as e:
                 if e.errno in (errno.EAGAIN, errno.EWOULDBLOCK):
                     return
-                raise
+                self._mark_dst_dead(dst)
+                return
             if sent < len(frame):
                 q[0] = (frame[sent:], key, weight)
                 return
@@ -139,6 +166,11 @@ class SocketTransport(Transport):
             self._tx_weight[key] = self._tx_weight.get(key, 0) - weight
 
     def _enqueue(self, msg: WireMsg, weight: int) -> bool:
+        if msg.dst in self._dead_dsts:
+            # accepted-and-dropped: the peer is gone, back-pressure would
+            # never clear; liveness for the caller, loss handled above
+            self._pushes.fetch_add(weight)
+            return True
         key = (msg.dst, msg.device_index)
         if self._tx_weight.get(key, 0) + weight > self.depth:
             self._flush(msg.dst)

@@ -36,6 +36,7 @@ class WireKind:
     PUT = "put"                    # RMA put (optionally with signal)
     GET_REQ = "get_req"            # RMA get request
     GET_RESP = "get_resp"          # RMA get response
+    ACK = "ack"                    # reliability cumulative ack (§16)
 
 
 #: packed wire kinds — each such message weighs ``payload.count`` toward
@@ -59,6 +60,11 @@ class WireMsg:
     remote_buf: Any = None         # (region_id, offset) for RMA
     device_index: int = 0          # which device stream this rides
     ready_at: float = 0.0          # wire-latency model: drainable after this
+    # reliability protocol (DESIGN.md §16): per-(dst, device) stream
+    # sequence number for retransmit/dedup; -1 = untracked control
+    # traffic (rides the reliable connection, never chaos-faulted)
+    seq: int = -1
+    epoch: int = 0                 # bumps on elastic shrink / peer restart
 
 
 def msg_weight(msg: WireMsg) -> int:

@@ -53,11 +53,37 @@ def reshard_state(state: Any, shardings: Any) -> Any:
 def shrink_mesh(old_shape: Tuple[int, ...], dead_fraction: float,
                 cfg: Optional[ModelConfig] = None
                 ) -> Tuple[int, ...]:
-    """Pick the largest compatible mesh after losing ``dead_fraction``."""
+    """Pick the largest compatible mesh after losing ``dead_fraction``.
+
+    Without ``cfg`` the model axis is kept and DP shrinks (every DP
+    width is legal).  With ``cfg`` the answer must divide the model's
+    sharded dims, so we snap to the largest shape ``compatible_meshes``
+    allows on any device count <= the survivor count — including moving
+    work off the model axis when the old width no longer fits.
+    """
     import math
     n_old = math.prod(old_shape)
     target = int(n_old * (1 - dead_fraction))
-    # keep the model axis, shrink data (DP is the elastic axis)
-    model = old_shape[-1]
-    data = max(1, target // model)
-    return (data, model)
+    if cfg is None:
+        # keep the model axis, shrink data (DP is the elastic axis)
+        model = old_shape[-1]
+        data = max(1, target // model)
+        return (data, model)
+    old_model = old_shape[-1]
+    best: Optional[Tuple[int, int]] = None
+    best_key = None
+    for n in range(max(1, target), 0, -1):
+        for data, model in compatible_meshes(cfg, n):
+            # prefer more total devices, then keeping the old model
+            # width (cheapest re-shard), then wider DP
+            key = (data * model, model == old_model, data)
+            if best_key is None or key > best_key:
+                best, best_key = (data, model), key
+        if best is not None:
+            break                    # n is scanned largest-first
+    if best is None:
+        raise ValueError(
+            f"shrink_mesh: no mesh on <= {target} device(s) is compatible "
+            f"with this config (model axis must divide heads/experts/"
+            f"vocab); survivors cannot host the model")
+    return best

@@ -47,8 +47,11 @@ class StepTimeMonitor:
             rep = StragglerReport(step, dt, mean, std, z)
             self.reports.append(rep)
             if z > self.z_threshold:
+                # flagged samples stay OUT of the window: a straggler
+                # folded into the baseline inflates mean/std and masks
+                # the next straggler (two slow steps in a row would
+                # normalize each other)
                 self.flagged.append(rep)
-                self._times.append(dt)
                 return rep
         self._times.append(dt)
         return None

@@ -50,6 +50,8 @@ SESSION_ENV = "REPRO_SPMD_SESSION"
 
 _SLOT = 64                       # one cache line per rank counter
 _BARRIER_FILE = "barrier"
+_HB_FILE = "heartbeat"
+_HB = struct.Struct("<Qd")       # [beat count][wall-clock stamp]
 ALLOW_DIRTY_ENV = "REPRO_SPMD_ALLOW_DIRTY"
 
 
@@ -67,18 +69,23 @@ class SpmdContext:
     session: str                 # absolute session-dir path
     _mm: Optional[mmap.mmap] = field(default=None, repr=False)
     _gen: int = 0
+    _hb: Optional[mmap.mmap] = field(default=None, repr=False)
+    _beats: int = 0
 
-    def _barrier_mm(self) -> mmap.mmap:
-        if self._mm is None:
-            path = os.path.join(self.session, _BARRIER_FILE)
+    def _slot_mm(self, attr: str, filename: str) -> mmap.mmap:
+        if getattr(self, attr) is None:
+            path = os.path.join(self.session, filename)
             size = _SLOT * self.n_ranks
             fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o600)
             try:
                 os.ftruncate(fd, size)   # idempotent fixed size
-                self._mm = mmap.mmap(fd, size)
+                setattr(self, attr, mmap.mmap(fd, size))
             finally:
                 os.close(fd)
-        return self._mm
+        return getattr(self, attr)
+
+    def _barrier_mm(self) -> mmap.mmap:
+        return self._slot_mm("_mm", _BARRIER_FILE)
 
     def barrier(self, timeout: float = 30.0) -> None:
         """Block until every rank reaches this barrier (generation
@@ -101,10 +108,42 @@ class SpmdContext:
             time.sleep(nap)
             nap = min(nap * 2, 1e-3)
 
+    # -- heartbeats: the failure-detector input (DESIGN.md §16) ---------
+    # Same single-writer slot discipline as the barrier: my 64-byte slot
+    # carries [u64 beat count][f64 wall-clock stamp]; peers only read it.
+    # The launcher reads the same file to time chaos kills, and survivors
+    # read it to declare a silent rank dead.
+
+    def _hb_mm(self) -> mmap.mmap:
+        return self._slot_mm("_hb", _HB_FILE)
+
+    def heartbeat(self) -> int:
+        """Publish liveness: bump my beat count, stamp the wall clock."""
+        mm = self._hb_mm()
+        self._beats += 1
+        _HB.pack_into(mm, _SLOT * self.rank, self._beats, time.time())
+        return self._beats
+
+    def peer_heartbeats(self) -> List[tuple]:
+        """``[(beat_count, last_stamp), ...]`` indexed by rank."""
+        mm = self._hb_mm()
+        return [_HB.unpack_from(mm, _SLOT * r) for r in range(self.n_ranks)]
+
+    def dead_ranks(self, timeout: float = 2.0) -> List[int]:
+        """Ranks that heartbeat at least once, then went silent for more
+        than ``timeout`` seconds.  A rank that never beat is still
+        booting, not dead — liveness starts at the first beat."""
+        now = time.time()
+        return [r for r, (count, t) in enumerate(self.peer_heartbeats())
+                if r != self.rank and count > 0 and now - t > timeout]
+
     def close(self) -> None:
         if self._mm is not None:
             self._mm.close()
             self._mm = None
+        if self._hb is not None:
+            self._hb.close()
+            self._hb = None
 
 
 def bootstrap() -> SpmdContext:
@@ -275,13 +314,37 @@ def _reap(procs: Sequence[subprocess.Popen], grace: float = 5.0) -> None:
                 pass                 # unkillable (D-state); reported below
 
 
+def _all_beating(session: str, n_ranks: int) -> bool:
+    """Launcher-side read of the heartbeat file: every rank beat >= once."""
+    path = os.path.join(session, _HB_FILE)
+    try:
+        with open(path, "rb") as f:
+            raw = f.read(_SLOT * n_ranks)
+    except OSError:
+        return False
+    if len(raw) < _SLOT * n_ranks:
+        return False
+    return all(_HB.unpack_from(raw, _SLOT * r)[0] > 0
+               for r in range(n_ranks))
+
+
 def launch(cmd: List[str], n_ranks: int, backend: str = "shm",
            attr_overrides: Optional[Dict[str, str]] = None,
            timeout: float = 120.0, session: Optional[str] = None,
-           keep_session: bool = False) -> int:
+           keep_session: bool = False, kill_rank: Optional[int] = None,
+           kill_after: float = 1.0) -> int:
     """Fork ``cmd`` N times with SPMD bootstrap env; returns the exit
-    code (0 only if every rank exited 0 within ``timeout``)."""
+    code (0 only if every rank exited 0 within ``timeout``).
+
+    ``kill_rank`` arms the chaos kill: once every rank has heartbeat at
+    least once, wait ``kill_after`` seconds and SIGKILL that rank's
+    process group.  Its death is then *expected* — the launcher does not
+    tear the survivors down, and success means every OTHER rank exited 0
+    (the rank-death recovery contract, DESIGN.md §16).
+    """
     preflight(strict=False)          # warn about leftovers of dead jobs
+    if kill_rank is not None and not 0 <= kill_rank < n_ranks:
+        raise ValueError(f"kill_rank {kill_rank} out of range")
     owns_session = session is None
     if owns_session:
         session = tempfile.mkdtemp(prefix="repro-spmd-",
@@ -298,12 +361,26 @@ def launch(cmd: List[str], n_ranks: int, backend: str = "shm",
                 start_new_session=True))
         deadline = time.monotonic() + timeout
         live = list(procs)
+        victim = procs[kill_rank] if kill_rank is not None else None
+        killed = False
+        all_alive_at: Optional[float] = None
         while live:
+            if victim is not None and not killed:
+                if all_alive_at is None and _all_beating(session, n_ranks):
+                    all_alive_at = time.monotonic()
+                if all_alive_at is not None and \
+                        time.monotonic() >= all_alive_at + kill_after:
+                    print(f"spmd: chaos-kill SIGKILL rank {kill_rank}",
+                          file=sys.stderr)
+                    _kill_group(victim, signal.SIGKILL)
+                    killed = True
             for p in list(live):
                 rc = p.poll()
                 if rc is None:
                     continue
                 live.remove(p)
+                if p is victim and killed:
+                    continue         # expected death; survivors run on
                 if rc != 0:
                     rank = procs.index(p)
                     print(f"spmd: rank {rank} exited with {rc}; "
@@ -319,6 +396,12 @@ def launch(cmd: List[str], n_ranks: int, backend: str = "shm",
                 break
             if live:
                 time.sleep(0.02)
+        if victim is not None and not killed and code == 0:
+            # victim finished before the kill ever armed/fired — the
+            # chaos run proved nothing; fail loudly rather than greenly
+            print("spmd: chaos-kill never fired (job too short?)",
+                  file=sys.stderr)
+            code = 1
     finally:
         _reap(procs)
         if owns_session and not keep_session:
@@ -397,6 +480,17 @@ def _run_demo(window: int, iters: int, size: int) -> int:
         while cq.pop().is_done():
             got += 1
     elapsed = time.perf_counter() - t0
+    # cooldown: our receives being done says nothing about our *sends* —
+    # under chaos a dropped message to the peer is only retransmitted by
+    # OUR progress calls, so keep driving until the peer acked everything
+    # (otherwise the peer spins out its drain deadline and reports lost)
+    spin_deadline = time.monotonic() + 30.0
+    while rt.rel is not None and rt.rel.busy() \
+            and time.monotonic() < spin_deadline:
+        check_alive()
+        rt.progress()
+        while cq.pop().is_done():
+            got += 1
     ctx.barrier()
     lost = expect - got
     leaked = cluster.fabric.in_flight()
@@ -406,6 +500,139 @@ def _run_demo(window: int, iters: int, size: int) -> int:
     cluster.close()
     ctx.close()
     return 0 if lost == 0 and leaked == 0 else 1
+
+
+def _run_chaos_demo(size: int, kill_rank: int, hb_timeout: float) -> int:
+    """Rank-death recovery end to end (DESIGN.md §16): every rank streams
+    eager AMs to its ring neighbor and heartbeats; the launcher SIGKILLs
+    ``kill_rank`` mid-stream.  Survivors detect the silence, mark the
+    peer dead (outstanding posts complete as ERR_PEER_DEAD — no hang),
+    shrink the mesh to the largest compatible survivor shape, and
+    restore the step-0 checkpoint resharded onto it.  Survivor exit 0 is
+    the proof; the launcher treats the victim's death as expected."""
+    import numpy as np
+
+    from repro.core import ProcessCluster, post_am
+    from repro.core.status import ErrorCode
+
+    ctx = bootstrap()
+    backend = os.environ.get("REPRO_ATTR_FABRIC_BACKEND", "shm")
+    cluster = ProcessCluster(ctx.n_ranks, ctx.rank,
+                             fabric_backend=backend, session=ctx.session)
+    rt = cluster.runtime
+    cq = rt.alloc_cq()
+    rt.register_rcomp(cq)        # symmetric alloc: rcomp index 0 everywhere
+    scq = rt.alloc_cq()          # send-side completions (done / err)
+    peer = (ctx.rank + 1) % ctx.n_ranks
+    buf = np.arange(size, dtype=np.uint8)
+
+    # the recovery anchor: rank 0 commits a step-0 checkpoint every
+    # survivor can restore from (atomic rename — a crash cannot corrupt it)
+    ckpt_dir = os.path.join(ctx.session, "ckpt")
+    state = {"w": np.arange(64, dtype=np.float64),
+             "step": np.zeros((), dtype=np.int64)}
+    if ctx.rank == 0:
+        from repro.checkpoint import save_sync
+        save_sync(ckpt_dir, 0, state, meta={"world": ctx.n_ranks})
+
+    ppid0 = os.getppid()
+    hard_deadline = time.monotonic() + float(
+        os.environ.get("REPRO_SPMD_DEADLINE", "120"))
+
+    def check_alive() -> None:
+        if os.getppid() != ppid0:
+            print(f"spmd-chaos rank {ctx.rank}: launcher died; exiting",
+                  file=sys.stderr)
+            os._exit(2)
+        if time.monotonic() > hard_deadline:
+            print(f"spmd-chaos rank {ctx.rank}: hard deadline exceeded",
+                  file=sys.stderr)
+            os._exit(3)
+
+    counts = {"done": 0, "delivered": 0, "peer_dead": 0, "timeout": 0,
+              "other": 0}
+
+    def drain() -> None:
+        for q, done_key in ((scq, "done"), (cq, "delivered")):
+            while True:
+                st = q.pop()
+                if st.is_done():
+                    counts[done_key] += 1
+                elif st.is_err():
+                    if st.code == ErrorCode.ERR_PEER_DEAD:
+                        counts["peer_dead"] += 1
+                    elif st.code == ErrorCode.ERR_TIMEOUT:
+                        counts["timeout"] += 1
+                    else:
+                        counts["other"] += 1
+                else:
+                    break            # empty (retry status)
+
+    ctx.heartbeat()
+    ctx.barrier()                    # checkpoint committed, all booted
+
+    dead: List[int] = []
+    t0 = time.monotonic()
+    while not dead:
+        check_alive()
+        ctx.heartbeat()
+        dead = ctx.dead_ranks(hb_timeout)
+        st = post_am(rt, peer, buf, local_comp=scq, remote_comp=0)
+        if st.is_retry():
+            rt.progress()
+        drain()
+
+    t_detect = time.monotonic()
+    for r in dead:
+        rt.mark_peer_dead(r)
+    print(f"spmd-chaos rank {ctx.rank}: peer(s) {dead} dead "
+          f"(silent > {hb_timeout}s at t+{t_detect - t0:.2f}s)",
+          file=sys.stderr)
+
+    # every outstanding post must complete (ERR_PEER_DEAD), not hang
+    spin_deadline = time.monotonic() + 10.0
+    while rt.pending_ops and time.monotonic() < spin_deadline:
+        check_alive()
+        rt.progress()
+        drain()
+    drain()
+    hung = len(rt.pending_ops)
+
+    # elastic recovery: largest compatible survivor mesh + resharded
+    # restore of the pre-fault checkpoint
+    import jax
+
+    from repro.checkpoint import restore_resharded
+    from repro.configs.gemma3_1b import SMOKE
+    from repro.distributed.elastic import shrink_mesh
+
+    new_shape = shrink_mesh((ctx.n_ranks, 1),
+                            len(dead) / ctx.n_ranks, SMOKE)
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices("cpu")[0])
+    like = {"w": np.zeros(64, np.float64),
+            "step": np.zeros((), dtype=np.int64)}
+    restored, manifest = restore_resharded(
+        ckpt_dir, like, jax.tree_util.tree_map(lambda _: sharding, like))
+    ok_restore = (manifest["step"] == 0
+                  and int(np.asarray(restored["step"])) == 0
+                  and np.asarray(restored["w"]).sum() == state["w"].sum())
+    recovery_ms = (time.monotonic() - t_detect) * 1e3
+
+    print(f"spmd-chaos rank {ctx.rank}: recovered in {recovery_ms:.0f}ms "
+          f"new_mesh={new_shape} restored_step={manifest['step']} "
+          f"sent={counts['done']} delivered={counts['delivered']} "
+          f"peer_dead={counts['peer_dead']} timeout={counts['timeout']} "
+          f"other={counts['other']} hung={hung}")
+    rel = rt.rel.counters() if rt.rel is not None else {}
+    if rel:
+        print(f"spmd-chaos rank {ctx.rank}: rel retransmits="
+              f"{rel.get('retransmits')} expired_peer_dead="
+              f"{rel.get('expired_peer_dead')}")
+    cluster.close()
+    ctx.close()
+    ok = (hung == 0 and counts["other"] == 0 and ok_restore
+          and (peer not in dead or counts["peer_dead"] > 0))
+    return 0 if ok else 1
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -427,13 +654,25 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="demo: windows per rank")
     ap.add_argument("--size", type=int, default=64,
                     help="demo: payload bytes")
+    ap.add_argument("--chaos-kill", type=int, default=None, metavar="RANK",
+                    help="chaos demo: SIGKILL this rank once traffic "
+                         "flows; survivors must recover and exit 0")
+    ap.add_argument("--kill-after", type=float, default=1.0,
+                    help="chaos demo: seconds between all-ranks-beating "
+                         "and the SIGKILL")
+    ap.add_argument("--hb-timeout", type=float, default=1.0,
+                    help="chaos demo: heartbeat silence that declares a "
+                         "rank dead")
     ap.add_argument("cmd", nargs="*",
                     help="rank program after `--` (default: built-in "
                          "message-window demo)")
     args = ap.parse_args(argv)
 
     if os.environ.get(RANK_ENV) is not None and not args.cmd:
-        # child re-entry of the built-in demo
+        # child re-entry of a built-in demo
+        if args.chaos_kill is not None:
+            return _run_chaos_demo(args.size, args.chaos_kill,
+                                   args.hb_timeout)
         return _run_demo(args.window, args.iters, args.size)
 
     overrides = {}
@@ -447,6 +686,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                        "--window", str(args.window),
                        "--iters", str(args.iters),
                        "--size", str(args.size)]
+    if args.chaos_kill is not None:
+        if not args.cmd:
+            cmd += ["--chaos-kill", str(args.chaos_kill),
+                    "--hb-timeout", str(args.hb_timeout)]
+            # survivors prove ERR_PEER_DEAD, not retry exhaustion: keep
+            # unacked entries alive until the failure detector fires
+            overrides.setdefault("reliability", "on")
+            overrides.setdefault("retry_limit", "1000000")
+            # inject-class sends never signal local comps (paper §3.2.5);
+            # the demo counts send completions, so force bufcopy class
+            overrides.setdefault("eager_max_bytes", "0")
+        return launch(cmd, args.ranks, backend=args.backend,
+                      attr_overrides=overrides, timeout=args.timeout,
+                      kill_rank=args.chaos_kill,
+                      kill_after=args.kill_after)
     return launch(cmd, args.ranks, backend=args.backend,
                   attr_overrides=overrides, timeout=args.timeout)
 

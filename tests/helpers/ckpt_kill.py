@@ -1,0 +1,41 @@
+"""Child half of the mid-commit kill test (test_chaos.py).
+
+Commits step 0 normally, then starts a step-1 commit whose leaf writes
+are slowed to a crawl and prints a marker once the first leaf write is
+underway.  The parent SIGKILLs this process on the marker — mid-commit,
+before the atomic rename — and asserts the store still reads as step 0.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import numpy as np
+
+from repro.checkpoint import save_sync
+from repro.checkpoint import store as _store
+
+
+def main() -> None:
+    ckpt = sys.argv[1]
+    tree = {"w": np.arange(64, dtype=np.float64),
+            "step": np.zeros((), np.int64)}
+    save_sync(ckpt, 0, tree, meta={"next_step": 1})
+
+    real_write = _store._write_leaf
+
+    def slow_write(tmp, name, arr):
+        print("COMMITTING", flush=True)     # parent kills on this marker
+        time.sleep(5.0)                     # hold the commit open
+        return real_write(tmp, name, arr)
+
+    _store._write_leaf = slow_write
+    tree["step"] = np.ones((), np.int64)
+    save_sync(ckpt, 1, tree, meta={"next_step": 2})
+    print("COMMITTED-1", flush=True)        # must never be reached
+
+
+if __name__ == "__main__":
+    main()

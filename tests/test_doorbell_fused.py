@@ -312,11 +312,17 @@ class TestWireBf16:
 def _cluster(fused, *, em=16, ppl=64, depth=1 << 16):
     # pool_lanes=1: segment-level steal attempts legitimately differ
     # between one packed get_n and K scalar gets, so single-lane pools
-    # keep allocation order bit-identical for the comparison
+    # keep allocation order bit-identical for the comparison.
+    # chaos_* zeroed at the runtime layer: this property compares exact
+    # delivered bytes between two data planes, so env-injected faults
+    # (the chaos CI leg) must not perturb either side
     return LocalCluster(2, attrs={"eager_max_bytes": em,
                                   "doorbell_fused": fused,
                                   "packets_per_lane": ppl,
-                                  "pool_lanes": 1},
+                                  "pool_lanes": 1,
+                                  "chaos_drop": 0.0, "chaos_dup": 0.0,
+                                  "chaos_reorder": 0.0,
+                                  "chaos_delay_p": 0.0},
                         fabric_depth=depth)
 
 

@@ -175,7 +175,11 @@ class TestBackendSelection:
         cl = LocalCluster(2)
         try:
             assert cl.fabric.backend == "shm"
-            assert isinstance(cl.fabric, ShmTransport)
+            # the chaos CI leg wraps the backend in ChaosTransport; the
+            # wrapper echoes .backend and attrs but the concrete class
+            # lives one level down
+            base = getattr(cl.fabric, "inner", cl.fabric)
+            assert isinstance(base, ShmTransport)
             assert cl.fabric.get_attr("fabric_backend") == "shm"
             assert cl.fabric.attr_source("fabric_backend") == "env"
         finally:
@@ -198,9 +202,14 @@ class TestBackendSelection:
             cl.close()
 
     def test_default_backend_is_sim(self, monkeypatch):
-        # CI runs the whole suite under REPRO_ATTR_FABRIC_BACKEND=shm; this
-        # test is about the *library* default, so strip the env layer
+        # CI runs the whole suite under REPRO_ATTR_FABRIC_BACKEND=shm (and
+        # the chaos leg under REPRO_ATTR_CHAOS_*); this test is about the
+        # *library* default, so strip the env layer entirely
         monkeypatch.delenv("REPRO_ATTR_FABRIC_BACKEND", raising=False)
+        for var in ("REPRO_ATTR_CHAOS_DROP", "REPRO_ATTR_CHAOS_DUP",
+                    "REPRO_ATTR_CHAOS_REORDER", "REPRO_ATTR_CHAOS_DELAY_P",
+                    "REPRO_ATTR_CHAOS_SEED", "REPRO_ATTR_CHAOS_KILL_RANK"):
+            monkeypatch.delenv(var, raising=False)
         cl = LocalCluster(2)
         assert isinstance(cl.fabric, Fabric)
         assert cl.fabric.get_attr("fabric_backend") == "sim"
