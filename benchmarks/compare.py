@@ -4,7 +4,13 @@ CI runs each benchmark at smoke scale, then calls this gate to compare
 the fresh ``us_per_call`` numbers against the repo-tracked baselines
 (BENCH_message_rate.json / BENCH_mt_message_rate.json, full-scale runs):
 any matched case whose per-call cost regresses by more than
-``--max-regression`` (default 25%) fails the job.  Cases are matched by
+``--max-regression`` (default 25%) fails the job.  Serving rows carry
+extra directional metrics: ``ttft_p50_ms`` gates like a latency (fail on
+increase) and ``goodput_tok_s`` gates as a throughput (fail on
+*decrease*); each is checked only when present on both sides, so
+non-serving baselines are unaffected.  Tail (p99) fields are reported in
+the rows but deliberately not gated — CI smoke cells are too short for
+stable tails.  Cases are matched by
 ``(case, backend)`` — rows without a ``backend`` field are ``sim``, so
 pre-transport baselines keep matching — and cases present on only one
 side are reported and skipped (sweep shapes legitimately differ between
@@ -19,6 +25,15 @@ import argparse
 import json
 import sys
 from typing import List, Tuple
+
+
+#: (metric, lower_is_better) — gated only when both sides carry the
+#: field, so pre-serving baselines are untouched
+GATED_METRICS = (
+    ("us_per_call", True),
+    ("ttft_p50_ms", True),
+    ("goodput_tok_s", False),
+)
 
 
 def load_rows(path: str) -> dict:
@@ -47,16 +62,26 @@ def compare(baseline_path: str, fresh_path: str,
     for key in matched:
         case, backend = key
         label = case if backend == "sim" else f"{case}[{backend}]"
-        b, f = base[key]["us_per_call"], fresh[key]["us_per_call"]
-        ratio = f / b if b else float("inf")
-        verdict = "ok"
-        if ratio > 1.0 + max_regression:
-            verdict = "REGRESSION"
-            failures.append(
-                f"{label}: {f:.3f} us/call vs baseline {b:.3f} "
-                f"({ratio:.2f}x, limit {1.0 + max_regression:.2f}x)")
-        report.append(f"{label:32s} base={b:9.3f}  fresh={f:9.3f}  "
-                      f"{ratio:5.2f}x  {verdict}")
+        for metric, lower_is_better in GATED_METRICS:
+            if metric not in base[key] or metric not in fresh[key]:
+                continue
+            b, f = base[key][metric], fresh[key][metric]
+            if lower_is_better:
+                ratio = f / b if b else float("inf")
+            else:                       # throughput: gate the decrease
+                ratio = b / f if f else float("inf")
+            verdict = "ok"
+            if ratio > 1.0 + max_regression:
+                verdict = "REGRESSION"
+                direction = "slower" if lower_is_better else "lower"
+                failures.append(
+                    f"{label}: {metric} {f:.3f} vs baseline {b:.3f} "
+                    f"({ratio:.2f}x {direction}, limit "
+                    f"{1.0 + max_regression:.2f}x)")
+            tag = label if metric == "us_per_call" \
+                else f"{label}:{metric}"
+            report.append(f"{tag:32s} base={b:9.3f}  fresh={f:9.3f}  "
+                          f"{ratio:5.2f}x  {verdict}")
     for key in sorted(set(base) ^ set(fresh)):
         case, backend = key
         label = case if backend == "sim" else f"{case}[{backend}]"

@@ -12,6 +12,7 @@ Prints ``name,case,us_per_call,derived`` CSV rows:
     amt_pipeline  -> paper Fig 7  (AMT DAG: BSP barrier vs LCI async)
     graph_latency -> §3.2.5 async graph tax vs the Figure-1 chain
     chaos         -> DESIGN.md §16 fault-injection cost + rank-death
+    serve_traffic -> DESIGN.md §17 continuous-batching open-loop traffic
     roofline      -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -31,7 +32,8 @@ def main() -> None:
     quick = not args.full
 
     from . import (amt_pipeline, bandwidth, chaos, graph_latency, kmer,
-                   message_rate, mt_message_rate, resources, roofline)
+                   message_rate, mt_message_rate, resources, roofline,
+                   serve_traffic)
     suites = {
         "message_rate": message_rate.run,
         "mt_message_rate": mt_message_rate.run,
@@ -41,6 +43,7 @@ def main() -> None:
         "amt_pipeline": amt_pipeline.run,
         "graph_latency": graph_latency.run,
         "chaos": chaos.run,
+        "serve_traffic": serve_traffic.run,
         "roofline": roofline.run,
     }
     if args.only:

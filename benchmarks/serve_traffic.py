@@ -1,0 +1,425 @@
+"""Open-loop serving traffic on the continuous-batching engine.
+
+The paper's "new possibilities" workload (HPX/LCI communication-needs
+profile: many small latency-critical messages drained by worker threads)
+driven to production shape: thousands of simulated clients submit
+prompts on a Poisson arrival process with heavy-tailed prompt/output
+lengths, the :class:`~repro.serving.ContinuousBatcher` serves them over
+isolated prefill/decode endpoints, and every generated token rides a
+``post_am_many`` burst back to stamped :class:`ResultDrain` workers.
+
+Open loop means arrival times come from the schedule, not from request
+completion — the engine is never protected from a burst by its own
+slowness.  Per cell the harness verifies the exactly-once contract
+(every client's full stream, no loss/dup/reorder — the run *fails*
+otherwise, including the ``chaos_drop`` cell) and reports:
+
+* TTFT p50/p99 (submit -> first token at a drain worker), ms
+* per-token latency p50/p99 (inter-token gap at the drain), us
+* goodput (delivered tokens / wall clock), tok/s
+* decode-slot occupancy (mean + peak of ``SlotAllocator.occupancy``)
+
+``--fabric shm`` adds a cross-process cell: rank 0 runs the client, rank
+1 the server, over shm rings under ``launch/spmd.py``; the client sends
+the end-of-traffic control message only after its drains account for
+every expected token, then both ranks publish fragments the parent
+merges into one row.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+if __package__ in (None, ""):                 # `python benchmarks/...py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _xproc():
+    """The cross-process plumbing, importable both as a package module
+    and as a bare script."""
+    try:
+        from . import _xproc as mod
+    except ImportError:                          # script mode
+        import _xproc as mod
+    return mod
+
+
+VOCAB = 32000
+PROMPT_CLIP = (4, 256)
+OUTPUT_CLIP = (1, 64)
+SUBMIT_DEADLINE_S = 60.0
+DRAIN_DEADLINE_S = 120.0
+
+
+def make_workload(n_clients: int, duration: float, seed: int):
+    """Deterministic open-loop schedule: Poisson arrivals (uniform order
+    statistics conditioned on N) with lognormal heavy-tailed prompt and
+    output lengths."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.sort(rng.uniform(0.0, duration, n_clients))
+    plens = np.clip(rng.lognormal(2.8, 1.0, n_clients),
+                    *PROMPT_CLIP).astype(int)
+    outs = np.clip(rng.lognormal(1.4, 0.9, n_clients),
+                   *OUTPUT_CLIP).astype(int)
+    prompts = [rng.integers(0, VOCAB, p).astype(np.int32) for p in plens]
+    return arrivals, prompts, outs
+
+
+def server_overrides(n_clients: int) -> Dict[str, int]:
+    """Engine geometry scaled to the cell (per-alloc attr overrides)."""
+    slots = max(8, min(64, n_clients // 8))
+    return {"kv_slots": slots, "kv_page_tokens": 16,
+            "kv_pages": 16 * slots, "prefill_chunk": 32}
+
+
+def _percentiles(xs, scale: float) -> Tuple[float, float]:
+    if not len(xs):
+        return 0.0, 0.0
+    arr = np.asarray(xs) * scale
+    return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+
+def _metrics_row(case: str, backend: str, n_clients: int, duration: float,
+                 report: dict, wall: float, occupancy: dict,
+                 counters: dict, chaos_drop: float = 0.0) -> dict:
+    if report["completed"] != report["submitted"] or report["lost"] or \
+            report["duplicated"] or report["mismatched"] or \
+            report["out_of_order"]:
+        bad = {k: report[k] for k in ("submitted", "completed", "lost",
+                                      "duplicated", "mismatched",
+                                      "out_of_order")}
+        raise RuntimeError(
+            f"{case}: exactly-once contract violated: {bad}")
+    ttft_p50, ttft_p99 = _percentiles(report["ttft_s"], 1e3)
+    tok_p50, tok_p99 = _percentiles(report["gap_s"], 1e6)
+    goodput = report["tokens"] / wall if wall > 0 else 0.0
+    return {
+        "bench": "serve_traffic",
+        "case": case,
+        "backend": backend,
+        "clients": n_clients,
+        "duration_s": duration,
+        "us_per_call": tok_p50,
+        "derived": f"{goodput:,.0f} tok/s goodput, "
+                   f"TTFT p50 {ttft_p50:.2f} ms",
+        "ttft_p50_ms": ttft_p50,
+        "ttft_p99_ms": ttft_p99,
+        "tok_p50_us": tok_p50,
+        "tok_p99_us": tok_p99,
+        "goodput_tok_s": goodput,
+        "slot_occupancy_mean": occupancy["mean"],
+        "slot_occupancy_peak": occupancy["peak"],
+        "tokens": report["tokens"],
+        "completed": report["completed"],
+        "lost": report["lost"],
+        "duplicated": report["duplicated"],
+        "submit_retries": report["submit_retries"],
+        "preemptions": counters.get("preemptions", 0),
+        "chaos_drop": chaos_drop,
+    }
+
+
+class _OccupancySampler:
+    """Time-throttled samples of the slot allocator's occupancy."""
+
+    def __init__(self, slots, period_s: float = 2e-3):
+        self.slots = slots
+        self.period = period_s
+        self.samples: List[float] = []
+        self._last = 0.0
+
+    def tick(self) -> None:
+        now = time.perf_counter()
+        if now - self._last >= self.period:
+            self.samples.append(self.slots.occupancy())
+            self._last = now
+
+    def result(self) -> Dict[str, float]:
+        if not self.samples:
+            return {"mean": 0.0, "peak": 0.0}
+        return {"mean": float(np.mean(self.samples)),
+                "peak": float(np.max(self.samples))}
+
+
+# ---------------------------------------------------------------------------
+# single-process cell: both roles on one LocalCluster
+# ---------------------------------------------------------------------------
+
+def run_cell_local(n_clients: int, duration: float, *, seed: int = 0,
+                   chaos_drop: float = 0.0, telemetry_level: str = "off",
+                   snaps: Optional[list] = None) -> dict:
+    from repro.core.runtime import LocalCluster
+    from repro.serving import (ContinuousBatcher, ServePlane,
+                               SyntheticModel, TokenClient)
+
+    attrs = {"telemetry_level": telemetry_level}
+    if chaos_drop:
+        attrs.update({"chaos_drop": chaos_drop, "chaos_seed": seed + 1})
+    cluster = LocalCluster(2, attrs=attrs, fabric_depth=1 << 15)
+    try:
+        plane = ServePlane(cluster)
+        model = SyntheticModel(seed=seed)
+        server = ContinuousBatcher(plane, model,
+                                   **server_overrides(n_clients))
+        client = TokenClient(plane, model, drain_workers=2)
+        occ = _OccupancySampler(server.slots)
+        arrivals, prompts, outs = make_workload(n_clients, duration, seed)
+
+        t0 = time.perf_counter()
+        for i in range(n_clients):
+            while time.perf_counter() - t0 < arrivals[i]:
+                server.step()
+                occ.tick()
+            rid, st = client.submit(prompts[i], int(outs[i]))
+            deadline = time.monotonic() + SUBMIT_DEADLINE_S
+            while st.is_retry():
+                server.step()
+                occ.tick()
+                if time.monotonic() > deadline:
+                    raise RuntimeError(f"submit wedged at client {i}")
+                rid, st = client.submit(prompts[i], int(outs[i]), rid=rid)
+        # drain: accepted prompts may still be in (retransmit) flight —
+        # the server steps until it has finished every submitted request
+        deadline = time.monotonic() + DRAIN_DEADLINE_S
+        while not (server.completed >= n_clients and server.idle):
+            server.step()
+            occ.tick()
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"server stalled: {server.counters()}")
+        while client.drain.drained < client.expected_tokens:
+            client.pump()
+            if time.monotonic() > deadline:
+                break
+        wall = time.perf_counter() - t0
+        report = client.collect()
+        counters = server.counters()
+        if snaps is not None:
+            snaps.append(cluster.telemetry_snapshot())
+        echo = cluster.attrs_echo()
+        serve_echo = server.attrs_echo()
+        resolved = {"values": {**echo["values"], **serve_echo["values"]},
+                    "sources": {**echo["sources"],
+                                **serve_echo["sources"]}}
+        return {"report": report, "wall": wall, "counters": counters,
+                "occupancy": occ.result(), "resolved_attrs": resolved}
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-process cell (--fabric shm|socket): rank 0 client, rank 1 server
+# ---------------------------------------------------------------------------
+
+def _xproc_child(args) -> int:
+    from repro.core import ProcessCluster
+    from repro.launch.spmd import bootstrap
+    from repro.serving import (ContinuousBatcher, ServePlane,
+                               SyntheticModel, TokenClient)
+
+    ctx = bootstrap()
+    n_clients = args.xproc_clients
+    duration = args.xproc_duration
+    cl = ProcessCluster(ctx.n_ranks, ctx.rank, fabric_depth=1 << 15,
+                        fabric_backend=args.fabric,
+                        session=os.path.join(ctx.session, "serve"))
+    plane = ServePlane(cl, client_rank=0, server_rank=1)
+    model = SyntheticModel(seed=args.seed)
+    ctx.barrier(timeout=60)
+    ok = True
+    if ctx.rank == 1:
+        server = ContinuousBatcher(plane, model,
+                                   **server_overrides(n_clients))
+        occ = _OccupancySampler(server.slots)
+        deadline = time.monotonic() + duration + DRAIN_DEADLINE_S
+        # serve until the client declares end-of-traffic (which it only
+        # does after draining every expected token) and nothing resident
+        while not (server.eot_seen and server.idle):
+            server.step()
+            occ.tick()
+            if time.monotonic() > deadline:
+                ok = False
+                break
+        _xproc().write_fragment({
+            "rank": 1, "role": "server", "ok": ok,
+            "counters": server.counters(),
+            "occupancy": occ.result(),
+            "resolved_attrs": server.attrs_echo(),
+            "telemetry": cl.telemetry_snapshot()})
+    else:
+        client = TokenClient(plane, model, drain_workers=2)
+        arrivals, prompts, outs = make_workload(n_clients, duration,
+                                                args.seed)
+        t0 = time.perf_counter()
+        for i in range(n_clients):
+            while time.perf_counter() - t0 < arrivals[i]:
+                client.pump()
+            rid, st = client.submit(prompts[i], int(outs[i]))
+            deadline = time.monotonic() + SUBMIT_DEADLINE_S
+            while st.is_retry():
+                client.pump()
+                if time.monotonic() > deadline:
+                    ok = False
+                    break
+                rid, st = client.submit(prompts[i], int(outs[i]), rid=rid)
+        deadline = time.monotonic() + DRAIN_DEADLINE_S
+        while client.drain.drained < client.expected_tokens:
+            client.pump()
+            if time.monotonic() > deadline:
+                ok = False
+                break
+        wall = time.perf_counter() - t0
+        client.send_eot()
+        for _ in range(200):                  # flush the EOT + acks
+            client.pump()
+        report = client.collect()
+        ok = ok and not (report["lost"] or report["duplicated"]
+                         or report["mismatched"] or report["out_of_order"])
+        _xproc().write_fragment({
+            "rank": 0, "role": "client", "ok": ok,
+            "report": report, "wall": wall,
+            "resolved_attrs": cl.attrs_echo(),
+            "telemetry": cl.telemetry_snapshot()})
+    ctx.barrier(timeout=60)
+    cl.close()
+    ctx.close()
+    return 0 if ok else 1
+
+
+def run_cell_xproc(args, snaps: Optional[list] = None) -> dict:
+    frags = _xproc().launch_self(sys.argv[1:], args.fabric, 2,
+                                 timeout=args.xproc_timeout)
+    by_role = {f["role"]: f for f in frags}
+    client, server = by_role["client"], by_role["server"]
+    if snaps is not None:
+        snaps += [f.get("telemetry") for f in frags]
+    return {"report": client["report"], "wall": client["wall"],
+            "counters": server["counters"],
+            "occupancy": server["occupancy"],
+            "resolved_attrs": {"client": client["resolved_attrs"],
+                               "server": server["resolved_attrs"]}}
+
+
+# ---------------------------------------------------------------------------
+# sweep + entry points
+# ---------------------------------------------------------------------------
+
+def _serve_demo_snapshot() -> dict:
+    """A small timers-level serve cell so the committed BENCH carries
+    real ``serve.*`` stage spans (timed cells run at ``off``)."""
+    cell = run_cell_local(8, 0.2, seed=42, telemetry_level="timers",
+                          snaps=(demo := []))
+    del cell
+    return demo[0]
+
+
+def sweep(args) -> Tuple[List[dict], dict, list]:
+    rows: List[dict] = []
+    snaps: list = []
+    resolved: dict = {}
+
+    cells = [(64, 2.0)]
+    if args.clients > 64:
+        cells.append((min(256, args.clients), min(4.0, args.duration)))
+    if args.clients > 256:
+        cells.append((args.clients, args.duration))
+    for n, dur in cells:
+        cell = run_cell_local(n, dur, seed=args.seed, snaps=snaps)
+        resolved = cell["resolved_attrs"]
+        rows.append(_metrics_row(f"c{n}/d{dur:g}", "sim", n, dur,
+                                 cell["report"], cell["wall"],
+                                 cell["occupancy"], cell["counters"]))
+        print(f"  {rows[-1]['case']:24s} {rows[-1]['derived']}")
+
+    n = min(128, args.clients)
+    cell = run_cell_local(n, 2.0, seed=args.seed, chaos_drop=0.05,
+                          snaps=snaps)
+    row = _metrics_row(f"c{n}/d2/chaos_drop", "sim", n, 2.0,
+                       cell["report"], cell["wall"], cell["occupancy"],
+                       cell["counters"], chaos_drop=0.05)
+    rows.append(row)
+    print(f"  {row['case']:24s} {row['derived']}  "
+          f"lost={row['lost']} dup={row['duplicated']}")
+
+    if args.fabric != "sim":
+        cell = run_cell_xproc(args, snaps=snaps)
+        resolved = {**resolved, "xproc": cell["resolved_attrs"]}
+        row = _metrics_row(
+            f"c{args.xproc_clients}/d{args.xproc_duration:g}"
+            f"/xproc/{args.fabric}",
+            args.fabric, args.xproc_clients, args.xproc_duration,
+            cell["report"], cell["wall"], cell["occupancy"],
+            cell["counters"])
+        rows.append(row)
+        print(f"  {row['case']:24s} {row['derived']}")
+
+    snaps.append(_serve_demo_snapshot())
+    return rows, resolved, snaps
+
+
+def run(quick: bool = True) -> List[dict]:
+    """Aggregator entry (benchmarks.run): one quick local cell plus the
+    chaos leg — the full sweep is the script's ``main``."""
+    ns = argparse.Namespace(clients=64 if quick else 1024,
+                            duration=2.0 if quick else 4.0,
+                            seed=0, fabric="sim", xproc_clients=128,
+                            xproc_duration=2.0, xproc_timeout=300.0)
+    rows, _, _ = sweep(ns)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--clients", type=int, default=1024,
+                    help="simulated clients in the top open-loop cell")
+    ap.add_argument("--duration", type=float, default=4.0,
+                    help="arrival-window seconds for the top cell")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed (arrivals, lengths, prompts)")
+    ap.add_argument("--fabric", default="sim",
+                    choices=("sim", "shm", "socket"),
+                    help="non-sim adds a cross-process client/server "
+                         "cell under launch/spmd.py")
+    ap.add_argument("--xproc-clients", type=int, default=128,
+                    help="clients in the cross-process cell")
+    ap.add_argument("--xproc-duration", type=float, default=2.0,
+                    help="arrival-window seconds, cross-process cell")
+    ap.add_argument("--xproc-timeout", type=float, default=300.0,
+                    help="launcher wall-clock bound")
+    ap.add_argument("--json", default="BENCH_serve_traffic.json",
+                    help="output JSON path ('' disables)")
+    args = ap.parse_args()
+
+    if args.fabric != "sim" and _xproc().in_child():
+        sys.exit(_xproc_child(args))
+
+    _xproc().assert_clean_host()     # leftover SPMD jobs skew timing
+    rows, resolved_attrs, snaps = sweep(args)
+    for r in rows:
+        print(f"{r['case']:28s} TTFT p50/p99 {r['ttft_p50_ms']:8.2f}/"
+              f"{r['ttft_p99_ms']:8.2f} ms  tok p50/p99 "
+              f"{r['tok_p50_us']:8.1f}/{r['tok_p99_us']:8.1f} us  "
+              f"{r['goodput_tok_s']:10,.0f} tok/s  occ "
+              f"{r['slot_occupancy_mean']:.2f}/"
+              f"{r['slot_occupancy_peak']:.2f}  lost={r['lost']} "
+              f"dup={r['duplicated']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "serve_traffic",
+                       "clients": args.clients,
+                       "duration_s": args.duration,
+                       "seed": args.seed,
+                       "resolved_attrs": resolved_attrs,
+                       "telemetry": _xproc().telemetry_block(snaps),
+                       "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

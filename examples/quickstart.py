@@ -22,7 +22,9 @@ Walks the paper's core concepts end to end on CPU:
       counter snapshot, and Chrome trace export (DESIGN.md §15)
   12. the chaos plane: attr-driven fault injection healed by the
       reliability protocol, and the rank-death fail-fast (DESIGN.md §16)
-  13. an in-graph ring collective under shard_map (the TPU adaptation)
+  13. the serving engine: continuous batching on the comm core — paged
+      KV slots, burst token delivery, exactly-once drains (DESIGN.md §17)
+  14. an in-graph ring collective under shard_map (the TPU adaptation)
 
 Posting is endpoint-centric since the comp/graph redesign (DESIGN.md §9).
 Before:  post_send_x(r0, 1, buf, 16, tag).device(dev)()
@@ -338,7 +340,43 @@ def main():
     print(f"chaos: post to dead peer -> {st.code.name} at post time")
     ccl.close()
 
-    # -- 13. the in-graph layer: ring collectives (run under shard_map on
+    # -- 13. the serving engine (DESIGN.md §17): continuous batching
+    #       whose whole data plane is the comm core.  Prompts ride a
+    #       by_size prefill endpoint, token returns a separate decode
+    #       endpoint; every engine tick is a CompletionGraph whose
+    #       first-token posts are comm NODES; decode steps burst their
+    #       16-byte token rows through post_am_many; drain worker
+    #       threads pop the thread-safe result CQ; and the paged-KV
+    #       geometry is all attrs with get_attr introspection. ----------
+    from repro.serving import (ContinuousBatcher, ServePlane,
+                               SyntheticModel, TokenClient)
+    scl = LocalCluster(2)
+    plane = ServePlane(scl)           # rank 0 client, rank 1 server
+    model = SyntheticModel(seed=7)    # deterministic token oracle
+    server = ContinuousBatcher(plane, model, kv_slots=4, kv_page_tokens=8,
+                               kv_evict="preempt_longest")
+    sclient = TokenClient(plane, model, drain_workers=2)
+    rng = np.random.default_rng(7)
+    for _ in range(12):
+        prompt = rng.integers(0, 32000, rng.integers(4, 40)).astype(np.int32)
+        max_new = int(rng.integers(1, 9))
+        rid, st = sclient.submit(prompt, max_new)
+        while st.is_retry():
+            server.step()
+            rid, st = sclient.submit(prompt, max_new, rid=rid)
+    while not (server.completed >= 12 and server.idle):
+        server.step()                 # prefill/decode/deliver interleave
+    while sclient.drain.drained < sclient.expected_tokens:
+        sclient.pump()
+    report = sclient.collect()        # verifies vs the model oracle
+    assert report["lost"] == report["duplicated"] == 0, report
+    print(f"serving: {report['completed']}/12 streams exactly-once, "
+          f"{report['tokens']} tokens, {server.slots.preemptions} "
+          f"preemptions, kv_slots={server.get_attr('kv_slots')} -> see "
+          f"benchmarks/serve_traffic.py for the 1k-client open loop")
+    scl.close()
+
+    # -- 14. the in-graph layer: ring collectives (run under shard_map on
     #       real meshes; here single-device degenerates to local math) ---
     import jax.numpy as jnp
     from repro.distributed.comm import local_comm

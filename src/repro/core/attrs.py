@@ -333,6 +333,42 @@ register_attr("progress", str, "shared",
               resources=("endpoint",),
               choices=("shared", "dedicated", "workers"),
               doc="who drives the endpoint's devices (DESIGN.md §8)")
+# serving subsystem (DESIGN.md §17): the continuous-batching engine's
+# paged KV geometry, prefill chunking, and client drain shape
+register_attr("kv_page_tokens", int, 16, minimum=1,
+              resources=("serving",),
+              doc="tokens per KV-cache page — the paged allocator's "
+                  "fixed page size (the packet pool's packet_bytes, in "
+                  "token units)")
+register_attr("kv_slots", int, 8, minimum=1,
+              resources=("serving",),
+              doc="decode slots — concurrent requests resident in the "
+                  "batch (JetStream-style slot array width)")
+register_attr("kv_pages", int, 0, minimum=0, zero_means="8 * kv_slots",
+              resources=("serving",),
+              doc="total KV pages backing the slot array; 0 derives "
+                  "8 pages per slot")
+register_attr("kv_evict", str, "refuse",
+              resources=("serving",),
+              choices=("refuse", "preempt_longest"),
+              doc="admission policy under page/slot exhaustion: refuse = "
+                  "retry(RETRY_NOSLOT) and park in the backlog; "
+                  "preempt_longest = evict the active request with the "
+                  "largest footprint back to the backlog (its pages free, "
+                  "its token stream resumes after re-prefill)")
+register_attr("prefill_chunk", int, 32, minimum=1,
+              resources=("serving",),
+              doc="prompt tokens prefilled per completion-graph node — "
+                  "bounds how long a long prompt can monopolize a tick "
+                  "before decode interleaves")
+register_attr("drain_workers", int, 2, minimum=1,
+              resources=("serving",),
+              doc="client-side ResultDrain worker threads popping the "
+                  "thread-safe result CQ")
+register_attr("max_batch", int, 0, minimum=0, zero_means="kv_slots",
+              resources=("serving",),
+              doc="admission bound on concurrently active requests; "
+                  "0 derives kv_slots")
 # progress workers
 register_attr("n_workers", int, 0, minimum=0, zero_means="auto",
               resources=("endpoint", "workers"),

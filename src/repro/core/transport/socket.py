@@ -90,9 +90,14 @@ class SocketTransport(Transport):
         self._inbox: Dict[Tuple[int, int], collections.deque] = {}
         self._closed = False
         self._dead_dsts: set = set()
+        self._tx_flushes = 0             # coalesced kernel sends
+        self._tx_flush_frames = 0        # frames those sends carried
         self._export_attr("socket_session_dir", lambda: self._dir)
         self._export_attr("socket_dead_dsts",
                           lambda: sorted(self._dead_dsts))
+        self._export_attr("socket_flush_batches", lambda: self._tx_flushes)
+        self._export_attr("socket_flush_frames",
+                          lambda: self._tx_flush_frames)
 
     def _sock_path(self, rank: int) -> str:
         return os.path.join(self._dir, f"rank{rank}.sock")
@@ -139,9 +144,19 @@ class SocketTransport(Transport):
             except OSError:
                 pass
 
+    #: frames coalesced per kernel send — bounds the join copy while a
+    #: deep queue still drains in a handful of syscalls
+    _FLUSH_COALESCE = 64
+
     def _flush(self, dst: int) -> None:
         """Push buffered frames into the kernel; stops when it would
-        block (the kernel buffer is the real back-pressure)."""
+        block (the kernel buffer is the real back-pressure).
+
+        Frames queued for ``dst`` coalesce into one contiguous send — a
+        writev-style flush: a burst of K messages costs one syscall, not
+        K.  Depth accounting walks the accepted byte count afterwards:
+        fully-sent frames pop and decrement their stream's row weight, a
+        partially-sent head frame is re-sliced in place."""
         q = self._txq.get(dst)
         if not q:
             return
@@ -151,19 +166,29 @@ class SocketTransport(Transport):
             self._mark_dst_dead(dst)     # connect refused past the grace
             return
         while q:
-            frame, key, weight = q[0]
+            chunk = [q[i][0] for i in range(min(len(q),
+                                               self._FLUSH_COALESCE))]
+            blob = chunk[0] if len(chunk) == 1 else b"".join(chunk)
             try:
-                sent = sock.send(frame)
+                sent = sock.send(blob)
             except OSError as e:
                 if e.errno in (errno.EAGAIN, errno.EWOULDBLOCK):
                     return
                 self._mark_dst_dead(dst)
                 return
-            if sent < len(frame):
-                q[0] = (frame[sent:], key, weight)
-                return
-            q.popleft()
-            self._tx_weight[key] = self._tx_weight.get(key, 0) - weight
+            self._tx_flushes += 1
+            for frame in chunk:
+                if sent >= len(frame):
+                    sent -= len(frame)
+                    _f, key, weight = q.popleft()
+                    self._tx_weight[key] = \
+                        self._tx_weight.get(key, 0) - weight
+                    self._tx_flush_frames += 1
+                else:
+                    if sent:                   # partial head: re-slice
+                        head, key, weight = q[0]
+                        q[0] = (head[sent:], key, weight)
+                    return
 
     def _enqueue(self, msg: WireMsg, weight: int) -> bool:
         if msg.dst in self._dead_dsts:

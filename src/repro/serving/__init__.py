@@ -2,7 +2,16 @@ from .engine import (DecodeCache, init_cache, make_serve_step,
                      make_prefill_step, cache_pspecs)
 from .kv_cache import PagedKVAllocator
 from .scheduler import Request, ResultDrain, ServeScheduler, ServeTransport
+from .result_tokens import (ResultTokens, SlotData, decode_token_row,
+                            encode_token_row)
+from .slots import SERVING_ATTRS, SlotAllocator
+from .batching import (ContinuousBatcher, ServePlane, SyntheticModel,
+                       TokenClient)
 
 __all__ = ["DecodeCache", "init_cache", "make_serve_step",
            "make_prefill_step", "cache_pspecs", "PagedKVAllocator",
-           "Request", "ResultDrain", "ServeScheduler", "ServeTransport"]
+           "Request", "ResultDrain", "ServeScheduler", "ServeTransport",
+           "ResultTokens", "SlotData", "encode_token_row",
+           "decode_token_row", "SERVING_ATTRS", "SlotAllocator",
+           "ContinuousBatcher", "ServePlane", "SyntheticModel",
+           "TokenClient"]

@@ -1,0 +1,120 @@
+"""ResultTokens — one decode step's output as a single packed array.
+
+JetStream's observation (SNIPPETS.md §1) is that per-slot result objects
+are the wrong shape for a serving engine: the hot loop wants *one* array
+holding tokens, validity, and lengths side by side, "because copying a
+single array to host is much faster than copying two separate ones" —
+and, here, because one contiguous array is what the burst data plane
+stages into a fused doorbell with a single stacked copy.
+
+Layout: ``data`` is ``(n_slots, 5)`` int32 with column ranges addressed
+by index tuples, so consumers never hard-code offsets::
+
+    tokens_idx  = (0, 1)   token generated for the slot this step
+    valid_idx   = (1, 2)   1 when the slot was active this step
+    length_idx  = (2, 3)   tokens generated so far (seq + 1)
+    rid / done  = cols 3,4 request id, end-of-stream flag
+
+The wire side slices the packed array into uniform 16-byte rows
+(``[rid, seq, token, done]`` little-endian int32) — a burst of them is
+exactly the uniform eager run the fused-doorbell path packs into one
+``PackedBurst``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+#: columns of the packed array
+TOKEN_COL, VALID_COL, LENGTH_COL, RID_COL, DONE_COL = range(5)
+N_COLS = 5
+
+#: one wire row: [rid, seq, token, done] as int32 -> 16 bytes, uniform
+ROW_WORDS = 4
+ROW_BYTES = ROW_WORDS * 4
+
+
+@dataclasses.dataclass
+class SlotData:
+    """Per-slot view into a :class:`ResultTokens` (JetStream's shape)."""
+    tokens: np.ndarray
+    valid: np.ndarray
+    lengths: np.ndarray
+
+
+class ResultTokens:
+    """The packed per-step result array with named column ranges."""
+
+    def __init__(self, data: np.ndarray,
+                 tokens_idx: Tuple[int, int] = (TOKEN_COL, TOKEN_COL + 1),
+                 valid_idx: Tuple[int, int] = (VALID_COL, VALID_COL + 1),
+                 length_idx: Tuple[int, int] = (LENGTH_COL, LENGTH_COL + 1)):
+        data = np.ascontiguousarray(data, np.int32)
+        if data.ndim != 2 or data.shape[1] != N_COLS:
+            raise ValueError(f"ResultTokens expects (n_slots, {N_COLS}) "
+                             f"int32, got {data.shape}")
+        self.data = data
+        self.tokens_idx = tokens_idx
+        self.valid_idx = valid_idx
+        self.length_idx = length_idx
+
+    @classmethod
+    def pack(cls, slots: List[int], rids: List[int], tokens: List[int],
+             lengths: List[int], dones: List[int], n_slots: int
+             ) -> "ResultTokens":
+        """Build the packed array from the decode step's per-slot results
+        (inactive slots stay zero / invalid)."""
+        data = np.zeros((n_slots, N_COLS), np.int32)
+        for slot, rid, tok, length, is_done in zip(slots, rids, tokens,
+                                                   lengths, dones):
+            data[slot, TOKEN_COL] = tok
+            data[slot, VALID_COL] = 1
+            data[slot, LENGTH_COL] = length
+            data[slot, RID_COL] = rid
+            data[slot, DONE_COL] = is_done
+        return cls(data)
+
+    @property
+    def n_slots(self) -> int:
+        return self.data.shape[0]
+
+    def get_result_at_slot(self, slot: int) -> SlotData:
+        row = self.data[slot]
+        return SlotData(tokens=row[self.tokens_idx[0]:self.tokens_idx[1]],
+                        valid=row[self.valid_idx[0]:self.valid_idx[1]],
+                        lengths=row[self.length_idx[0]:self.length_idx[1]])
+
+    def active_slots(self) -> np.ndarray:
+        return np.flatnonzero(self.data[:, VALID_COL])
+
+    def wire_rows(self) -> List[Tuple[int, np.ndarray]]:
+        """Slice the packed array into per-client uniform wire rows:
+        ``[(rid, 16-byte row)]`` for every valid slot, ready for one
+        ``post_am_many`` burst (uniform size -> fused doorbell)."""
+        out = []
+        for slot in self.active_slots():
+            row = self.data[slot]
+            out.append((int(row[RID_COL]),
+                        encode_token_row(int(row[RID_COL]),
+                                         int(row[LENGTH_COL]) - 1,
+                                         int(row[TOKEN_COL]),
+                                         int(row[DONE_COL]))))
+        return out
+
+
+def encode_token_row(rid: int, seq: int, token: int, done: int
+                     ) -> np.ndarray:
+    """One token message payload: uniform 16 bytes so a burst of them
+    rides the fused-doorbell path."""
+    return np.array([rid, seq, token, done], np.int32).view(np.uint8)
+
+
+def decode_token_row(buf) -> Tuple[int, int, int, int]:
+    """Inverse of :func:`encode_token_row`: ``(rid, seq, token, done)``."""
+    words = np.frombuffer(bytes(buf), np.int32)
+    if words.size != ROW_WORDS:
+        raise ValueError(f"token row must be {ROW_BYTES} bytes, got "
+                         f"{words.size * 4}")
+    return int(words[0]), int(words[1]), int(words[2]), int(words[3])

@@ -107,6 +107,19 @@ class ServeTransport:
             self.client_rank, payload, remote_comp=self._result_rc, tag=rid,
             allow_retry=False)
 
+    def send_results(self, batch: List[Tuple[int, np.ndarray]]
+                     ) -> List[Status]:
+        """Burst-post a step's finished results in one ``post_am_many``
+        doorbell: one staged copy + one push per device instead of a
+        host-synchronous scalar post per request.  Per-status ternary
+        results come back positionally — ``retry`` entries are the
+        caller's to park (see ``ServeScheduler._flush_results``)."""
+        bufs = [np.ascontiguousarray(tokens, np.int32).view(np.uint8)
+                for _, tokens in batch]
+        return self.decode[self.server_rank].post_am_many(
+            self.client_rank, bufs, self._result_rc,
+            tags=[rid for rid, _ in batch])
+
     def pump(self, rounds: int = 4) -> int:
         """Drive progress on both sides' endpoint devices."""
         n = 0
@@ -166,6 +179,10 @@ class ServeScheduler:
         # completions rejected with retry (bounded client CQ full) —
         # redelivered each step, mirroring the progress-engine backlog
         self._pending_signals: collections.deque = collections.deque()
+        # remote results finished this step, flushed as ONE post_am_many
+        # burst; retry-rejected sends park here per client, in order
+        self._outbox: List[Tuple[int, np.ndarray]] = []
+        self._pending_sends: collections.deque = collections.deque()
         self.completed = 0
         self.retries = 0
 
@@ -267,6 +284,7 @@ class ServeScheduler:
                 break
 
         if not self.active:
+            self._flush_results()      # parked sends still redeliver
             return 0
         reqs = list(self.active.values())
         tokens = np.array([r.prompt[-1] if not r.generated
@@ -281,15 +299,39 @@ class ServeScheduler:
             if len(r.generated) >= r.max_new or int(t) == self.eos_id:
                 self._complete(r)
                 finished += 1
+        self._flush_results()
         return finished
+
+    def _flush_results(self) -> int:
+        """Send parked + newly finished remote results as one burst.
+
+        Parked results go first (a client's stream stays in order); the
+        burst rides the single decode stream with prefix-accept, so a
+        ``retry`` for one client re-parks that client's later results
+        behind it while other clients' results still land."""
+        if self.transport is None or not (self._outbox
+                                          or self._pending_sends):
+            return 0
+        batch = list(self._pending_sends) + self._outbox
+        self._pending_sends.clear()
+        self._outbox = []
+        sts = self.transport.send_results(batch)
+        blocked, accepted = set(), 0
+        for (rid, tokens), st in zip(batch, sts):
+            if st.is_retry() or rid in blocked:
+                self._pending_sends.append((rid, tokens))
+                blocked.add(rid)
+            else:
+                accepted += 1
+        self.transport.pump()
+        return accepted
 
     def _complete(self, req: Request) -> None:
         del self.active[req.rid]
         self.alloc.release(req.rid)
         if req.remote:
-            self.transport.send_result(
-                req.rid, np.array(req.generated, np.int32))
-            self.transport.pump()
+            self._outbox.append((req.rid,
+                                 np.array(req.generated, np.int32)))
             self.completed += 1
             return
         st = done(np.array(req.generated, np.int32), tag=req.rid)
@@ -326,16 +368,26 @@ class ResultDrain:
     and returns every collected status.  The LCQ backend guarantees no
     result is lost or double-delivered across the workers — asserted by
     the threaded stress tests.
+
+    With ``stamp=True`` every entry is ``(status, perf_counter())`` —
+    receive timestamps for TTFT / inter-token latency — and
+    :meth:`worker_results` exposes the per-worker streams so callers can
+    assert per-worker FIFO (one worker's pops of a client's stream must
+    see strictly increasing sequence numbers).
     """
 
-    def __init__(self, cq: CompletionObject, n_workers: int = 2):
+    def __init__(self, cq: CompletionObject, n_workers: int = 2, *,
+                 stamp: bool = False, tele=None):
         if n_workers < 1:
             raise FatalError("result drain needs n_workers >= 1")
         self.cq = cq
         self.n_workers = n_workers
+        self.stamp = stamp
+        self._tele = tele
         self._threads: List[threading.Thread] = []
         self._stopping = False
-        self._collected: List[List[Status]] = [[] for _ in range(n_workers)]
+        # one list per worker + one for stop()'s final sweep
+        self._collected: List[list] = [[] for _ in range(n_workers + 1)]
 
     def start(self) -> "ResultDrain":
         self._stopping = False
@@ -350,6 +402,7 @@ class ResultDrain:
 
     def _run(self, wid: int) -> None:
         out = self._collected[wid]
+        span = self._tele.span if self._tele is not None else None
         delay = 1e-5
         while not self._stopping:
             st = self.cq.pop()
@@ -357,12 +410,23 @@ class ResultDrain:
                 time.sleep(delay)
                 delay = min(delay * 2, 1e-3)
             else:
-                out.append(st)
+                if span is not None:
+                    with span("serve.drain"):
+                        out.append((st, time.perf_counter())
+                                   if self.stamp else st)
+                else:
+                    out.append((st, time.perf_counter())
+                               if self.stamp else st)
                 delay = 1e-5
 
     @property
     def drained(self) -> int:
         return sum(len(c) for c in self._collected)
+
+    def worker_results(self) -> List[list]:
+        """Per-worker collected entries (the last list is ``stop()``'s
+        final sweep, popped single-threaded after the join)."""
+        return [list(c) for c in self._collected]
 
     def stop(self, timeout: float = 10.0) -> List[Status]:
         """Join workers (deadlock fails fast) and return all results."""
@@ -373,6 +437,9 @@ class ResultDrain:
             if t.is_alive():
                 raise FatalError(f"result-drain worker stuck: {t.name}")
         self._threads = []
-        results = [st for chunk in self._collected for st in chunk]
-        results.extend(drain_cq(self.cq))  # final sweep: nothing stranded
-        return results
+        final = drain_cq(self.cq)          # final sweep: nothing stranded
+        now = time.perf_counter()
+        self._collected[-1].extend((st, now) if self.stamp else st
+                                   for st in final)
+        return [entry[0] if self.stamp else entry
+                for chunk in self._collected for entry in chunk]

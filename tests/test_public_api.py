@@ -71,3 +71,16 @@ def test_core_all_is_sorted_within_groups():
     """Cheap hygiene: no duplicates anywhere in repro.core.__all__."""
     import repro.core as core
     assert len(core.__all__) == len(set(core.__all__))
+
+
+def test_serving_exports_the_batching_surface():
+    """The serving subsystem's continuous-batching surface is public API:
+    removing a name from ``repro.serving.__all__`` is drift, not cleanup
+    (DESIGN.md §17)."""
+    serving = importlib.import_module("repro.serving")
+    for name in ("ContinuousBatcher", "ServePlane", "TokenClient",
+                 "SyntheticModel", "ResultTokens", "SlotData",
+                 "SlotAllocator", "SERVING_ATTRS", "ResultDrain",
+                 "encode_token_row", "decode_token_row"):
+        assert name in serving.__all__, name
+        assert hasattr(serving, name), name
